@@ -1,0 +1,71 @@
+"""Paper Table 3: correlation with the true similarity q.k and estimator
+variance, SOCKET vs hard LSH across (P, L) settings at matched budgets.
+
+Variance is measured as Var over hash draws of the *normalized* score of a
+fixed key (the paper's estimator-variance column): SOCKET's graded
+evidence concentrates orders of magnitude faster than binary collisions.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import heavy_hitter_workload
+from repro.core import hashing, socket
+
+
+def _socket_corr_var(rng, keys, q, p, l, tau, trials=16):
+    cfg = socket.SocketConfig(num_planes=p, num_tables=l, tau=tau)
+    true = np.asarray(keys @ q)
+    corrs, probe = [], []
+    for t in range(trials):
+        w = hashing.make_hash_params(jax.random.fold_in(rng, t),
+                                     keys.shape[-1], p, l)
+        packed = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
+        s = np.asarray(socket.soft_scores_factorized(
+            cfg, packed, socket.soft_hash_query(w, q)))
+        corrs.append(np.corrcoef(true, s)[0, 1])
+        probe.append(s[0] / max(s.sum(), 1e-12))    # normalized score
+    return float(np.mean(corrs)), float(np.var(probe))
+
+
+def _hard_corr_var(rng, keys, q, p, l, trials=16):
+    true = np.asarray(keys @ q)
+    corrs, probe = [], []
+    for t in range(trials):
+        w = hashing.make_hash_params(jax.random.fold_in(rng, 100 + t),
+                                     keys.shape[-1], p, l)
+        signs = hashing.hash_keys_signs(w, keys)
+        q_signs = hashing.hash_keys_signs(w, q[None])[0]
+        counts = np.asarray(jnp.sum(
+            jnp.all(signs == q_signs[None], axis=-1), axis=-1),
+            dtype=np.float64)
+        corrs.append(np.corrcoef(true, counts)[0, 1])
+        probe.append(counts[0] / max(counts.sum(), 1e-12))
+    return float(np.nanmean(corrs)), float(np.var(probe))
+
+
+def run(n: int = 2048, d: int = 128):
+    rng = jax.random.PRNGKey(7)
+    queries, keys, _, _ = heavy_hitter_workload(rng, n, d, 1,
+                                                concentration=1.0)
+    q = queries[0]
+    rows = []
+    for (p, l) in ((10, 20), (10, 40), (10, 60)):
+        c, v = _socket_corr_var(rng, keys, q, p, l, tau=0.5)
+        rows.append((f"tab3_socket_p{p}_l{l}", {"corr": c, "var": v}))
+    for (p, l) in ((2, 250), (2, 300), (2, 350)):
+        c, v = _hard_corr_var(rng, keys, q, p, l)
+        rows.append((f"tab3_hardlsh_p{p}_l{l}", {"corr": c, "var": v}))
+    return rows
+
+
+def main():
+    for name, m in run():
+        print(f"{name},corr={m['corr']:.3f},var={m['var']:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Kernel micro-benchmarks: the Pallas socket_score / flash_decode /
+flash_prefill wall-times (interpret mode on CPU — structural check that the
+wrappers dispatch; the §Roofline analytic model carries the TPU numbers)
+plus the XLA scoring path they replace."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import hashing, socket
+
+
+def run():
+    rng = jax.random.PRNGKey(0)
+    rows = []
+    d, n, bh, g = 128, 8192, 4, 4
+    kk, kq, kw, kv = jax.random.split(rng, 4)
+    w = hashing.make_hash_params(kw, d, 10, 60)
+    keys = jax.random.normal(kk, (bh, n, d))
+    q = jax.random.normal(kq, (bh, g, d))
+    bits = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
+    u = socket.soft_hash_query(w, q)
+    vnorm = jax.random.uniform(kv, (bh, n)) + 0.5
+
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.4)
+    xla_fn = jax.jit(lambda b, uu: jax.vmap(
+        lambda bb, uu2: socket.soft_scores_factorized(cfg, bb, uu2))(
+            b, uu))
+    t_xla = time_fn(xla_fn, bits, u[:, 0], iters=10)
+    rows.append(("kernel_score_xla_path", {"us": t_xla}))
+
+    # the Pallas kernel in interpret mode is orders slower on CPU (python
+    # grid loop) — time one small shape only as a smoke measurement
+    from repro.kernels.socket_score import socket_score
+    small_bits = bits[:1, :1024]
+    small_u = u[:1]
+    t_pallas = time_fn(
+        lambda b, uu: socket_score(b, uu, None, num_tables=60,
+                                   num_planes=10, tau=0.4),
+        small_bits, small_u, iters=3, warmup=1)
+    rows.append(("kernel_score_pallas_interpret_1k", {"us": t_pallas}))
+
+    from repro.kernels.flash_decode import flash_decode
+    kk2 = jax.random.normal(rng, (bh, 1024, d))
+    vv2 = jax.random.normal(rng, (bh, 1024, d))
+    mask = jnp.ones((bh, 1024), bool)
+    t_fd = time_fn(
+        lambda a, b, c, m: flash_decode(a, b, c, m, scale=0.1,
+                                        block_k=512),
+        q, kk2, vv2, mask, iters=3, warmup=1)
+    rows.append(("kernel_flash_decode_interpret_1k", {"us": t_fd}))
+    return rows
+
+
+def main():
+    for name, m in run():
+        print(f"{name},us={m['us']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Paper Table 2: retrieval memory + scoring-time overhead — SOCKET
+(P=10, L=60) vs hard LSH at increasing L.  Memory is the exact cache
+footprint (bits/token); time is the measured jitted scoring wall-time on
+this host plus the analytic TPU v5e HBM-traffic model (the quantity the
+CUDA kernel optimizes)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.core import hashing, socket
+from repro.baselines import hard_lsh
+from repro.roofline.analysis import HW
+
+
+def run(n: int = 32768, d: int = 128):
+    rng = jax.random.PRNGKey(0)
+    kk, kq = jax.random.split(rng)
+    keys = jax.random.normal(kk, (n, d))
+    q = jax.random.normal(kq, (d,))
+    rows = []
+
+    def tpu_score_time(bits_per_token):
+        bytes_moved = n * (bits_per_token / 8 + 2)      # bits + bf16 vnorm
+        return bytes_moved / HW["hbm_bw"] * 1e6         # µs
+
+    # SOCKET (10, 60)
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.4)
+    w = hashing.make_hash_params(rng, d, 10, 60)
+    packed = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
+    u = socket.soft_hash_query(w, q)
+    f = jax.jit(lambda b, uu: socket.soft_scores_factorized(cfg, b, uu))
+    us = time_fn(f, packed, u)
+    stored_bits = packed.shape[-1] * 32
+    rows.append(("tab2_socket_p10_l60", {
+        "bits_per_token": stored_bits,
+        "mem_gb_32k_8bh": stored_bits / 8 * n * 8 / 2**30,
+        "cpu_us": us,
+        "tpu_model_us": tpu_score_time(stored_bits)}))
+
+    # hard LSH at growing budgets
+    for l in (60, 300, 400, 500):
+        p = 10 if l == 60 else 2
+        hcfg = hard_lsh.HardLSHConfig(num_planes=p, num_tables=l)
+        st = hard_lsh.build(hcfg, jax.random.fold_in(rng, l), keys, keys)
+        fh = jax.jit(lambda qq: hard_lsh.score(st, hcfg, qq))
+        us_h = time_fn(fh, q)
+        stored = st.packed.shape[-1] * 32
+        rows.append((f"tab2_hardlsh_p{p}_l{l}", {
+            "bits_per_token": stored,
+            "mem_gb_32k_8bh": stored / 8 * n * 8 / 2**30,
+            "cpu_us": us_h,
+            "tpu_model_us": tpu_score_time(stored)}))
+
+    # dense reference: reading full bf16 keys
+    rows.append(("tab2_dense_keys_read", {
+        "bits_per_token": d * 16,
+        "mem_gb_32k_8bh": d * 2 * n * 8 / 2**30,
+        "cpu_us": float("nan"),
+        "tpu_model_us": tpu_score_time(d * 16)}))
+    return rows
+
+
+def main():
+    for name, m in run():
+        print(f"{name},bits/tok={m['bits_per_token']},"
+              f"cpu_us={m['cpu_us']:.0f},tpu_model_us={m['tpu_model_us']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

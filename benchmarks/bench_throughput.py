@@ -1,0 +1,80 @@
+"""Paper fig. 3 (b-c): decode throughput vs context length, SOCKET vs
+dense attention.
+
+Two measurements per context length:
+* measured: jitted single-layer decode-attention wall-time on this host
+  (CPU — direction is meaningful, magnitude is not);
+* modelled: TPU v5e HBM-traffic time for the same step (the regime the
+  paper's H200/A100 numbers probe — decode is bandwidth-bound), from
+  which the projected SOCKET speedup over dense is derived.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.baselines import oracle
+from repro.core import hashing, socket
+from repro.roofline.analysis import HW
+
+
+def _tpu_decode_us(n, d, kvh, mode, cfg):
+    """Bytes moved per decode step per KV head group (bf16 K/V)."""
+    if mode == "dense":
+        byt = n * d * 2 * 2 * kvh                      # read all K and V
+    else:
+        w = hashing.num_words(cfg.num_tables, cfg.num_planes)
+        k = socket.topk_budget(cfg, n)
+        byt = kvh * (n * (w * 4 + 2)                   # bits + vnorm
+                     + k * d * 2 * 2)                  # gathered K/V
+    return byt / HW["hbm_bw"] * 1e6
+
+
+def run(d: int = 128, kvh: int = 8, g: int = 4):
+    rng = jax.random.PRNGKey(0)
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.4,
+                              sparsity=33.0, sink_tokens=128,
+                              window_tokens=128, min_k=128,
+                              score_chunk=16384)
+    rows = []
+    for n in (8192, 32768, 65536, 131072):
+        kk, kv, kq, kw = jax.random.split(jax.random.fold_in(rng, n), 4)
+        keys = jax.random.normal(kk, (1, kvh, n, d), jnp.bfloat16)
+        vals = jax.random.normal(kv, (1, kvh, n, d), jnp.bfloat16)
+        q = jax.random.normal(kq, (1, kvh, g, 1, d), jnp.bfloat16)
+        w = hashing.make_hash_params(kw, d, 10, 60)
+        side = socket.precompute_key_hashes(cfg, w, keys, vals)
+
+        dense_fn = jax.jit(lambda qq, kk2, vv: oracle.dense_attention(
+            qq, kk2, vv, scale=1 / np.sqrt(d), length=n))
+        t_dense = time_fn(dense_fn, q, keys, vals, iters=8)
+
+        sock_fn = jax.jit(lambda qq, kk2, vv, b, vn: socket.socket_attend(
+            cfg, w, qq, kk2, vv, socket.SocketCache(b, vn), length=n,
+            scale=1 / np.sqrt(d)))
+        t_sock = time_fn(sock_fn, q, keys, vals, side.bits, side.vnorm,
+                         iters=8)
+
+        m_dense = _tpu_decode_us(n, d, kvh, "dense", cfg)
+        m_sock = _tpu_decode_us(n, d, kvh, "socket", cfg)
+        rows.append((f"fig3_ctx{n}", {
+            "cpu_dense_us": t_dense, "cpu_socket_us": t_sock,
+            "cpu_speedup": t_dense / t_sock,
+            "tpu_model_dense_us": m_dense, "tpu_model_socket_us": m_sock,
+            "tpu_model_speedup": m_dense / m_sock}))
+    return rows
+
+
+def main():
+    for name, m in run():
+        print(f"{name},cpu_speedup={m['cpu_speedup']:.2f},"
+              f"tpu_model_speedup={m['tpu_model_speedup']:.2f},"
+              f"cpu_dense_us={m['cpu_dense_us']:.0f},"
+              f"cpu_socket_us={m['cpu_socket_us']:.0f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Paper fig. 3a: time-to-first-token index-build comparison — SOCKET's
+data-agnostic random projections vs PQCache's k-means clustering.  The gap
+is structural: SOCKET's build is one GEMM + sign + pack; PQ iterates
+Lloyd steps over all keys."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn
+from repro.baselines import pqcache
+from repro.core import hashing, socket
+
+
+def run(d: int = 128):
+    rng = jax.random.PRNGKey(0)
+    rows = []
+    for n in (8192, 32768, 131072):
+        keys = jax.random.normal(jax.random.fold_in(rng, n), (n, d))
+
+        w = hashing.make_hash_params(rng, d, 10, 60)
+
+        def socket_build(k):
+            return hashing.pack_signs(hashing.hash_keys_signs(w, k))
+
+        t_socket = time_fn(jax.jit(socket_build), keys, iters=5, warmup=2)
+
+        pcfg = pqcache.PQConfig(num_subspaces=16, nbits=6, kmeans_iters=8)
+        def pq_build(k):
+            st = pqcache.build(pcfg, rng, k, k)
+            return st.codes
+        t_pq = time_fn(pq_build, keys, iters=3, warmup=1)
+
+        rows.append((f"fig3a_n{n}", {
+            "socket_build_us": t_socket, "pqcache_build_us": t_pq,
+            "ttft_ratio": t_pq / t_socket}))
+    return rows
+
+
+def main():
+    for name, m in run():
+        print(f"{name},socket_us={m['socket_build_us']:.0f},"
+              f"pq_us={m['pqcache_build_us']:.0f},"
+              f"ratio={m['ttft_ratio']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,89 @@
+"""Shared benchmark utilities: timing, workload generation, metrics."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, socket
+
+
+def time_fn(fn: Callable, *args, iters: int = 20, warmup: int = 3) -> float:
+    """Median wall-time (µs) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.tree_util.tree_map(
+        lambda x: x.block_until_ready() if hasattr(x, "block_until_ready")
+        else x, out)
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.tree_util.tree_map(
+            lambda x: x.block_until_ready()
+            if hasattr(x, "block_until_ready") else x, out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times) * 1e6)
+
+
+def heavy_hitter_workload(rng, n: int, d: int, n_queries: int = 32,
+                          concentration: float = 2.0):
+    """Q/K/V with realistic concentrated attention: each query is a noisy
+    scaled copy of some key (the long-context retrieval regime the paper
+    targets).  Returns (queries (Q,d), keys (N,d), values (N,d), targets)."""
+    kk, kv, kq, kt = jax.random.split(rng, 4)
+    keys = jax.random.normal(kk, (n, d))
+    values = jax.random.normal(kv, (n, d))
+    targets = jax.random.randint(kt, (n_queries,), 0, n)
+    noise = jax.random.normal(kq, (n_queries, d))
+    queries = concentration * keys[targets] + 0.5 * noise
+    return queries, keys, values, targets
+
+
+def ranking_metrics(pred_scores: np.ndarray, true_scores: np.ndarray,
+                    k: int) -> Dict[str, float]:
+    """Precision@k, Jaccard@k, NDCG@k (paper Appendix A.5)."""
+    pred_top = set(np.argsort(-pred_scores)[:k].tolist())
+    true_top = set(np.argsort(-true_scores)[:k].tolist())
+    precision = len(pred_top & true_top) / k
+    jaccard = len(pred_top & true_top) / len(pred_top | true_top)
+
+    # NDCG with graded relevance = rank position in the true top-k
+    order = np.argsort(-true_scores)
+    rel = np.zeros(len(true_scores))
+    for rank, idx in enumerate(order[:k]):
+        rel[idx] = k - rank                      # higher = more relevant
+    pred_order = np.argsort(-pred_scores)[:k]
+    dcg = sum((2.0 ** rel[i] - 1) / np.log2(r + 2)
+              for r, i in enumerate(pred_order))
+    idcg = sum((2.0 ** rel[i] - 1) / np.log2(r + 2)
+               for r, i in enumerate(order[:k]))
+    return {"precision": precision, "jaccard": jaccard,
+            "ndcg": dcg / max(idcg, 1e-9)}
+
+
+def socket_scores_for(rng, cfg: socket.SocketConfig, keys, queries):
+    """(Q, N) SOCKET scores for a batch of queries."""
+    d = keys.shape[-1]
+    w = hashing.make_hash_params(rng, d, cfg.num_planes, cfg.num_tables)
+    packed = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
+    u = socket.soft_hash_query(w, queries)             # (Q, L, P)
+    scores = jax.vmap(
+        lambda uq: socket.soft_scores_factorized(cfg, packed, uq))(u)
+    return scores, w, packed
+
+
+def attention_output_error(q, keys, values, sel_idx, scale) -> float:
+    """Relative L2 error of sparse attention vs dense for one query."""
+    logits = keys @ q * scale
+    w_full = jax.nn.softmax(logits)
+    y_full = w_full @ values
+    sub = logits[sel_idx]
+    w_sub = jax.nn.softmax(sub)
+    y_sub = w_sub @ values[sel_idx]
+    return float(jnp.linalg.norm(y_sub - y_full) /
+                 jnp.maximum(jnp.linalg.norm(y_full), 1e-9))

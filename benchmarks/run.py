@@ -1,0 +1,69 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (us_per_call where a timing
+is the headline, NaN otherwise; `derived` carries the table's metric).
+
+    PYTHONPATH=src python -m benchmarks.run            # all
+    PYTHONPATH=src python -m benchmarks.run --only fig3,tab2
+"""
+
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+import time
+
+SUITES = [
+    ("fig2_ranking", "benchmarks.bench_ranking"),
+    ("tab3_correlation", "benchmarks.bench_correlation"),
+    ("tab2_overhead", "benchmarks.bench_overhead"),
+    ("tab1_accuracy", "benchmarks.bench_accuracy"),
+    ("fig3_throughput", "benchmarks.bench_throughput"),
+    ("tab6_ablations", "benchmarks.bench_ablations"),
+    ("fig3a_ttft", "benchmarks.bench_ttft"),
+    ("kernels", "benchmarks.bench_kernels"),
+]
+
+
+def _fmt(name: str, metrics: dict) -> str:
+    us = metrics.get("us", metrics.get("cpu_us",
+                                       metrics.get("cpu_socket_us",
+                                                   float("nan"))))
+    derived = ";".join(f"{k}={v:.4g}" if isinstance(v, float) else
+                       f"{k}={v}" for k, v in metrics.items())
+    us_s = "nan" if (isinstance(us, float) and math.isnan(us)) else \
+        f"{us:.1f}"
+    return f"{name},{us_s},{derived}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite-name substrings")
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for suite, module_name in SUITES:
+        if wanted and not any(w in suite for w in wanted):
+            continue
+        t0 = time.time()
+        try:
+            module = __import__(module_name, fromlist=["run"])
+            rows = module.run()
+            for name, metrics in rows:
+                print(_fmt(name, metrics), flush=True)
+            print(f"# {suite}: {len(rows)} rows in "
+                  f"{time.time()-t0:.1f}s", flush=True)
+        except Exception as e:  # noqa: BLE001 — keep the harness running
+            failures.append(suite)
+            print(f"# {suite}: FAILED {type(e).__name__}: {e}", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

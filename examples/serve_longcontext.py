@@ -1,0 +1,71 @@
+"""Long-context serving with SOCKET sparse decode.
+
+Prefills a batch of long prompts (building the SOCKET bit-cache alongside
+the KV cache), then decodes with sparse attention, reporting per-phase
+timing and the SOCKET-vs-dense greedy-token agreement.
+
+    PYTHONPATH=src python examples/serve_longcontext.py \
+        --arch stablelm-12b --prompt-len 1024 --decode-steps 32
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch.serve import run_serve
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-12b")
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--prompt-len", type=int, default=1024)
+    ap.add_argument("--decode-steps", type=int, default=32)
+    ap.add_argument("--sparsity", type=float, default=8.0)
+    args = ap.parse_args()
+
+    base = get_config(args.arch).smoke().replace(num_groups=2)
+    sock = dataclasses.replace(base.socket, sparsity=args.sparsity,
+                               min_k=64, sink_tokens=32, window_tokens=32)
+
+    results = {}
+    for backend in ("dense", "socket"):
+        cfg = base.replace(attention_backend=backend, socket=sock)
+        toks, prefill_s, decode_s = run_serve(
+            cfg, args.batch, args.prompt_len, args.decode_steps, seed=5)
+        results[backend] = {
+            "tokens": np.asarray(toks),
+            "prefill_s": prefill_s,
+            "decode_s": decode_s,
+            "decode_tok_per_s": args.batch * args.decode_steps / decode_s,
+        }
+
+    agree = float(np.mean(results["dense"]["tokens"] ==
+                          results["socket"]["tokens"]))
+    budget = max(64, int(np.ceil((args.prompt_len + args.decode_steps)
+                                 / args.sparsity)))
+    print(json.dumps({
+        "arch": args.arch,
+        "context": args.prompt_len,
+        "sparsity": f"{args.sparsity}x "
+                    f"(~{budget} of {args.prompt_len} tokens attended)",
+        "dense": {k: round(v, 3) for k, v in results["dense"].items()
+                  if k != "tokens"},
+        "socket": {k: round(v, 3) for k, v in results["socket"].items()
+                   if k != "tokens"},
+        "greedy_agreement": agree,
+        "note": "greedy agreement on an UNTRAINED model is a noise-level "
+                "metric (near-flat logits flip argmax on tiny diffs); the "
+                "attention-output fidelity benchmarks "
+                "(benchmarks/bench_accuracy.py) measure the real quantity",
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""End-to-end training driver: a ~100M-parameter decoder trained for a few
+hundred steps on the synthetic copy-task stream, with checkpointing and
+mid-run restore.
+
+CPU-friendly default (~21M params, 120 steps):
+
+    PYTHONPATH=src python examples/train_small_lm.py
+
+The full ~100M/300-step configuration (what you'd run on accelerators):
+
+    PYTHONPATH=src python examples/train_small_lm.py --full
+"""
+
+import argparse
+import json
+import tempfile
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime.train_loop import Trainer, TrainLoopConfig
+
+
+def model_config(full: bool) -> ModelConfig:
+    if full:
+        return ModelConfig(
+            name="lm-100m", family="dense", d_model=640, num_heads=10,
+            num_kv_heads=10, head_dim=64, d_ff=2560, vocab_size=32768,
+            pattern=(LayerSpec(),), num_groups=10,
+            attention_backend="dense")
+    return ModelConfig(
+        name="lm-21m", family="dense", d_model=384, num_heads=6,
+        num_kv_heads=6, head_dim=64, d_ff=1536, vocab_size=8192,
+        pattern=(LayerSpec(),), num_groups=6, attention_backend="dense")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    ap.add_argument("--ckpt", default=None)
+    args = ap.parse_args()
+
+    cfg = model_config(args.full)
+    steps = args.steps or (300 if args.full else 120)
+    seq = 512 if args.full else 128
+    batch = 16 if args.full else 4
+    ckpt_dir = args.ckpt or tempfile.mkdtemp(prefix="repro_lm_")
+
+    print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params), "
+          f"{steps} steps x {batch}x{seq} tokens -> {ckpt_dir}")
+
+    ocfg = AdamWConfig(schedule=ScheduleConfig(
+        peak_lr=6e-4, warmup_steps=max(10, steps // 20),
+        decay_steps=steps))
+    loop = TrainLoopConfig(total_steps=steps,
+                           checkpoint_every=max(25, steps // 6))
+    data = DataConfig(seq_len=seq, global_batch=batch,
+                      vocab_size=cfg.vocab_size, seed=0, copy_prob=0.7)
+
+    trainer = Trainer(cfg, ocfg, loop, data, ckpt_dir)
+    log = trainer.run()
+
+    window = max(5, steps // 20)
+    print(json.dumps({
+        "loss_first": sum(m["loss"] for m in log[:window]) / window,
+        "loss_last": sum(m["loss"] for m in log[-window:]) / window,
+        "mean_step_s": round(trainer.straggler.mean_latency, 3),
+        "checkpoints": trainer.ckpt.all_steps(),
+    }, indent=2))
+
+    # demonstrate exact restore: a new Trainer resumes from the checkpoint
+    resumed = Trainer(cfg, ocfg,
+                      TrainLoopConfig(total_steps=steps + 5,
+                                      checkpoint_every=1000),
+                      data, ckpt_dir)
+    assert resumed.step == steps, "restore did not pick up the final step"
+    resumed.run()
+    print(f"resumed cleanly from step {steps} -> {resumed.step}")
+
+
+if __name__ == "__main__":
+    main()

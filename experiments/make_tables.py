@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md dry-run / roofline markdown tables from the
+recorded JSON cells.
+
+    python experiments/make_tables.py [--dir experiments/dryrun]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dirname):
+    cells = {}
+    for f in glob.glob(os.path.join(dirname, "*.json")):
+        rec = json.load(open(f))
+        key = os.path.basename(f)[:-5]
+        cells[key] = rec
+    return cells
+
+
+def fmt_row(rec, model_flops=None):
+    rl = rec.get("roofline")
+    if not isinstance(rl, dict):
+        return None
+    dom = rl["dominant"]
+    useful = ""
+    if model_flops:
+        hlo_global = rl["flops_per_device"] * rec["chips"]
+        useful = f"{model_flops / max(hlo_global, 1):.2f}"
+    return (f"| {rec['arch']} | {rec['shape']} | "
+            f"{rl['compute_s']:.4f} | {rl['memory_s']:.4f} | "
+            f"{rl['collective_s']:.4f} | **{dom}** | "
+            f"{rec.get('hbm_per_device_gb', float('nan')):.1f} | "
+            f"{useful} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    args = ap.parse_args()
+    cells = load(args.dir)
+
+    import sys
+    sys.path.insert(0, "src")
+    from repro.configs import get_config
+    from repro.launch.specs import SHAPES
+    from repro.models.transformer import model_flops_per_token
+
+    shapes_order = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    for variant, suffix in (("baseline", "__single"),
+                            ("optimized", "__single__opt"),
+                            ("multi-pod", "__multi")):
+        rows = []
+        for key, rec in sorted(cells.items()):
+            if not key.endswith(suffix):
+                continue
+            if suffix == "__single" and key.endswith("__single__opt"):
+                continue
+            cfg = get_config(rec["arch"])
+            sh = SHAPES[rec["shape"]]
+            training = sh.kind == "train"
+            tokens = sh.global_batch * (sh.seq_len if sh.kind != "decode"
+                                        else 1)
+            mf = model_flops_per_token(cfg, sh.seq_len,
+                                       training=training) * tokens
+            r = fmt_row(rec, model_flops=mf)
+            if r:
+                rows.append((rec["arch"],
+                             shapes_order.index(rec["shape"]), r))
+        rows.sort()
+        print(f"\n### {variant} ({len(rows)} cells)\n")
+        print("| arch | shape | compute_s | memory_s | collective_s | "
+              "dominant | HBM GB/dev | useful-FLOP ratio |")
+        print("|---|---|---|---|---|---|---|---|")
+        for _, _, r in rows:
+            print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""SOCKET on TPU: soft-LSH sparse attention as a production JAX framework.
+
+Reproduction of "SOCKET: SOft Collision Kernel EsTimator for Sparse
+Attention" (Joshi et al., 2026) — see DESIGN.md for the system inventory
+and the TPU adaptation of the paper's CUDA/Triton kernels.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,25 @@
+"""Sparse-attention baselines the paper compares against (Section 6).
+
+Every baseline exposes the same scorer interface so the benchmark harness
+and the model's attention backend can swap them freely:
+
+    build(cfg, rng, keys, values)  -> state  (prefill-time index)
+    score(state, q)                -> (..., N) float32 scores
+
+* :mod:`repro.baselines.hard_lsh`   — traditional LSH collision counting
+  (the paper's primary ablation, Tables 2/3/7).
+* :mod:`repro.baselines.quest`      — Quest page-level min/max bounds [43].
+* :mod:`repro.baselines.oracle`     — exact top-k by q.k (upper bound).
+* :mod:`repro.baselines.hash_attn`  — HashAttention-style Hamming scorer
+  [13] (random signed projections; learned mappings replaced by random,
+  matching our data-agnostic evaluation).
+* :mod:`repro.baselines.magicpig`   — MagicPig-style LSH importance sampling
+  estimator [8] (sampling-based, not top-k).
+* :mod:`repro.baselines.pqcache`    — PQCache-lite product quantization [55]
+  (data-dependent: k-means codebooks; exists mainly to demonstrate the TTFT
+  gap in fig. 3a).
+"""
+
+from repro.baselines import hard_lsh, hash_attn, magicpig, oracle, pqcache, quest
+
+__all__ = ["hard_lsh", "hash_attn", "magicpig", "oracle", "pqcache", "quest"]

@@ -1,0 +1,100 @@
+"""Traditional (hard) LSH scorer — the paper's central ablation.
+
+Scores keys by the number of tables in which the key's bucket equals the
+query's bucket (eq. (3) left):
+
+    s_hard(k_j, q) = sum_l  I[ b_j^(l) == b_q^(l) ]
+
+Same storage as SOCKET (bucket ids / packed sign bits); only the query-side
+rule differs.  The paper shows this needs (P=2, L>=300) — i.e. >= 600 bits
+and 2.8-4.3x the memory/time — to approach SOCKET's (P=10, L=60) retrieval
+quality (Table 2, Table 7).
+
+Implementation note: with the packed ±1 sign bits, a hard collision in
+table l is ``all_p(sign_q == sign_k)`` which equals
+``sum_p s_q * s_k == P`` — so the hard count is also expressible as a ±1
+contraction followed by a threshold, and shares the SOCKET Pallas kernel's
+data path (DESIGN.md §2).  tau -> 0 in SOCKET recovers exactly this score
+divided by L (Section 5.3), which the tests verify.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, socket
+
+__all__ = ["HardLSHConfig", "build", "score", "attend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HardLSHConfig:
+    num_planes: int = 2
+    num_tables: int = 300
+    sparsity: float = 10.0
+    sink_tokens: int = 128
+    window_tokens: int = 128
+    min_k: int = 16
+
+    @property
+    def bits_per_token(self) -> int:
+        return self.num_planes * self.num_tables
+
+
+@dataclasses.dataclass
+class HardLSHState:
+    w: jax.Array        # (L, P, d)
+    packed: jax.Array   # (..., N, W) uint32
+    vnorm: jax.Array    # (..., N)
+
+
+def build(cfg: HardLSHConfig, rng: jax.Array, keys: jax.Array,
+          values: jax.Array) -> HardLSHState:
+    """Prefill: identical to SOCKET's Algorithm 1 (hash + pack + vnorm)."""
+    d = keys.shape[-1]
+    w = hashing.make_hash_params(rng, d, cfg.num_planes, cfg.num_tables)
+    signs = hashing.hash_keys_signs(w, keys)
+    packed = hashing.pack_signs(signs)
+    vnorm = jnp.linalg.norm(values.astype(jnp.float32), axis=-1)
+    return HardLSHState(w=w, packed=packed, vnorm=vnorm)
+
+
+def score(state: HardLSHState, cfg: HardLSHConfig, q: jax.Array) -> jax.Array:
+    """Hard collision counts ``(..., N)`` for query ``q (..., d)``.
+
+    ±1-contraction form: collide_l  <=>  (S_k . s_q) == P.
+    """
+    l, p = cfg.num_tables, cfg.num_planes
+    q_signs = jnp.sign(jnp.einsum("...d,lpd->...lp", q.astype(jnp.float32),
+                                  state.w.astype(jnp.float32)))
+    q_signs = jnp.where(q_signs == 0, 1.0, q_signs)
+    k_signs = hashing.unpack_signs(state.packed, l, p)          # (...,N,L,P)
+    agree = jnp.einsum("...nlp,...lp->...nl", k_signs, q_signs)
+    return jnp.sum(agree >= p, axis=-1).astype(jnp.float32)
+
+
+def attend(cfg: HardLSHConfig, state: HardLSHState, q: jax.Array,
+           k_cache: jax.Array, v_cache: jax.Array, *, length,
+           scale: float) -> jax.Array:
+    """Decode attention with hard-LSH selection (matches socket_attend API).
+
+    q: (B, KVH, G, 1, hd); caches (B, KVH, N, hd).
+    """
+    n = k_cache.shape[2]
+    kq = max(cfg.min_k, int(jnp.ceil(n / cfg.sparsity)))
+    kq = min(kq, n)
+    s = score(state, cfg, q[..., 0, :])                  # (B,KVH,G,N)
+    s = jnp.sum(s, axis=2)                               # group-sum
+    sel_cfg = socket.SocketConfig(
+        sparsity=cfg.sparsity, sink_tokens=cfg.sink_tokens,
+        window_tokens=cfg.window_tokens, min_k=cfg.min_k)
+    idx, sel_mask = socket.value_aware_topk(
+        sel_cfg, s, state.vnorm, k=kq, length=length, n_total=n)
+    k_sel = jnp.take_along_axis(k_cache, idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(v_cache, idx[..., None], axis=2)
+    return socket.sparse_attention_over_subset(q, k_sel, v_sel, sel_mask,
+                                               scale=scale)

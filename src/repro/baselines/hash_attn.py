@@ -1,0 +1,63 @@
+"""HashAttention-style Hamming scorer [13].
+
+HashAttention maps queries and keys into Hamming space with *learned*
+projections and scores by negative Hamming distance over a fixed bit
+budget (128 bits/token in the paper's Table 1).  Offline we replace the
+learned mapping with random signed projections (the data-agnostic analogue)
+— the scoring data path (bit codes + popcount-style agreement) is what
+matters for the systems comparison.
+
+Note the relationship to hard LSH with (P=bits, L=1): HashAttention ranks
+by *partial* agreement (Hamming similarity), not by exact bucket collision,
+so it degrades more gracefully than hard LSH but still quantizes each
+plane's evidence to one bit — SOCKET's tanh scores keep the magnitude
+information (Lemma 4 discussion).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+
+__all__ = ["HashAttnConfig", "build", "score"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HashAttnConfig:
+    num_bits: int = 128
+    sparsity: float = 10.0
+
+    @property
+    def bits_per_token(self) -> int:
+        return self.num_bits
+
+
+@dataclasses.dataclass
+class HashAttnState:
+    w: jax.Array       # (1, bits, d) — a single "table" of `bits` planes
+    packed: jax.Array  # (..., N, W)
+
+
+def build(cfg: HashAttnConfig, rng: jax.Array, keys: jax.Array,
+          values: jax.Array) -> HashAttnState:
+    del values
+    d = keys.shape[-1]
+    w = hashing.make_hash_params(rng, d, cfg.num_bits, 1)
+    signs = hashing.hash_keys_signs(w, keys)
+    return HashAttnState(w=w, packed=hashing.pack_signs(signs))
+
+
+def score(state: HashAttnState, cfg: HashAttnConfig, q: jax.Array
+          ) -> jax.Array:
+    """Hamming similarity = number of agreeing bits, ``(..., N)``."""
+    q_signs = jnp.sign(jnp.einsum("...d,lpd->...lp", q.astype(jnp.float32),
+                                  state.w.astype(jnp.float32)))
+    q_signs = jnp.where(q_signs == 0, 1.0, q_signs)
+    k_signs = hashing.unpack_signs(state.packed, 1, cfg.num_bits)
+    agree = jnp.einsum("...nlp,...lp->...n", k_signs, q_signs)
+    # agree in [-bits, bits]; shift to agreement count
+    return (agree + cfg.num_bits) * 0.5

@@ -1,0 +1,49 @@
+"""Oracle scorers: exact q.k top-k and dense attention references.
+
+``oracle top-k`` reads the full keys (what SOCKET avoids) and provides the
+ground-truth ranking used by the fig. 2 metrics (precision / Jaccard /
+NDCG) and by the accuracy benchmarks' recall computations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["OracleState", "build", "score", "dense_attention"]
+
+
+@dataclasses.dataclass
+class OracleState:
+    keys: jax.Array  # (..., N, d)
+
+
+def build(cfg, rng: jax.Array, keys: jax.Array, values: jax.Array
+          ) -> OracleState:
+    del cfg, rng, values
+    return OracleState(keys=keys)
+
+
+def score(state: OracleState, q: jax.Array) -> jax.Array:
+    """Exact inner products ``(..., N)``."""
+    return jnp.einsum("...nd,...d->...n", state.keys.astype(jnp.float32),
+                      q.astype(jnp.float32))
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    scale: float, length=None) -> jax.Array:
+    """Full softmax attention (decode reference).
+
+    q: (B,KVH,G,T,hd); k/v: (B,KVH,N,hd).
+    """
+    logits = jnp.einsum("bhgtd,bhnd->bhgtn", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if length is not None:
+        n = k.shape[2]
+        valid = jnp.arange(n) < jnp.asarray(length, jnp.int32)
+        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgtn,bhnd->bhgtd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,104 @@
+"""PQCache-lite: product-quantization scorer [55].
+
+PQCache quantizes keys with product quantization (PQ): split d into ``m``
+sub-vectors, k-means each sub-space into ``2**nbits`` centroids, store
+per-key code indices.  Scoring a query = per-subspace inner products with
+the codebooks (ADC lookup tables) + code gathers.
+
+The index build is *data-dependent* (k-means over the prefix keys) — this
+is exactly the TTFT cost the paper's fig. 3a contrasts with SOCKET's
+data-agnostic random projections; ``benchmarks/bench_ttft.py`` measures the
+build-time gap.  The k-means here is a few Lloyd iterations, jit-compiled.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["PQConfig", "build", "score"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PQConfig:
+    num_subspaces: int = 16     # m
+    nbits: int = 4              # 2**4 = 16 centroids per subspace
+    kmeans_iters: int = 8
+    sparsity: float = 10.0
+
+    @property
+    def num_centroids(self) -> int:
+        return 1 << self.nbits
+
+    @property
+    def bits_per_token(self) -> int:
+        return self.num_subspaces * self.nbits
+
+
+@dataclasses.dataclass
+class PQState:
+    codebooks: jax.Array  # (m, C, dsub)
+    codes: jax.Array      # (..., N, m) int32
+
+
+def _kmeans(rng: jax.Array, x: jax.Array, c: int, iters: int) -> jax.Array:
+    """Lloyd's algorithm on (N, dsub) points -> (C, dsub) centroids."""
+    n = x.shape[0]
+    idx = jax.random.choice(rng, n, (c,), replace=n < c)
+    cent = x[idx]
+
+    def step(cent, _):
+        d2 = jnp.sum((x[:, None] - cent[None]) ** 2, axis=-1)  # (N, C)
+        assign = jnp.argmin(d2, axis=-1)
+        one_hot = jax.nn.one_hot(assign, c, dtype=x.dtype)     # (N, C)
+        counts = jnp.maximum(one_hot.sum(0), 1.0)
+        new = (one_hot.T @ x) / counts[:, None]
+        # keep old centroid where a cluster went empty
+        new = jnp.where((one_hot.sum(0) > 0)[:, None], new, cent)
+        return new, None
+
+    cent, _ = jax.lax.scan(step, cent, None, length=iters)
+    return cent
+
+
+@partial(jax.jit, static_argnames=("m", "c", "iters"))
+def _build_impl(rng: jax.Array, keys2d: jax.Array, m: int, c: int,
+                iters: int):
+    n, d = keys2d.shape
+    dsub = d // m
+    sub = keys2d.reshape(n, m, dsub).transpose(1, 0, 2)        # (m, N, dsub)
+    rngs = jax.random.split(rng, m)
+    codebooks = jax.vmap(lambda r, x: _kmeans(r, x, c, iters))(rngs, sub)
+    d2 = jnp.sum((sub[:, :, None] - codebooks[:, None]) ** 2, axis=-1)
+    codes = jnp.argmin(d2, axis=-1).T.astype(jnp.int32)        # (N, m)
+    return codebooks, codes
+
+
+def build(cfg: PQConfig, rng: jax.Array, keys: jax.Array,
+          values: jax.Array) -> PQState:
+    del values
+    *lead, n, d = keys.shape
+    if d % cfg.num_subspaces:
+        raise ValueError(f"d={d} not divisible by m={cfg.num_subspaces}")
+    keys2d = keys.reshape(-1, d).astype(jnp.float32)
+    codebooks, codes = _build_impl(rng, keys2d, cfg.num_subspaces,
+                                   cfg.num_centroids, cfg.kmeans_iters)
+    return PQState(codebooks=codebooks,
+                   codes=codes.reshape(*lead, n, cfg.num_subspaces))
+
+
+def score(state: PQState, cfg: PQConfig, q: jax.Array) -> jax.Array:
+    """ADC inner-product estimate ``(..., N)`` for query ``(..., d)``."""
+    m, c, dsub = state.codebooks.shape
+    qs = q.reshape(*q.shape[:-1], m, dsub).astype(jnp.float32)
+    # lookup tables: (..., m, C)
+    lut = jnp.einsum("...md,mcd->...mc", qs,
+                     state.codebooks.astype(jnp.float32))
+    # gather per key code: codes (..., N, m)
+    lut_b = lut[..., None, :, :]                                # (...,1,m,C)
+    picked = jnp.take_along_axis(lut_b, state.codes[..., None],
+                                 axis=-1)[..., 0]               # (...,N,m)
+    return picked.sum(-1)

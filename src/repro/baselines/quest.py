@@ -1,0 +1,115 @@
+"""Quest-style page-level selection [43] (Tang et al., ICML 2024).
+
+At prefill, each page (contiguous block of ``page_size`` tokens) stores the
+element-wise min and max of its keys.  At decode, a page's upper bound on
+the query-key inner product is
+
+    ub(page) = sum_d max(q_d * min_d, q_d * max_d)
+
+and the top pages by upper bound are attended densely.  Data-dependent only
+through the cached statistics (no training), but selection granularity is a
+page, not a token — the paper contrasts this with SOCKET's token-level soft
+scores.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["QuestConfig", "build", "score_pages", "attend"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestConfig:
+    page_size: int = 16
+    sparsity: float = 10.0
+    sink_tokens: int = 128
+    window_tokens: int = 128
+    min_pages: int = 4
+
+    def bits_per_token(self, d: int) -> int:
+        # two bf16 stats vectors per page amortized over the page
+        return int(2 * d * 16 / self.page_size)
+
+
+@dataclasses.dataclass
+class QuestState:
+    kmin: jax.Array   # (..., n_pages, d)
+    kmax: jax.Array   # (..., n_pages, d)
+
+
+def build(cfg: QuestConfig, rng: jax.Array, keys: jax.Array,
+          values: jax.Array) -> QuestState:
+    del rng, values
+    *lead, n, d = keys.shape
+    ps = cfg.page_size
+    n_pages = (n + ps - 1) // ps
+    pad = n_pages * ps - n
+    if pad:
+        pad_cfg = [(0, 0)] * (keys.ndim - 2) + [(0, pad), (0, 0)]
+        kmin_src = jnp.pad(keys, pad_cfg, constant_values=np.inf)
+        kmax_src = jnp.pad(keys, pad_cfg, constant_values=-np.inf)
+    else:
+        kmin_src = kmax_src = keys
+    kmin = kmin_src.reshape(*lead, n_pages, ps, d).min(axis=-2)
+    kmax = kmax_src.reshape(*lead, n_pages, ps, d).max(axis=-2)
+    return QuestState(kmin=kmin, kmax=kmax)
+
+
+def score_pages(state: QuestState, q: jax.Array) -> jax.Array:
+    """Upper-bound page scores ``(..., n_pages)`` for query ``(..., d)``."""
+    qf = q.astype(jnp.float32)[..., None, :]
+    lo = qf * state.kmin.astype(jnp.float32)
+    hi = qf * state.kmax.astype(jnp.float32)
+    return jnp.sum(jnp.maximum(lo, hi), axis=-1)
+
+
+def token_scores(state: QuestState, cfg: QuestConfig, q: jax.Array,
+                 n: int) -> jax.Array:
+    """Broadcast page scores back to token granularity (for the shared
+    benchmark interface: every token inherits its page's upper bound)."""
+    ps = score_pages(state, q)                      # (..., n_pages)
+    rep = jnp.repeat(ps, cfg.page_size, axis=-1)
+    return rep[..., :n]
+
+
+def attend(cfg: QuestConfig, state: QuestState, q: jax.Array,
+           k_cache: jax.Array, v_cache: jax.Array, *, length,
+           scale: float) -> jax.Array:
+    """Decode attention over the top pages (q: (B,KVH,G,1,hd))."""
+    from repro.core import socket as sk
+
+    b, kvh, g, t, hd = q.shape
+    n = k_cache.shape[2]
+    ps = cfg.page_size
+    n_pages = state.kmin.shape[-2]
+    budget_tokens = max(cfg.min_pages * ps,
+                        int(np.ceil(n / cfg.sparsity)))
+    k_pages = min(n_pages, max(cfg.min_pages, budget_tokens // ps))
+
+    scores = score_pages(state, q[..., 0, :])       # (B,KVH,G,n_pages)
+    scores = jnp.sum(scores, axis=2)                # (B,KVH,n_pages)
+
+    length = jnp.asarray(length, jnp.int32)
+    page_pos = jnp.arange(n_pages, dtype=jnp.int32)
+    page_start = page_pos * ps
+    valid = page_start < length
+    forced = (page_start < cfg.sink_tokens) | (
+        page_start >= length - cfg.window_tokens - ps)
+    eff = jnp.where(forced, jnp.float32(np.finfo(np.float32).max), scores)
+    eff = jnp.where(valid, eff, sk.NEG_INF)
+    _, top_pages = jax.lax.top_k(eff, k_pages)       # (B,KVH,k_pages)
+
+    # expand pages to token indices
+    offs = jnp.arange(ps, dtype=jnp.int32)
+    idx = (top_pages[..., None] * ps + offs).reshape(b, kvh, k_pages * ps)
+    idx = jnp.minimum(idx, n - 1)
+    sel_mask = idx < length
+    k_sel = jnp.take_along_axis(k_cache, idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(v_cache, idx[..., None], axis=2)
+    return sk.sparse_attention_over_subset(q, k_sel, v_sel, sel_mask,
+                                           scale=scale)

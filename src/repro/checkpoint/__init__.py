@@ -1,0 +1,5 @@
+"""Async, atomic, sharding-aware checkpointing."""
+
+from repro.checkpoint.checkpointer import Checkpointer
+
+__all__ = ["Checkpointer"]

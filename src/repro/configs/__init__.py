@@ -1,0 +1,7 @@
+"""Architecture configs (one module per assigned architecture)."""
+
+from repro.configs.base import LayerSpec, ModelConfig, SocketSettings
+from repro.configs.registry import ARCHITECTURES, ASSIGNED, get_config
+
+__all__ = ["ARCHITECTURES", "ASSIGNED", "LayerSpec", "ModelConfig",
+           "SocketSettings", "get_config"]

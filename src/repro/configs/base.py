@@ -1,0 +1,212 @@
+"""Model configuration schema.
+
+A :class:`ModelConfig` fully describes one architecture: the layer layout
+(heterogeneous patterns like gemma3's 5:1 local:global or jamba's 1:7
+attn:mamba are first-class), attention/MoE/SSM hyper-parameters, the
+modality frontend mode, and the SOCKET sparse-attention settings.
+
+Layer layout = ``pattern`` (one scan *group*) repeated ``num_groups`` times
+plus an optional ``remainder`` — the training/serving stacks `jax.lax.scan`
+over groups with stacked parameters so the HLO stays small for 48-62 layer
+models (critical for 1-core CPU compiles and for real-TPU compile times).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+__all__ = ["LayerSpec", "ModelConfig", "SocketSettings"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer inside a pattern."""
+
+    kind: str = "attn"          # "attn" | "mamba"
+    attn_type: str = "global"   # "global" | "local"  (local = sliding window)
+    mlp: str = "dense"          # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class SocketSettings:
+    """SOCKET knobs carried inside the model config (deployment defaults
+    follow paper Table 13: P=10, L=60, tau in [0.3, 0.5])."""
+
+    num_planes: int = 10
+    num_tables: int = 60
+    tau: float = 0.4
+    sparsity: float = 10.0
+    sink_tokens: int = 128
+    window_tokens: int = 128
+    min_k: int = 16
+    bits_storage: str = "packed"
+    score_chunk: int = 0          # XLA-path scoring chunk (see core.socket)
+    score_dtype: str = "float32"  # "bfloat16" halves long-context buffers
+    # "kvhead": per-q-head scores summed over the GQA group (paper-faithful)
+    # "pooled": score once with the group-mean query (G x less score
+    #           compute/memory; §Perf fidelity numbers in EXPERIMENTS.md)
+    selection: str = "kvhead"
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | hybrid | ssm | audio | vlm
+    # --- dimensions -----------------------------------------------------
+    d_model: int = 1024
+    num_heads: int = 8
+    num_kv_heads: int = 8
+    head_dim: int = 128
+    d_ff: int = 4096
+    vocab_size: int = 32000
+    # --- layout ---------------------------------------------------------
+    pattern: Tuple[LayerSpec, ...] = (LayerSpec(),)
+    num_groups: int = 1
+    remainder: Tuple[LayerSpec, ...] = ()
+    # --- attention ------------------------------------------------------
+    rope_theta: float = 10000.0
+    sliding_window: int = 1024      # for attn_type == "local"
+    qk_norm: bool = False
+    attn_logit_softcap: float = 0.0
+    # q-chunked attention for the XLA train/prefill path: bounds the live
+    # (chunk, S) logits buffer at long sequence lengths (0 = disabled).
+    attn_q_chunk: int = 0
+    # --- mlp ------------------------------------------------------------
+    mlp_activation: str = "swiglu"  # "swiglu" | "geglu"
+    # --- moe ------------------------------------------------------------
+    num_experts: int = 0
+    num_experts_per_tok: int = 0
+    moe_parallelism: str = "ep"     # "ep" (shard experts) | "tp" (shard d_ff)
+    moe_dispatch: str = "global"    # "global" | "batch" (see models.moe)
+    capacity_factor: float = 1.25
+    router_z_loss: float = 1e-3
+    # --- mamba (SSD) ------------------------------------------------------
+    ssm_state: int = 128
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 128
+    # --- io / modality ----------------------------------------------------
+    input_mode: str = "tokens"      # "tokens" | "embeddings" (audio/vlm stub)
+    tie_embeddings: bool = False
+    # --- numerics ---------------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat_policy: str = "none"      # "none" | "full" | "dots"
+    logical_pad_heads: bool = False # zero-pad heads to mesh divisibility
+    # --- sparse attention (the paper's technique) --------------------------
+    attention_backend: str = "socket"  # decode backend: socket|dense|quest|hard_lsh
+    socket: SocketSettings = SocketSettings()
+    # context-parallel SOCKET decode: shard_map local-topk + psum merge over
+    # these mesh axes (set by the launcher per shape; () = pjit/XLA path)
+    decode_cp_axes: Tuple[str, ...] = ()
+    decode_cp_batch_axes: Tuple[str, ...] = ("pod", "data")
+    # --- provenance ---------------------------------------------------------
+    source: str = ""
+
+    # ----------------------------------------------------------------- utils
+    @property
+    def num_layers(self) -> int:
+        return len(self.pattern) * self.num_groups + len(self.remainder)
+
+    @property
+    def layer_specs(self) -> Tuple[LayerSpec, ...]:
+        return self.pattern * self.num_groups + self.remainder
+
+    @property
+    def gqa_groups(self) -> int:
+        return self.num_heads // self.num_kv_heads
+
+    @property
+    def d_inner(self) -> int:  # mamba inner width
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def uses_attention(self) -> bool:
+        return any(s.kind == "attn" for s in self.layer_specs)
+
+    @property
+    def uses_mamba(self) -> bool:
+        return any(s.kind == "mamba" for s in self.layer_specs)
+
+    @property
+    def uses_moe(self) -> bool:
+        return any(s.mlp == "moe" for s in self.layer_specs)
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def padded_vocab(self, multiple: int = 128) -> int:
+        return ((self.vocab_size + multiple - 1) // multiple) * multiple
+
+    # ------------------------------------------------------------- counting
+    def param_count(self) -> int:
+        """Exact parameter count of this config (embeddings included)."""
+        d, h, kv, hd, ff = (self.d_model, self.num_heads, self.num_kv_heads,
+                            self.head_dim, self.d_ff)
+        n = 0
+        n += self.padded_vocab() * d                       # embed
+        if not self.tie_embeddings:
+            n += d * self.padded_vocab()                   # lm head
+        for spec in self.layer_specs:
+            n += d                                          # pre norm
+            if spec.kind == "attn":
+                n += d * (h + 2 * kv) * hd + h * hd * d
+                if self.qk_norm:
+                    n += 2 * hd
+            else:
+                di, st, nh = self.d_inner, self.ssm_state, self.ssm_heads
+                conv_dim = di + 2 * st
+                n += d * (2 * di + 2 * st + nh)            # in_proj
+                n += conv_dim * self.ssm_conv_width + conv_dim
+                n += nh * 2 + nh                           # A_log, dt_bias, D
+                n += di                                    # gated norm
+                n += di * d                                # out_proj
+            if spec.mlp == "dense":
+                n += d + 3 * d * ff
+            elif spec.mlp == "moe":
+                n += d + d * self.num_experts              # norm + router
+                n += self.num_experts * 3 * d * ff
+        n += d                                             # final norm
+        return n
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only routed experts)."""
+        if not self.uses_moe:
+            return self.param_count()
+        full_moe = sum(1 for s in self.layer_specs if s.mlp == "moe")
+        per_expert = 3 * self.d_model * self.d_ff
+        inactive = full_moe * (self.num_experts -
+                               self.num_experts_per_tok) * per_expert
+        return self.param_count() - inactive
+
+    # ------------------------------------------------------------- reduction
+    def smoke(self) -> "ModelConfig":
+        """A drastically reduced config of the same family for CPU tests:
+        same pattern structure, tiny widths, few groups, tiny vocab."""
+        return self.replace(
+            d_model=64,
+            num_heads=4,
+            num_kv_heads=max(1, min(self.num_kv_heads, 2)),
+            head_dim=16,
+            d_ff=128,
+            vocab_size=256,
+            num_groups=min(self.num_groups, 2),
+            remainder=self.remainder[: min(len(self.remainder), 1)],
+            num_experts=min(self.num_experts, 4) if self.num_experts else 0,
+            num_experts_per_tok=min(self.num_experts_per_tok, 2)
+            if self.num_experts_per_tok else 0,
+            ssm_state=16,
+            ssm_head_dim=16,
+            ssm_chunk=16,
+            sliding_window=32,
+            socket=dataclasses.replace(
+                self.socket, num_planes=6, num_tables=12, sink_tokens=4,
+                window_tokens=4, min_k=8, sparsity=4.0),
+        )

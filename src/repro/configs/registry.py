@@ -1,0 +1,64 @@
+"""Architecture registry: ``--arch <id>`` resolution for every launcher.
+
+All ten assigned architectures plus the paper's own evaluation scale
+(``llama31-8b``-shaped reference config used by the fidelity benchmarks).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.configs.base import LayerSpec, ModelConfig
+
+from repro.configs.musicgen_medium import CONFIG as MUSICGEN_MEDIUM
+from repro.configs.gemma3_27b import CONFIG as GEMMA3_27B
+from repro.configs.stablelm_12b import CONFIG as STABLELM_12B
+from repro.configs.minitron_8b import CONFIG as MINITRON_8B
+from repro.configs.gemma_7b import CONFIG as GEMMA_7B
+from repro.configs.mixtral_8x22b import CONFIG as MIXTRAL_8X22B
+from repro.configs.llama4_maverick_400b import CONFIG as LLAMA4_MAVERICK
+from repro.configs.jamba_v01_52b import CONFIG as JAMBA_V01_52B
+from repro.configs.mamba2_780m import CONFIG as MAMBA2_780M
+from repro.configs.internvl2_26b import CONFIG as INTERNVL2_26B
+
+# The paper evaluates SOCKET on Llama-3.1-8B-Instruct; this reference config
+# exists so the fidelity benchmarks exercise the exact (P, L, tau) operating
+# point of paper Tables 1/13 on the right head geometry.
+LLAMA31_8B = ModelConfig(
+    name="llama31-8b",
+    family="dense",
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab_size=128256,
+    pattern=(LayerSpec(kind="attn", attn_type="global", mlp="dense"),),
+    num_groups=32,
+    rope_theta=500_000.0,
+    mlp_activation="swiglu",
+    source="arXiv:2407.21783 (paper's eval model)",
+)
+
+ARCHITECTURES: Dict[str, ModelConfig] = {
+    "musicgen-medium": MUSICGEN_MEDIUM,
+    "gemma3-27b": GEMMA3_27B,
+    "stablelm-12b": STABLELM_12B,
+    "minitron-8b": MINITRON_8B,
+    "gemma-7b": GEMMA_7B,
+    "mixtral-8x22b": MIXTRAL_8X22B,
+    "llama4-maverick-400b-a17b": LLAMA4_MAVERICK,
+    "jamba-v0.1-52b": JAMBA_V01_52B,
+    "mamba2-780m": MAMBA2_780M,
+    "internvl2-26b": INTERNVL2_26B,
+    "llama31-8b": LLAMA31_8B,
+}
+
+ASSIGNED = tuple(k for k in ARCHITECTURES if k != "llama31-8b")
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in ARCHITECTURES:
+        raise KeyError(
+            f"unknown arch {name!r}; available: {sorted(ARCHITECTURES)}")
+    return ARCHITECTURES[name]

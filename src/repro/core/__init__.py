@@ -1,0 +1,26 @@
+"""SOCKET core: soft-collision LSH scoring for sparse attention.
+
+The paper's primary contribution (Algorithms 1-3 + the theory of Section 5)
+lives here; model integration is in ``repro.models``, the Pallas scoring /
+decode kernels in ``repro.kernels``.
+"""
+
+from repro.core.hashing import (HashParams, hash_keys_signs, hypercube_corners,
+                                make_hash_params, num_words, pack_signs,
+                                signs_to_bucket_ids, unpack_signs)
+from repro.core.socket import (SocketCache, SocketConfig, bucket_probs_explicit,
+                               log_normalizer, precompute_key_hashes,
+                               socket_attend, soft_hash_query,
+                               soft_scores_factorized, soft_scores_gather,
+                               sparse_attention_over_subset, topk_budget,
+                               value_aware_topk)
+
+__all__ = [
+    "HashParams", "SocketCache", "SocketConfig", "bucket_probs_explicit",
+    "hash_keys_signs", "hypercube_corners", "log_normalizer",
+    "make_hash_params", "num_words", "pack_signs", "precompute_key_hashes",
+    "signs_to_bucket_ids", "socket_attend", "soft_hash_query",
+    "soft_scores_factorized", "soft_scores_gather",
+    "sparse_attention_over_subset", "topk_budget", "unpack_signs",
+    "value_aware_topk",
+]

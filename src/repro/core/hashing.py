@@ -1,0 +1,161 @@
+"""SimHash (signed-random-projection) machinery shared by SOCKET and hard LSH.
+
+Implements Algorithm 1 of the paper (PrecomputeKeyHashes): every key vector
+is projected by ``L`` independent tables of ``P`` Gaussian hyperplanes and
+reduced to its sign pattern.  The sign pattern *is* the bucket id
+(``R = 2**P`` buckets per table).  We keep two physical encodings:
+
+* ``signs``      — boolean ``(..., N, L, P)`` tensor (test/oracle friendly),
+* ``packed``     — ``uint32 (..., N, W)`` bit-packed words, ``W = ceil(L*P/32)``
+                   — 600 bits/token for the paper's (P=10, L=60) setting.
+
+The packed form is the deployment format: it is what the Pallas scoring
+kernel streams from HBM and what the KV cache stores alongside K/V.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HashParams",
+    "make_hash_params",
+    "hash_keys_signs",
+    "signs_to_bucket_ids",
+    "pack_signs",
+    "unpack_signs",
+    "num_words",
+    "hypercube_corners",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class HashParams:
+    """Static description of an LSH ensemble."""
+
+    num_planes: int  # P
+    num_tables: int  # L
+
+    @property
+    def num_buckets(self) -> int:  # R
+        return 1 << self.num_planes
+
+    @property
+    def bits_per_token(self) -> int:
+        return self.num_planes * self.num_tables
+
+    @property
+    def words_per_token(self) -> int:
+        return num_words(self.num_tables, self.num_planes)
+
+
+def num_words(num_tables: int, num_planes: int) -> int:
+    """uint32 words storing one token's hash bits.
+
+    Rounded up so that ``W*32`` is a multiple of ``P`` — the Pallas scoring
+    kernel views the unpacked bits as (W*32/P) padded tables, which keeps
+    the in-kernel layout reshape-free (padding tables are neutralised with
+    logZ=+inf).  For the paper's (P=10, L=60) this stores 640 bits/token
+    (600 useful + 40 alignment), still ~3.2x below the 2048 bits of a bf16
+    key.
+    """
+    w = (num_tables * num_planes + 31) // 32
+    while (w * 32) % num_planes:
+        w += 1
+    return w
+
+
+def make_hash_params(key: jax.Array, d: int, num_planes: int, num_tables: int,
+                     dtype=jnp.float32) -> jax.Array:
+    """Sample the Gaussian hyperplanes ``W`` with shape ``(L, P, d)``.
+
+    These are *data-agnostic* (the paper's central design point): no
+    calibration pass, no k-means — index build cost is one RNG call, which
+    is why SOCKET's TTFT beats clustering-based baselines (paper fig. 3a).
+    """
+    w = jax.random.normal(key, (num_tables, num_planes, d), dtype=jnp.float32)
+    return w.astype(dtype)
+
+
+def hash_keys_signs(w: jax.Array, keys: jax.Array) -> jax.Array:
+    """Algorithm 1 line 6: ``sign(W^(l) k_j)`` for every key and table.
+
+    Args:
+      w:    ``(L, P, d)`` hyperplanes.
+      keys: ``(..., N, d)`` key vectors.
+
+    Returns:
+      boolean ``(..., N, L, P)`` — True where the projection is >= 0.
+    """
+    # (..., N, d) x (L, P, d) -> (..., N, L, P)
+    proj = jnp.einsum("...nd,lpd->...nlp", keys.astype(jnp.float32),
+                      w.astype(jnp.float32))
+    return proj >= 0.0
+
+
+def signs_to_bucket_ids(signs: jax.Array) -> jax.Array:
+    """Encode per-table sign patterns as integer bucket ids in ``[0, 2**P)``.
+
+    Bit i of the bucket id is sign bit of plane i (LSB = plane 0).
+    """
+    p = signs.shape[-1]
+    if p > 31:
+        raise ValueError(f"P={p} too large for int32 bucket ids")
+    weights = (1 << np.arange(p)).astype(np.int32)
+    return jnp.sum(signs.astype(jnp.int32) * weights, axis=-1)
+
+
+def pack_signs(signs: jax.Array) -> jax.Array:
+    """Pack boolean ``(..., N, L, P)`` into ``uint32 (..., N, W)``.
+
+    Bit layout: flatten (L, P) row-major (table-major, plane-minor), pad to a
+    multiple of 32 with zeros, then bit ``b`` of word ``w`` stores flat bit
+    ``w*32 + b``.  The layout is mirrored exactly by :func:`unpack_signs` and
+    by the Pallas kernel's in-register unpack.
+    """
+    *lead, n, l, p = signs.shape
+    flat = signs.reshape(*lead, n, l * p)
+    w = num_words(l, p)
+    pad = w * 32 - l * p
+    if pad:
+        flat = jnp.pad(flat, [(0, 0)] * (flat.ndim - 1) + [(0, pad)])
+    grouped = flat.reshape(*lead, n, w, 32).astype(jnp.uint32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(grouped << shifts, axis=-1).astype(jnp.uint32)
+
+
+def unpack_signs(packed: jax.Array, num_tables: int, num_planes: int,
+                 dtype=jnp.float32) -> jax.Array:
+    """Inverse of :func:`pack_signs`, returning ±1 values.
+
+    Args:
+      packed: ``uint32 (..., N, W)``.
+
+    Returns:
+      ``(..., N, L, P)`` in ``dtype`` with values in {-1, +1}.
+    """
+    *lead, n, w = packed.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (packed[..., None] >> shifts) & jnp.uint32(1)  # (..., N, W, 32)
+    flat = bits.reshape(*lead, n, w * 32)[..., : num_tables * num_planes]
+    signs = flat.astype(dtype) * 2.0 - 1.0
+    return signs.reshape(*lead, n, num_tables, num_planes)
+
+
+def hypercube_corners(num_planes: int) -> np.ndarray:
+    """All ``R = 2**P`` corners ``c_r in {-1, +1}^P`` (bit i of r = plane i).
+
+    Only used by the oracle (explicit-softmax) scoring path and tests —
+    the production path never materializes the corner set thanks to the
+    product factorization (DESIGN.md §2).
+    """
+    r = 1 << num_planes
+    ids = np.arange(r)[:, None]
+    planes = np.arange(num_planes)[None, :]
+    bits = (ids >> planes) & 1
+    return (bits * 2 - 1).astype(np.float32)

@@ -1,0 +1,110 @@
+"""Theory-side objects from Section 5 of the paper.
+
+These are not used on the inference path; they exist so the test-suite can
+validate the paper's theoretical claims numerically:
+
+* angular kernel weights ``w_j`` (eq. (4)) and angular attention ``y*``;
+* the population soft-count weights ``w_tau_j`` and their Monte-Carlo
+  estimates over tables (Lemma 5 / 6 — finite-L concentration);
+* the value-aware sampling estimator ``T(q)`` (eq. (6), Lemma 7);
+* the soft-bucketization bias ``eps_tau`` (Theorem 3 discussion);
+* Lemma 4's closed-form correlation ``Gamma = C q^T W^T s_hat`` for
+  arbitrary per-plane score rules, with the hard (sign) and soft (tanh)
+  instantiations compared in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing, socket
+
+__all__ = [
+    "angular_weights",
+    "angular_attention",
+    "soft_count_attention",
+    "sampling_estimator",
+    "eps_tau_monte_carlo",
+    "lemma4_gamma",
+]
+
+
+def angular_weights(q: jax.Array, keys: jax.Array, p: int) -> jax.Array:
+    """Angular kernel weights ``w_j = (1 - arccos(cos_sim)/pi)^P`` (eq. 4)."""
+    qn = q / jnp.linalg.norm(q)
+    kn = keys / jnp.linalg.norm(keys, axis=-1, keepdims=True)
+    cos = jnp.clip(kn @ qn, -1.0, 1.0)
+    return (1.0 - jnp.arccos(cos) / jnp.pi) ** p
+
+
+def angular_attention(q: jax.Array, keys: jax.Array, values: jax.Array,
+                      p: int) -> jax.Array:
+    """``y* = sum_j a_j v_j`` with ``a_j = w_j / Z`` (Section 5)."""
+    w = angular_weights(q, keys, p)
+    return (w / jnp.sum(w)) @ values
+
+
+def soft_count_attention(cfg: socket.SocketConfig, rng: jax.Array,
+                         q: jax.Array, keys: jax.Array,
+                         values: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Finite-L soft-count attention ``y_{tau,L}`` (eq. 5) and weights.
+
+    Returns (y, a_tilde) where a_tilde are the normalized soft weights.
+    """
+    d = q.shape[-1]
+    w = hashing.make_hash_params(rng, d, cfg.num_planes, cfg.num_tables)
+    signs = hashing.hash_keys_signs(w, keys[None])[0]          # (N, L, P)
+    u = socket.soft_hash_query(w, q)                           # (L, P)
+    logits = jnp.einsum("nlp,lp->nl", signs.astype(jnp.float32) * 2 - 1,
+                        u) / cfg.tau
+    logz = socket.log_normalizer(u, cfg.tau)
+    s = jnp.exp(logits - logz[None, :])                        # (N, L)
+    w_tilde = jnp.mean(s, axis=-1)                             # (1/L) sum_l
+    a_tilde = w_tilde / jnp.sum(w_tilde)
+    return a_tilde @ values, a_tilde
+
+
+def sampling_estimator(rng: jax.Array, a_tilde: jax.Array, values: jax.Array,
+                       m: int) -> jax.Array:
+    """Value-aware importance-sampling estimator ``T(q)`` (eq. 6)."""
+    vn = jnp.linalg.norm(values, axis=-1)
+    p = a_tilde * vn
+    p = p / jnp.sum(p)
+    idx = jax.random.choice(rng, a_tilde.shape[0], (m,), p=p)
+    contrib = (a_tilde[idx] / p[idx])[:, None] * values[idx]
+    return jnp.mean(contrib, axis=0)
+
+
+def eps_tau_monte_carlo(rng: jax.Array, q: jax.Array, tau: float,
+                        num_planes: int, n_tables: int = 256) -> jax.Array:
+    """``eps_tau(q) = E[1 - p_tau(b_q | q)]`` estimated over random tables.
+
+    Theorem 3: eps_tau -> 0 as tau -> 0 (fixed P) and -> 1 - 1/R as
+    tau -> inf.  Uses the factorized form: with x = u/tau,
+    ``p(b_q|q) = prod_i exp(|x_i|) / (2 cosh(x_i))`` since the hard bucket
+    takes sign(u_i) on every plane.
+    """
+    d = q.shape[-1]
+    w = hashing.make_hash_params(rng, d, num_planes, n_tables)
+    u = socket.soft_hash_query(w, q)                           # (T, P)
+    x = jnp.abs(u) / tau
+    # log p(b_q) = sum_i [ x_i - log(2 cosh x_i) ] = -sum_i log1p(exp(-2x))
+    log_p = -jnp.sum(jnp.log1p(jnp.exp(-2.0 * x)), axis=-1)
+    return jnp.mean(1.0 - jnp.exp(log_p))
+
+
+def lemma4_gamma(q: jax.Array, w_orth: jax.Array, s: jax.Array) -> jax.Array:
+    """Closed-form correlation ``Gamma = C q^T W^T s_hat`` (Lemma 4).
+
+    Args:
+      q:      unit-norm query ``(d,)``.
+      w_orth: orthonormal plane matrix ``(P, d)``.
+      s:      per-plane scores ``(P,)``.
+    """
+    c = jnp.sqrt(2.0 / jnp.pi)
+    s_hat = s / jnp.linalg.norm(s)
+    return c * (w_orth @ q) @ s_hat

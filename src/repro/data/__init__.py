@@ -1,0 +1,7 @@
+"""Data pipelines (synthetic + memmap token sources)."""
+
+from repro.data.pipeline import (DataConfig, HostDataLoader, MemmapLMSource,
+                                 SyntheticLMSource)
+
+__all__ = ["DataConfig", "HostDataLoader", "MemmapLMSource",
+           "SyntheticLMSource"]

@@ -1,0 +1,5 @@
+"""Distribution: sharding rules, context parallelism, pipeline, compression."""
+
+from repro.distributed import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for SOCKET's perf-critical paths.
+
+* socket_score  — the paper's CUDA scoring kernel, TPU-adapted (bit-packed
+                  streaming + factorized corner softmax, DESIGN.md §2).
+* flash_decode  — online-softmax GQA decode over the gathered top-k subset
+                  (the paper's Triton Flash-Decode backend analogue).
+* flash_prefill — causal flash-attention forward for the dense prefill.
+
+Each kernel ships ``ops.py`` (jitted wrapper; interpret=True off-TPU) and
+``ref.py`` (pure-jnp oracle used by the allclose test sweeps).
+"""
+
+from repro.kernels import flash_decode, flash_prefill, socket_score
+
+__all__ = ["flash_decode", "flash_prefill", "socket_score"]

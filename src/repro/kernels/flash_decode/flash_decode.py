@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: flash decode over the SOCKET-selected KV subset.
+
+One decode step of GQA attention for a single KV head's group of G query
+heads against the K gathered rows (the top-k ∪ sink ∪ window selection).
+Mirrors the paper's Triton "Flash Decode" backend: split-K online softmax
+with fp32 running (m, l, acc) state.
+
+Grid = (BH, K // block_k); the K axis is the innermost (sequential on TPU)
+grid dimension, so the kernel accumulates across K blocks in VMEM scratch
+and writes the normalised output on the final block:
+
+  per step  : q (G, hd) resident; k/v block (block_k, hd); mask (block_k,)
+  scratch   : m (G,), l (G,), acc (G, hd)  — all fp32
+  epilogue  : out = acc / l
+
+VMEM per step at (G=8, hd=256, block_k=512): ~1.3 MiB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, mask_ref, out_ref, m_scr, l_scr,
+                   acc_scr, *, scale: float, num_k_blocks: int):
+    kb = pl.program_id(1)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)              # (G, hd)
+    k = k_ref[0].astype(jnp.float32)              # (block_k, hd)
+    v = v_ref[0].astype(jnp.float32)
+    valid = mask_ref[0]                           # (block_k,) bool
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    s = jnp.where(valid[None, :], s, NEG_INF)     # (G, block_k)
+
+    m_prev = m_scr[...]                           # (G,)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)               # (G,)
+    p = jnp.exp(s - m_new[:, None])               # (G, block_k)
+    p = jnp.where(valid[None, :], p, 0.0)
+
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(kb == num_k_blocks - 1)
+    def _done():
+        out_ref[0] = (acc_scr[...] /
+                      jnp.maximum(l_scr[...], 1e-30)[:, None]
+                      ).astype(out_ref.dtype)
+
+
+def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
+                        mask: jax.Array, *, scale: float,
+                        block_k: int = DEFAULT_BLOCK_K,
+                        interpret: bool = True) -> jax.Array:
+    """q (BH, G, hd); k/v (BH, K, hd); mask (BH, K) -> f32 (BH, G, hd)."""
+    bh, g, hd = q.shape
+    kk = k.shape[1]
+    if kk % block_k:
+        raise ValueError(f"K={kk} not a multiple of block_k={block_k}")
+    nkb = kk // block_k
+    kernel = functools.partial(_decode_kernel, scale=float(scale),
+                               num_k_blocks=nkb)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, nkb),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, block_k), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda b, i: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, g, hd), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g,), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the flash-decode kernel: masked softmax attention of
+G query heads against K gathered key/value rows (one KV head)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_decode_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, *, scale: float) -> jax.Array:
+    """q (BH, G, hd); k/v (BH, K, hd); mask (BH, K) bool -> (BH, G, hd)."""
+    logits = jnp.einsum("bgd,bkd->bgk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    logits = jnp.where(mask[:, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bgk,bkd->bgd", w, v.astype(jnp.float32))

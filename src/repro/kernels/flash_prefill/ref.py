@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for causal (optionally sliding-window) flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_prefill_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      scale: float, window: int = 0) -> jax.Array:
+    """q/k/v (BH, S, hd) -> (BH, S, hd), causal; window>0 = sliding window."""
+    s = q.shape[1]
+    logits = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qi = jnp.arange(s)[:, None]
+    ki = jnp.arange(s)[None, :]
+    mask = ki <= qi
+    if window > 0:
+        mask &= (qi - ki) < window
+    logits = jnp.where(mask[None], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", w, v.astype(jnp.float32))

@@ -1,0 +1,4 @@
+from repro.kernels.socket_score.ops import socket_score
+from repro.kernels.socket_score.ref import socket_score_ref
+
+__all__ = ["socket_score", "socket_score_ref"]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the SOCKET scoring kernel.
+
+Computes exactly what the Pallas kernel computes (the factorized soft
+collision score, DESIGN.md §2), shape-for-shape:
+
+    scores[bh, n] = vnorm[bh, n] * sum_g sum_l exp( (S . u)/tau - logZ )
+
+Inputs:
+  bits  : uint32 (BH, N, W)     packed ±1 sign bits (hashing.pack_signs)
+  u     : f32    (BH, G, L, P)  query soft-hash (socket.soft_hash_query)
+  vnorm : f32    (BH, N)        value norms (or None for unweighted scores)
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, socket
+
+
+def socket_score_ref(bits: jax.Array, u: jax.Array,
+                     vnorm: Optional[jax.Array], *, num_tables: int,
+                     num_planes: int, tau: float) -> jax.Array:
+    """Returns f32 (BH, N) group-summed, value-weighted scores."""
+    signs = hashing.unpack_signs(bits, num_tables, num_planes)  # (BH,N,L,P)
+    logits = jnp.einsum("bnlp,bglp->bgnl", signs, u.astype(jnp.float32))
+    logits = logits / tau
+    logz = socket.log_normalizer(u.astype(jnp.float32), tau)    # (BH,G,L)
+    z = jnp.exp(logits - logz[:, :, None, :])                   # (BH,G,N,L)
+    scores = jnp.sum(z, axis=(1, 3))                            # (BH,N)
+    if vnorm is not None:
+        scores = scores * vnorm.astype(jnp.float32)
+    return scores

@@ -1,0 +1,128 @@
+"""Pallas TPU kernel: SOCKET soft-collision scoring (paper Algorithm 4).
+
+TPU adaptation of the paper's CUDA scoring kernel (DESIGN.md §2): instead
+of gathering per-key bucket probabilities from a LUT (random-access —
+wrong primitive for TPU), the kernel streams the *bit-packed* sign matrix
+from HBM, unpacks it in-register with shift/mask ops, and evaluates the
+exact factorized score
+
+    score[n] = vnorm[n] * sum_g sum_l exp( <S_nl, u_gl> / tau - logZ_gl )
+
+Memory behaviour (the point of SOCKET): per token the kernel reads
+``W*4 = 80`` bytes of packed bits + 4 bytes of vnorm instead of the 256 B
+of bf16 keys a dense decode reads — a 3.2x HBM-traffic reduction, which is
+what makes sparse decode profitable at long context on TPU v5e
+(819 GB/s HBM).
+
+Tiling: grid = (BH, N // block_n).  Per step the kernel holds
+  bits  (block_n, W)   uint32   — block_n=512, W=20 → 40 KiB
+  u     (G, L, P)      f32      — ≤ 8·64·16·4 = 32 KiB   (VMEM resident)
+  logz  (G, L)         f32
+  vnorm (block_n,)     f32
+  out   (block_n,)     f32
+comfortably inside VMEM.  The contraction (block_n, L, P) x (G, L, P) is
+vector-unit work (P is far below the 128-lane MXU contraction width; see
+EXPERIMENTS.md §Perf for the measured compute/memory balance and the
+pooled-query G=1 operating point that keeps the kernel memory-bound).
+
+The unpack exploits that ``W*32`` is a multiple of 128 (W=20 → 640 lanes):
+tables are processed in a (L_pad, P) view with L padded to W*32/P and the
+padding neutralised via logZ = +inf (=> exp(-inf) = 0 contribution).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 512
+
+
+def _score_kernel(bits_ref, u_ref, logz_ref, vnorm_ref, out_ref, *,
+                  num_planes: int, l_pad: int, tau: float):
+    """One (bh, n-block) tile."""
+    words = bits_ref[0]                          # (block_n, W) uint32
+    block_n, w = words.shape
+
+    # ---- unpack W uint32 words -> (block_n, W*32) ±1 float32 ------------
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+    signs = bits.reshape(block_n, w * 32).astype(jnp.float32) * 2.0 - 1.0
+    # padded-table view: (block_n, L_pad, P); pad tables contribute 0 via
+    # logz = +inf supplied by the wrapper.
+    signs = signs.reshape(block_n, l_pad, num_planes)
+
+    u = u_ref[0]                                 # (G, L_pad, P) f32
+    logz = logz_ref[0]                           # (G, L_pad)
+    g = u.shape[0]
+
+    # ---- per-table logits + exp + reduce --------------------------------
+    # (block_n, 1, L_pad, P) * (1, G, L_pad, P) -> sum over P
+    prod = signs[:, None] * u[None]              # (block_n, G, L_pad, P)
+    logits = jnp.sum(prod, axis=-1) / tau        # (block_n, G, L_pad)
+    z = jnp.exp(logits - logz[None])             # (block_n, G, L_pad)
+    scores = jnp.sum(z, axis=(1, 2))             # (block_n,)
+
+    out_ref[0] = scores * vnorm_ref[0]
+
+
+def socket_score_pallas(bits: jax.Array, u: jax.Array,
+                        vnorm: Optional[jax.Array], *, num_tables: int,
+                        num_planes: int, tau: float,
+                        block_n: int = DEFAULT_BLOCK_N,
+                        interpret: bool = True) -> jax.Array:
+    """Launch the scoring kernel.
+
+    Args:
+      bits:  uint32 (BH, N, W) packed sign bits.
+      u:     f32 (BH, G, L, P) query soft-hash.
+      vnorm: f32 (BH, N) value norms, or None.
+
+    Returns:
+      f32 (BH, N) scores (group-summed, value-weighted).
+    """
+    bh, n, w = bits.shape
+    _, g, l, p = u.shape
+    if l != num_tables or p != num_planes:
+        raise ValueError("u shape mismatch")
+    if (w * 32) % num_planes:
+        raise ValueError(
+            f"packed width {w*32} bits not a multiple of P={num_planes}; "
+            f"choose P dividing 32*W")
+    l_pad = (w * 32) // num_planes
+
+    # logZ (+inf on padding tables kills their contribution exactly)
+    from repro.core import socket as sk
+    logz = sk.log_normalizer(u.astype(jnp.float32), tau)       # (BH,G,L)
+    pad_l = l_pad - l
+    u_pad = jnp.pad(u.astype(jnp.float32),
+                    ((0, 0), (0, 0), (0, pad_l), (0, 0)))
+    logz_pad = jnp.pad(logz, ((0, 0), (0, 0), (0, pad_l)),
+                       constant_values=jnp.float32(1e30))
+
+    if vnorm is None:
+        vnorm = jnp.ones((bh, n), jnp.float32)
+    vnorm = vnorm.astype(jnp.float32)
+
+    if n % block_n:
+        raise ValueError(f"N={n} not a multiple of block_n={block_n}")
+
+    kernel = functools.partial(_score_kernel, num_planes=num_planes,
+                               l_pad=l_pad, tau=float(tau))
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n // block_n),
+        in_specs=[
+            pl.BlockSpec((1, block_n, w), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, g, l_pad, num_planes), lambda b, i: (b, 0, 0, 0)),
+            pl.BlockSpec((1, g, l_pad), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+        ],
+        out_specs=pl.BlockSpec((1, block_n), lambda b, i: (b, i)),
+        out_shape=jax.ShapeDtypeStruct((bh, n), jnp.float32),
+        interpret=interpret,
+    )(bits, u_pad, logz_pad, vnorm)

@@ -1,0 +1,67 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch minitron-8b \
+        --smoke --steps 200 --batch 8 --seq 512 --ckpt /tmp/ckpt
+
+``--smoke`` shrinks the architecture to its reduced config (same family /
+pattern) so a full train run fits on CPU; without it the full config is
+used (real accelerator fleets).  The loop is the fault-tolerant Trainer
+(checkpoint/restore, elastic mesh rebuild, straggler detection).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro.configs import get_config
+from repro.data import DataConfig
+from repro.optim import AdamWConfig
+from repro.optim.schedule import ScheduleConfig
+from repro.runtime.train_loop import Trainer, TrainLoopConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=512)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--ckpt", default="/tmp/repro_ckpt")
+    ap.add_argument("--checkpoint-every", type=int, default=50)
+    ap.add_argument("--state-bits", type=int, default=32, choices=[8, 32])
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    ocfg = AdamWConfig(
+        state_bits=args.state_bits,
+        schedule=ScheduleConfig(peak_lr=args.lr, warmup_steps=20,
+                                decay_steps=args.steps))
+    loop = TrainLoopConfig(total_steps=args.steps,
+                           checkpoint_every=args.checkpoint_every,
+                           accum=args.accum)
+    data = DataConfig(seq_len=args.seq, global_batch=args.batch,
+                      vocab_size=cfg.vocab_size)
+
+    trainer = Trainer(cfg, ocfg, loop, data, args.ckpt)
+    log = trainer.run()
+    first = [m["loss"] for m in log[:10]]
+    last = [m["loss"] for m in log[-10:]]
+    print(json.dumps({
+        "arch": cfg.name, "steps": len(log),
+        "loss_first10": sum(first) / max(len(first), 1),
+        "loss_last10": sum(last) / max(len(last), 1),
+        "mean_step_s": trainer.straggler.mean_latency,
+        "straggler_events": len(trainer.straggler.events),
+    }, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Composable model definitions (attention/MoE/Mamba-2 decoder stacks)."""
+
+from repro.models import attention, layers, mamba, moe, param, transformer
+from repro.models.transformer import (decode_cache_axes, decode_step,
+                                      forward_train, init_decode_caches,
+                                      init_model, loss_and_metrics, prefill)
+
+__all__ = [
+    "attention", "decode_cache_axes", "decode_step", "forward_train",
+    "init_decode_caches", "init_model", "layers", "loss_and_metrics",
+    "mamba", "moe", "param", "prefill", "transformer",
+]

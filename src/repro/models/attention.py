@@ -1,0 +1,481 @@
+"""GQA attention with pluggable sparse decode backends.
+
+Training/prefill: dense causal attention (XLA einsum path — the Pallas
+``flash_prefill`` kernel is the TPU fast path and is validated against the
+same math in tests).  Local layers apply a sliding-window mask.
+
+Decode: the KV cache is ``(B, KVH, N, hd)``.  Global layers dispatch on
+``cfg.attention_backend``:
+
+* ``socket``    — the paper's technique (Algorithms 1-3): packed hash bits +
+                  value norms live in the cache; scoring via the factorized
+                  soft-collision kernel; exact attention over top-k.
+* ``hard_lsh``  — same cached bits, hard collision counting (ablation).
+* ``quest``     — page min/max metadata + page top-k.
+* ``dense``     — full attention (baseline / roofline reference).
+
+Local (sliding-window) layers decode from a ring buffer of ``window`` slots
+— for gemma3's 5:1 pattern this keeps the long_500k cache bounded by the
+window on 52 of 62 layers (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import oracle
+from repro.configs.base import ModelConfig
+from repro.core import hashing, socket
+from repro.distributed import sharding as shd
+from repro.distributed.sharding import lsc
+from repro.models import param as pm
+from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, softcap
+
+__all__ = ["init_attention", "attention_train", "attention_prefill",
+           "attention_decode", "init_attention_cache", "socket_config_of"]
+
+NEG_INF = -1e30
+
+
+def socket_config_of(cfg: ModelConfig) -> socket.SocketConfig:
+    s = cfg.socket
+    return socket.SocketConfig(
+        num_planes=s.num_planes, num_tables=s.num_tables, tau=s.tau,
+        sparsity=s.sparsity, sink_tokens=s.sink_tokens,
+        window_tokens=s.window_tokens, min_k=s.min_k,
+        bits_storage=s.bits_storage, score_chunk=s.score_chunk,
+        score_dtype=s.score_dtype, selection=s.selection)
+
+
+def _eff_heads(cfg: ModelConfig) -> Tuple[int, int]:
+    """(num_heads, num_kv_heads) after optional zero-padding for TP."""
+    if not cfg.logical_pad_heads:
+        return cfg.num_heads, cfg.num_kv_heads
+    pad = 16
+
+    def up(x):
+        return ((x + pad - 1) // pad) * pad
+
+    h = up(cfg.num_heads)
+    kv = cfg.num_kv_heads
+    while h % kv:  # keep exact grouping
+        h += pad
+    return h, kv
+
+
+# ------------------------------------------------------------------ init
+
+def init_attention(cfg: ModelConfig, rng: jax.Array) -> Dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = _eff_heads(cfg)
+    k1, k2, k3, k4, k5 = jax.random.split(rng, 5)
+    s = 1.0 / np.sqrt(d)
+    so = 1.0 / np.sqrt(h * hd)
+    dtype = jnp.dtype(cfg.param_dtype)
+    params = {
+        "wq": pm.normal(k1, (d, h, hd), ("embed_w", "heads", None),
+                        stddev=s, dtype=dtype),
+        "wk": pm.normal(k2, (d, kv, hd), ("embed_w", "kv_heads", None),
+                        stddev=s, dtype=dtype),
+        "wv": pm.normal(k3, (d, kv, hd), ("embed_w", "kv_heads", None),
+                        stddev=s, dtype=dtype),
+        "wo": pm.normal(k4, (h, hd, d), ("heads", None, "embed_w"),
+                        stddev=so, dtype=dtype),
+    }
+    if cfg.logical_pad_heads and h != cfg.num_heads:
+        # zero the padded q heads and their output rows => exact function.
+        mask = (jnp.arange(h) < cfg.num_heads).astype(dtype)
+        params["wq"].value = params["wq"].value * mask[None, :, None]
+        params["wo"].value = params["wo"].value * mask[:, None, None]
+    if cfg.qk_norm:
+        params["q_norm"] = init_rmsnorm(hd)
+        params["k_norm"] = init_rmsnorm(hd)
+    # SOCKET hyperplanes (Algorithm 1): data-agnostic, never trained.
+    sset = cfg.socket
+    params["hash_w"] = pm.constant(
+        jax.random.normal(k5, (sset.num_tables, sset.num_planes, hd),
+                          jnp.float32),
+        ("tables", None, None))
+    return params
+
+
+# ------------------------------------------------------------- projections
+
+def _project_qkv(cfg: ModelConfig, params: Dict, x: jax.Array,
+                 positions: jax.Array):
+    cdt = jnp.dtype(cfg.compute_dtype)
+    x = x.astype(cdt)
+    q = jnp.einsum("btd,dhk->bthk", x, params["wq"].astype(cdt))
+    k = jnp.einsum("btd,dhk->bthk", x, params["wk"].astype(cdt))
+    v = jnp.einsum("btd,dhk->bthk", x, params["wv"].astype(cdt))
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q)
+        k = rmsnorm(params["k_norm"], k)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _merge_heads(cfg: ModelConfig, params: Dict, ctx: jax.Array) -> jax.Array:
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return jnp.einsum("bthk,hkd->btd", ctx.astype(cdt),
+                      params["wo"].astype(cdt))
+
+
+# ------------------------------------------------------------------ train
+
+def _use_repeat_kv(h_eff: int, kv: int) -> bool:
+    """GQA sharding strategy (DESIGN.md §4): the grouped (kv, g) einsum
+    layout cannot be sharded when kv_heads doesn't divide the model axis —
+    XLA then replicates *all* heads and the (B,H,T,S) logits explode.
+    Repeating K/V up to the flat q-head axis keeps 16-way head sharding at
+    the cost of a cheap KV broadcast (k/v are tiny next to the logits)."""
+    mesh = shd.current_mesh()
+    if mesh is None:
+        return False
+    model = dict(mesh.shape).get("model", 1)
+    return (kv % model != 0) and (h_eff % model == 0) and h_eff != kv
+
+
+def _attn_chunk(cfg: ModelConfig, qg: jax.Array, k: jax.Array, v: jax.Array,
+                q_offset, attn_type: str, scale: float,
+                repeat_kv: bool) -> jax.Array:
+    """Attention of a block of queries against the full K/V (exact,
+    full-row softmax).
+
+    grouped:   qg (B, cq, KV, G, hd); k/v (B, S, KV, hd)
+    repeat_kv: qg (B, cq, H, hd);     k/v (B, S, H, hd)  (pre-repeated)
+    """
+    cq = qg.shape[1]
+    s = k.shape[1]
+    if repeat_kv:
+        logits = jnp.einsum("bthd,bshd->bhts", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+    else:
+        logits = jnp.einsum("btkgd,bskd->bkgts", qg.astype(jnp.float32),
+                            k.astype(jnp.float32)) * scale
+    logits = softcap(logits, cfg.attn_logit_softcap)
+    ti = q_offset + jnp.arange(cq)[:, None]
+    si = jnp.arange(s)[None, :]
+    mask = si <= ti
+    if attn_type == "local":
+        mask &= (ti - si) < cfg.sliding_window
+    if repeat_kv:
+        logits = jnp.where(mask[None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        return jnp.einsum("bhts,bshd->bthd", w, v.astype(jnp.float32))
+    logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bkgts,bskd->btkgd", w, v.astype(jnp.float32))
+
+
+def attention_train(cfg: ModelConfig, params: Dict, x: jax.Array,
+                    positions: jax.Array, attn_type: str) -> jax.Array:
+    """Dense causal attention (optionally sliding-window) for training.
+
+    x: (B, T, d); positions: (B, T).  When ``cfg.attn_q_chunk`` divides T,
+    queries are processed in chunks under ``lax.scan`` so the live logits
+    buffer is (chunk, T) instead of (T, T) — the XLA-path equivalent of the
+    flash_prefill kernel's memory behaviour (exact same math).
+    """
+    b, t, d = x.shape
+    h_eff = params["wq"].shape[1]
+    kv = params["wk"].shape[1]
+    g = h_eff // kv
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    q = lsc(q, "batch", "seq", "q_heads", None)
+    scale = 1.0 / np.sqrt(cfg.head_dim)
+
+    repeat_kv = _use_repeat_kv(h_eff, kv)
+    if repeat_kv:
+        qg = q                                       # (b,t,h,hd)
+        k = lsc(jnp.repeat(k, g, axis=2), "batch", "seq", "q_heads", None)
+        v = lsc(jnp.repeat(v, g, axis=2), "batch", "seq", "q_heads", None)
+    else:
+        qg = q.reshape(b, t, kv, g, cfg.head_dim)
+
+    cq = cfg.attn_q_chunk
+    if cq and t > cq and t % cq == 0:
+        nc = t // cq
+        q_chunks = jnp.moveaxis(
+            qg.reshape(b, nc, cq, *qg.shape[2:]), 1, 0)
+        offsets = jnp.arange(nc, dtype=jnp.int32) * cq
+
+        def body(_, inp):
+            qc, off = inp
+            return None, _attn_chunk(cfg, qc, k, v, off, attn_type, scale,
+                                     repeat_kv)
+
+        _, ctx_chunks = jax.lax.scan(body, None, (q_chunks, offsets))
+        ctx = jnp.moveaxis(ctx_chunks, 0, 1)
+    else:
+        ctx = _attn_chunk(cfg, qg, k, v, 0, attn_type, scale, repeat_kv)
+    ctx = ctx.reshape(b, t, h_eff, cfg.head_dim).astype(x.dtype)
+    return _merge_heads(cfg, params, ctx)
+
+
+# ------------------------------------------------------------------ cache
+
+def init_attention_cache(cfg: ModelConfig, batch: int, capacity: int,
+                         attn_type: str, dtype=None,
+                         long_context: bool = False) -> Dict:
+    """Allocate one layer's decode cache (zeros); returns the pytree.
+
+    ``long_context`` switches the sequence axis to context-parallel
+    sharding (annotated logically; physical placement set by the launcher).
+    """
+    dtype = dtype or jnp.dtype(cfg.compute_dtype)
+    _, kv = _eff_heads(cfg)
+    hd = cfg.head_dim
+    if attn_type == "local":
+        cap = min(capacity, cfg.sliding_window)
+        return {
+            "k": jnp.zeros((batch, kv, cap, hd), dtype),
+            "v": jnp.zeros((batch, kv, cap, hd), dtype),
+        }
+    cache = {
+        "k": jnp.zeros((batch, kv, capacity, hd), dtype),
+        "v": jnp.zeros((batch, kv, capacity, hd), dtype),
+    }
+    backend = cfg.attention_backend
+    if backend in ("socket", "hard_lsh"):
+        scfg = socket_config_of(cfg)
+        if scfg.bits_storage == "packed":
+            w = hashing.num_words(scfg.num_tables, scfg.num_planes)
+            cache["bits"] = jnp.zeros((batch, kv, capacity, w), jnp.uint32)
+        else:
+            cache["bits"] = jnp.zeros(
+                (batch, kv, capacity, scfg.num_tables * scfg.num_planes),
+                jnp.int8)
+        cache["vnorm"] = jnp.zeros((batch, kv, capacity), jnp.bfloat16)
+    elif backend == "quest":
+        ps = 16
+        n_pages = (capacity + ps - 1) // ps
+        cache["kmin"] = jnp.full((batch, kv, n_pages, hd), np.inf, dtype)
+        cache["kmax"] = jnp.full((batch, kv, n_pages, hd), -np.inf, dtype)
+    return cache
+
+
+def cache_logical_axes(cfg: ModelConfig, attn_type: str,
+                       long_context: bool = False) -> Dict:
+    """Logical axis names mirroring :func:`init_attention_cache`."""
+    seq = "cache_seq_cp" if long_context else "cache_seq"
+    base = {"k": ("cache_batch", "cache_heads", seq, None),
+            "v": ("cache_batch", "cache_heads", seq, None)}
+    if attn_type == "local":
+        return {"k": ("cache_batch", "cache_heads", "cache_seq", None),
+                "v": ("cache_batch", "cache_heads", "cache_seq", None)}
+    backend = cfg.attention_backend
+    if backend in ("socket", "hard_lsh"):
+        base["bits"] = ("cache_batch", "cache_heads", seq, None)
+        base["vnorm"] = ("cache_batch", "cache_heads", seq)
+    elif backend == "quest":
+        base["kmin"] = ("cache_batch", "cache_heads", seq, None)
+        base["kmax"] = ("cache_batch", "cache_heads", seq, None)
+    return base
+
+
+# ---------------------------------------------------------------- prefill
+
+def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
+                      positions: jax.Array, attn_type: str,
+                      capacity: int) -> Tuple[jax.Array, Dict]:
+    """Forward over the prompt + build this layer's decode cache.
+
+    Output matches :func:`attention_train`; cache covers positions [0, T).
+    """
+    b, t, _ = x.shape
+    y = attention_train(cfg, params, x, positions, attn_type)
+    q, k, v = _project_qkv(cfg, params, x, positions)  # recompute, cheap
+    kc = jnp.swapaxes(k, 1, 2)   # (B,KV,T,hd)
+    vc = jnp.swapaxes(v, 1, 2)
+    cache = init_attention_cache(cfg, b, capacity, attn_type,
+                                 dtype=kc.dtype)
+    if attn_type == "local":
+        cap = cache["k"].shape[2]
+        # last `cap` tokens into ring slots (position p -> slot p % cap)
+        take = jnp.arange(cap)
+        src = jnp.maximum(t - cap, 0) + take          # positions kept
+        slot = src % cap
+        cache["k"] = cache["k"].at[:, :, slot].set(
+            jnp.take(kc, src, axis=2))
+        cache["v"] = cache["v"].at[:, :, slot].set(
+            jnp.take(vc, src, axis=2))
+        return y, cache
+    cache["k"] = cache["k"].at[:, :, :t].set(kc)
+    cache["v"] = cache["v"].at[:, :, :t].set(vc)
+    backend = cfg.attention_backend
+    if backend in ("socket", "hard_lsh"):
+        scfg = socket_config_of(cfg)
+        side = socket.precompute_key_hashes(
+            scfg, jax.lax.stop_gradient(params["hash_w"]), kc, vc)
+        cache["bits"] = cache["bits"].at[:, :, :t].set(side.bits)
+        cache["vnorm"] = cache["vnorm"].at[:, :, :t].set(
+            side.vnorm.astype(cache["vnorm"].dtype))
+    elif backend == "quest":
+        ps = 16
+        n_pages_t = (t + ps - 1) // ps
+        pad = n_pages_t * ps - t
+        kpad_min = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                           constant_values=np.inf)
+        kpad_max = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                           constant_values=-np.inf)
+        kmin = kpad_min.reshape(b, kc.shape[1], n_pages_t, ps,
+                                cfg.head_dim).min(axis=3)
+        kmax = kpad_max.reshape(b, kc.shape[1], n_pages_t, ps,
+                                cfg.head_dim).max(axis=3)
+        cache["kmin"] = cache["kmin"].at[:, :, :n_pages_t].set(kmin)
+        cache["kmax"] = cache["kmax"].at[:, :, :n_pages_t].set(kmax)
+    return y, cache
+
+
+# ----------------------------------------------------------------- decode
+
+def _decode_update_global(cfg: ModelConfig, params: Dict, cache: Dict,
+                          k_new: jax.Array, v_new: jax.Array,
+                          pos: jax.Array) -> Dict:
+    """Append the new token's K/V (+ backend metadata) at index ``pos``."""
+    cache = dict(cache)
+    kc = jnp.swapaxes(k_new, 1, 2)  # (B,KV,1,hd)
+    vc = jnp.swapaxes(v_new, 1, 2)
+    b, kv, _, hd = kc.shape
+    cache["k"] = jax.lax.dynamic_update_slice(
+        cache["k"], kc.astype(cache["k"].dtype), (0, 0, pos, 0))
+    cache["v"] = jax.lax.dynamic_update_slice(
+        cache["v"], vc.astype(cache["v"].dtype), (0, 0, pos, 0))
+    backend = cfg.attention_backend
+    if backend in ("socket", "hard_lsh"):
+        scfg = socket_config_of(cfg)
+        side = socket.precompute_key_hashes(scfg, params["hash_w"], kc, vc)
+        cache["bits"] = jax.lax.dynamic_update_slice(
+            cache["bits"], side.bits, (0, 0, pos, 0))
+        cache["vnorm"] = jax.lax.dynamic_update_slice(
+            cache["vnorm"], side.vnorm.astype(cache["vnorm"].dtype),
+            (0, 0, pos))
+    elif backend == "quest":
+        page = pos // 16
+        old_min = jax.lax.dynamic_slice(
+            cache["kmin"], (0, 0, page, 0), (b, kv, 1, hd))
+        old_max = jax.lax.dynamic_slice(
+            cache["kmax"], (0, 0, page, 0), (b, kv, 1, hd))
+        cache["kmin"] = jax.lax.dynamic_update_slice(
+            cache["kmin"], jnp.minimum(old_min, kc.astype(old_min.dtype)),
+            (0, 0, page, 0))
+        cache["kmax"] = jax.lax.dynamic_update_slice(
+            cache["kmax"], jnp.maximum(old_max, kc.astype(old_max.dtype)),
+            (0, 0, page, 0))
+    return cache
+
+
+def _hard_lsh_decode_scores(scfg: socket.SocketConfig, bits: jax.Array,
+                            u_signs: jax.Array) -> jax.Array:
+    """Hard collision counts from the same packed bits (tau->0 ablation)."""
+    l, p = scfg.num_tables, scfg.num_planes
+    k_signs = hashing.unpack_signs(bits, l, p)           # (B,KV,N,L,P)
+    agree = jnp.einsum("bknlp,bkglp->bkgnl", k_signs, u_signs)
+    return jnp.sum((agree >= p).astype(jnp.float32), axis=-1)
+
+
+def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
+                     cache: Dict, pos: jax.Array, attn_type: str,
+                     ) -> Tuple[jax.Array, Dict]:
+    """One decode step.  x: (B, 1, d); pos: scalar int32 (current index).
+
+    Returns (y (B,1,d), updated cache).
+    """
+    b = x.shape[0]
+    hd = cfg.head_dim
+    h_eff = params["wq"].shape[1]
+    kv = params["wk"].shape[1]
+    g = h_eff // kv
+    scale = 1.0 / np.sqrt(hd)
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(cfg, params, x, positions)
+    qg = jnp.transpose(q.reshape(b, 1, kv, g, hd), (0, 2, 3, 1, 4))
+    # qg: (B, KV, G, 1, hd)
+
+    if attn_type == "local":
+        cap = cache["k"].shape[2]
+        slot = pos % cap
+        cache = dict(cache)
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
+            (0, 0, slot, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
+            (0, 0, slot, 0))
+        # ring-slot absolute positions; invalid slots masked out
+        sl = jnp.arange(cap, dtype=jnp.int32)
+        ring_pos = pos - ((pos - sl) % cap)
+        valid = ring_pos >= 0
+        logits = jnp.einsum("bkgtd,bknd->bkgtn", qg.astype(jnp.float32),
+                            cache["k"].astype(jnp.float32)) * scale
+        logits = softcap(logits, cfg.attn_logit_softcap)
+        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        w = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
+                         cache["v"].astype(jnp.float32))
+    else:
+        cache = _decode_update_global(cfg, params, cache, k_new, v_new, pos)
+        length = pos + 1
+        backend = cfg.attention_backend
+        if backend == "dense":
+            ctx = oracle.dense_attention(qg, cache["k"], cache["v"],
+                                         scale=scale, length=length)
+        elif backend == "socket":
+            scfg = socket_config_of(cfg)
+            mesh = shd.current_mesh()
+            if cfg.decode_cp_axes and mesh is not None and any(
+                    a in mesh.shape for a in cfg.decode_cp_axes):
+                # §Perf: shard_map context-parallel path — local top-k per
+                # sequence shard + psum online-softmax merge; avoids
+                # materializing the (B,KVH,N) global score tensor
+                from repro.distributed.context_parallel import \
+                    context_parallel_socket_attend
+                ctx = context_parallel_socket_attend(
+                    scfg, mesh, cfg.decode_cp_axes, params["hash_w"], qg,
+                    cache["k"], cache["v"], cache["bits"],
+                    cache["vnorm"].astype(jnp.float32),
+                    length=length, scale=scale,
+                    batch_axes=cfg.decode_cp_batch_axes)
+            else:
+                ctx = socket.socket_attend(
+                    scfg, params["hash_w"], qg, cache["k"], cache["v"],
+                    socket.SocketCache(bits=cache["bits"],
+                                       vnorm=cache["vnorm"]),
+                    length=length, scale=scale)
+        elif backend == "hard_lsh":
+            scfg = socket_config_of(cfg)
+            n = cache["k"].shape[2]
+            u = socket.soft_hash_query(params["hash_w"], qg[..., 0, :])
+            u_signs = jnp.where(u >= 0, 1.0, -1.0)
+            scores = _hard_lsh_decode_scores(scfg, cache["bits"], u_signs)
+            scores = jnp.sum(scores, axis=2)
+            kq = socket.topk_budget(scfg, n)
+            idx, sel_mask = socket.value_aware_topk(
+                scfg, scores, cache["vnorm"].astype(jnp.float32), k=kq,
+                length=length, n_total=n)
+            k_sel = jnp.take_along_axis(cache["k"], idx[..., None], axis=2)
+            v_sel = jnp.take_along_axis(cache["v"], idx[..., None], axis=2)
+            ctx = socket.sparse_attention_over_subset(
+                qg, k_sel, v_sel, sel_mask, scale=scale)
+        elif backend == "quest":
+            from repro.baselines import quest as quest_mod
+            qcfg = quest_mod.QuestConfig(
+                page_size=16, sparsity=cfg.socket.sparsity,
+                sink_tokens=cfg.socket.sink_tokens,
+                window_tokens=cfg.socket.window_tokens)
+            state = quest_mod.QuestState(kmin=cache["kmin"],
+                                         kmax=cache["kmax"])
+            ctx = quest_mod.attend(qcfg, state, qg, cache["k"], cache["v"],
+                                   length=length, scale=scale)
+        else:
+            raise ValueError(backend)
+
+    ctx = jnp.transpose(ctx, (0, 3, 1, 2, 4)).reshape(b, 1, h_eff, hd)
+    return _merge_heads(cfg, params, ctx.astype(x.dtype)), cache

@@ -1,0 +1,95 @@
+"""Boxed parameters: value + logical sharding axes, in one pytree.
+
+Model ``init_*`` functions build trees of :class:`Boxed` leaves; the
+launcher strips them into (values, axes) with :func:`unbox`/:func:`axes_of`
+and converts axes to ``NamedSharding`` via ``distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Boxed", "normal", "zeros", "ones", "constant", "unbox",
+           "axes_of", "stack_boxed", "tree_paths_matching", "leaf_count"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class Boxed:
+    value: jax.Array
+    axes: Tuple[Optional[str], ...]
+
+    def tree_flatten(self):
+        return (self.value,), self.axes
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def shape(self):
+        return self.value.shape
+
+
+def _check(shape, axes):
+    if len(shape) != len(axes):
+        raise ValueError(f"axes {axes} do not match shape {shape}")
+
+
+def normal(rng: jax.Array, shape, axes, *, stddev: float = 1.0,
+           dtype=jnp.float32) -> Boxed:
+    _check(shape, axes)
+    return Boxed(jax.random.normal(rng, shape, dtype) * jnp.asarray(
+        stddev, dtype), tuple(axes))
+
+
+def zeros(shape, axes, *, dtype=jnp.float32) -> Boxed:
+    _check(shape, axes)
+    return Boxed(jnp.zeros(shape, dtype), tuple(axes))
+
+
+def ones(shape, axes, *, dtype=jnp.float32) -> Boxed:
+    _check(shape, axes)
+    return Boxed(jnp.ones(shape, dtype), tuple(axes))
+
+
+def constant(value: jax.Array, axes) -> Boxed:
+    _check(value.shape, axes)
+    return Boxed(value, tuple(axes))
+
+
+def unbox(tree):
+    return jax.tree_util.tree_map(
+        lambda b: b.value, tree, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def axes_of(tree):
+    return jax.tree_util.tree_map(
+        lambda b: b.axes, tree, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def stack_boxed(boxes):
+    """Stack a list of identically-structured Boxed trees along a new
+    leading 'groups' axis (for scan-over-groups parameter stacking)."""
+    def _stack(*bs):
+        return Boxed(jnp.stack([b.value for b in bs]),
+                     ("groups",) + bs[0].axes)
+    return jax.tree_util.tree_map(
+        _stack, *boxes, is_leaf=lambda x: isinstance(x, Boxed))
+
+
+def tree_paths_matching(tree, predicate: Callable[[str], bool]):
+    """Boolean mask pytree: True where the joined key-path satisfies
+    ``predicate`` (used for optimizer masks, e.g. freezing hash planes)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    mask = [predicate(jax.tree_util.keystr(path)) for path, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, mask)
+
+
+def leaf_count(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))

@@ -1,0 +1,348 @@
+"""The decoder stack: heterogeneous blocks, scan-over-groups, train /
+prefill / decode entry points.
+
+A model is ``pattern × num_groups + remainder`` blocks (configs.base).  The
+repeated pattern is executed under ``jax.lax.scan`` with group-stacked
+parameters so the lowered HLO contains ONE copy of the pattern body
+regardless of depth — essential for 48-62-layer architectures both for
+compile time (single-core CPU here, and real TPU fleets) and HLO size.
+Remat policy is applied to the scan body.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.distributed.sharding import lsc
+from repro.models import attention as attn
+from repro.models import mamba as mb
+from repro.models import moe as moe_mod
+from repro.models import param as pm
+from repro.models.layers import (apply_mlp, embed_tokens, init_embedding,
+                                 init_mlp, init_rmsnorm, lm_head, rmsnorm)
+
+__all__ = ["init_model", "forward_train", "loss_and_metrics", "prefill",
+           "decode_step", "init_decode_caches", "decode_cache_axes",
+           "model_flops_per_token"]
+
+
+# ------------------------------------------------------------------ blocks
+
+def _init_block(cfg: ModelConfig, rng: jax.Array, spec: LayerSpec) -> Dict:
+    k_mix, k_mlp = jax.random.split(rng)
+    params: Dict = {"norm_mix": init_rmsnorm(cfg.d_model)}
+    if spec.kind == "attn":
+        params["attn"] = attn.init_attention(cfg, k_mix)
+    else:
+        params["mamba"] = mb.init_mamba(cfg, k_mix)
+    if spec.mlp == "dense":
+        params["norm_mlp"] = init_rmsnorm(cfg.d_model)
+        params["mlp"] = init_mlp(cfg, k_mlp)
+    elif spec.mlp == "moe":
+        params["norm_mlp"] = init_rmsnorm(cfg.d_model)
+        params["moe"] = moe_mod.init_moe(cfg, k_mlp)
+    return params
+
+
+def _block_train(cfg: ModelConfig, params: Dict, spec: LayerSpec,
+                 x: jax.Array, positions: jax.Array):
+    aux = {"moe_lb_loss": jnp.float32(0), "moe_z_loss": jnp.float32(0)}
+    h = rmsnorm(params["norm_mix"], x)
+    if spec.kind == "attn":
+        h = attn.attention_train(cfg, params["attn"], h, positions,
+                                 spec.attn_type)
+    else:
+        h = mb.mamba_train(cfg, params["mamba"], h)
+    x = x + h
+    if spec.mlp == "dense":
+        x = x + apply_mlp(cfg, params["mlp"],
+                          rmsnorm(params["norm_mlp"], x))
+    elif spec.mlp == "moe":
+        y, aux = moe_mod.apply_moe(cfg, params["moe"],
+                                   rmsnorm(params["norm_mlp"], x))
+        x = x + y
+    return lsc(x, "batch", "act_seq", "embed"), aux
+
+
+def _block_prefill(cfg: ModelConfig, params: Dict, spec: LayerSpec,
+                   x: jax.Array, positions: jax.Array, capacity: int):
+    h = rmsnorm(params["norm_mix"], x)
+    if spec.kind == "attn":
+        h, cache = attn.attention_prefill(cfg, params["attn"], h, positions,
+                                          spec.attn_type, capacity)
+    else:
+        h, cache = mb.mamba_train(cfg, params["mamba"], h,
+                                  return_state=True)
+    x = x + h
+    if spec.mlp == "dense":
+        x = x + apply_mlp(cfg, params["mlp"], rmsnorm(params["norm_mlp"], x))
+    elif spec.mlp == "moe":
+        y, _ = moe_mod.apply_moe(cfg, params["moe"],
+                                 rmsnorm(params["norm_mlp"], x))
+        x = x + y
+    return lsc(x, "batch", "act_seq", "embed"), cache
+
+
+def _block_decode(cfg: ModelConfig, params: Dict, spec: LayerSpec,
+                  x: jax.Array, cache: Dict, pos: jax.Array):
+    h = rmsnorm(params["norm_mix"], x)
+    if spec.kind == "attn":
+        h, cache = attn.attention_decode(cfg, params["attn"], h, cache, pos,
+                                         spec.attn_type)
+    else:
+        h, cache = mb.mamba_decode(cfg, params["mamba"], h, cache)
+    x = x + h
+    if spec.mlp == "dense":
+        x = x + apply_mlp(cfg, params["mlp"], rmsnorm(params["norm_mlp"], x))
+    elif spec.mlp == "moe":
+        y, _ = moe_mod.apply_moe(cfg, params["moe"],
+                                 rmsnorm(params["norm_mlp"], x))
+        x = x + y
+    return x, cache
+
+
+def _block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                 capacity: int, long_context: bool):
+    if spec.kind == "attn":
+        return attn.init_attention_cache(cfg, batch, capacity,
+                                         spec.attn_type,
+                                         long_context=long_context)
+    return mb.init_mamba_cache(cfg, batch)
+
+
+def _block_cache_axes(cfg: ModelConfig, spec: LayerSpec, long_context: bool):
+    if spec.kind == "attn":
+        return attn.cache_logical_axes(cfg, spec.attn_type, long_context)
+    return mb.mamba_cache_logical_axes()
+
+
+# ------------------------------------------------------------------- model
+
+def init_model(cfg: ModelConfig, rng: jax.Array):
+    """Boxed parameter tree: {embed, groups, remainder, final_norm}."""
+    k_emb, k_grp, k_rem = jax.random.split(rng, 3)
+    params: Dict = {"embed": {}}
+    emb = init_embedding(cfg, k_emb)
+    if cfg.input_mode != "tokens":
+        emb.pop("table", None)     # frontend stub supplies embeddings
+    params["embed"] = emb
+
+    group_trees = []
+    for g in range(cfg.num_groups):
+        kg = jax.random.fold_in(k_grp, g)
+        tree = {}
+        for i, spec in enumerate(cfg.pattern):
+            tree[f"slot_{i}"] = _init_block(cfg, jax.random.fold_in(kg, i),
+                                            spec)
+        group_trees.append(tree)
+    params["groups"] = pm.stack_boxed(group_trees)
+
+    params["remainder"] = {
+        f"slot_{i}": _init_block(cfg, jax.random.fold_in(k_rem, i), spec)
+        for i, spec in enumerate(cfg.remainder)
+    }
+    params["final_norm"] = init_rmsnorm(cfg.d_model)
+    return params
+
+
+def _remat(cfg: ModelConfig, fn):
+    # prevent_cse=False: we only ever remat inside lax.scan, where the loop
+    # boundary already prevents CSE; True inserts barrier ops that XLA:CPU
+    # handles by duplicating the saved carry stack in f32 (2.5x temps).
+    if cfg.remat_policy == "none":
+        return fn
+    if cfg.remat_policy == "full":
+        return jax.checkpoint(fn, prevent_cse=False,
+                              policy=jax.checkpoint_policies.
+                              nothing_saveable)
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint(
+            fn, prevent_cse=False,
+            policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    raise ValueError(cfg.remat_policy)
+
+
+def _input_embed(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
+    if cfg.input_mode == "tokens":
+        return embed_tokens(cfg, params["embed"], batch["tokens"])
+    return lsc(batch["embeds"].astype(jnp.dtype(cfg.compute_dtype)),
+               "batch", "act_seq", "embed")
+
+
+def forward_train(cfg: ModelConfig, params, batch: Dict):
+    """Full forward.  batch: {tokens|embeds, (positions)} -> (logits, aux)."""
+    x = _input_embed(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = batch.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_body(carry, gparams):
+        x, lb, zl = carry
+        for i, spec in enumerate(cfg.pattern):
+            x, aux = _block_train(cfg, gparams[f"slot_{i}"], spec, x,
+                                  positions)
+            lb = lb + aux["moe_lb_loss"]
+            zl = zl + aux["moe_z_loss"]
+        # barrier: stops XLA from hoisting the backward pass's f32 upcast
+        # of the saved carry into the forward loop (which would materialize
+        # a duplicate f32 residual stack — observed 2.5x temp blowup).
+        x = jax.lax.optimization_barrier(x)
+        return (x, lb, zl), None
+
+    body = _remat(cfg, group_body)
+    (x, lb, zl), _ = jax.lax.scan(
+        body, (x, jnp.float32(0), jnp.float32(0)), params["groups"])
+
+    for i, spec in enumerate(cfg.remainder):
+        x, aux = _block_train(cfg, params["remainder"][f"slot_{i}"], spec,
+                              x, positions)
+        lb = lb + aux["moe_lb_loss"]
+        zl = zl + aux["moe_z_loss"]
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    n_moe = sum(1 for sp in cfg.layer_specs if sp.mlp == "moe") or 1
+    return logits, {"moe_lb_loss": lb / n_moe, "moe_z_loss": zl / n_moe}
+
+
+def loss_and_metrics(cfg: ModelConfig, params, batch: Dict,
+                     lb_coef: float = 0.01):
+    """Causal-LM loss.  batch[labels] (B,S) int32, -1 = padding."""
+    logits, aux = forward_train(cfg, params, batch)
+    labels = batch["labels"]
+    v = logits.shape[-1]
+    # mask out padded vocab entries
+    if v > cfg.vocab_size:
+        pad_mask = jnp.arange(v) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    valid = labels >= 0
+    labels_safe = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    token_ll = jnp.take_along_axis(logp, labels_safe[..., None],
+                                   axis=-1)[..., 0]
+    denom = jnp.maximum(jnp.sum(valid), 1)
+    ce = -jnp.sum(jnp.where(valid, token_ll, 0.0)) / denom
+    loss = ce + lb_coef * aux["moe_lb_loss"] + aux["moe_z_loss"]
+    metrics = {"loss": loss, "ce": ce, "tokens": denom,
+               "moe_lb_loss": aux["moe_lb_loss"]}
+    return loss, metrics
+
+
+# ----------------------------------------------------------------- serving
+
+def init_decode_caches(cfg: ModelConfig, batch: int, capacity: int,
+                       long_context: bool = False):
+    """Cache pytree: {"groups": stacked-per-group, "remainder": {...}}."""
+    def one_group():
+        return {f"slot_{i}": _block_cache(cfg, spec, batch, capacity,
+                                          long_context)
+                for i, spec in enumerate(cfg.pattern)}
+
+    groups = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[one_group()
+                                     for _ in range(cfg.num_groups)]) \
+        if cfg.num_groups > 1 else jax.tree_util.tree_map(
+            lambda x: x[None], one_group())
+    rem = {f"slot_{i}": _block_cache(cfg, spec, batch, capacity,
+                                     long_context)
+           for i, spec in enumerate(cfg.remainder)}
+    return {"groups": groups, "remainder": rem}
+
+
+def decode_cache_axes(cfg: ModelConfig, long_context: bool = False):
+    groups = {f"slot_{i}": jax.tree_util.tree_map(
+        lambda ax: ("groups",) + tuple(ax) if isinstance(ax, tuple) else ax,
+        _block_cache_axes(cfg, spec, long_context),
+        is_leaf=lambda x: isinstance(x, tuple))
+        for i, spec in enumerate(cfg.pattern)}
+    rem = {f"slot_{i}": _block_cache_axes(cfg, spec, long_context)
+           for i, spec in enumerate(cfg.remainder)}
+    return {"groups": groups, "remainder": rem}
+
+
+def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int):
+    """Process the prompt, returning (last-token logits, caches)."""
+    x = _input_embed(cfg, params, batch)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+
+    def group_body(x, gparams):
+        caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, caches[f"slot_{i}"] = _block_prefill(
+                cfg, gparams[f"slot_{i}"], spec, x, positions, capacity)
+        return x, caches
+
+    x, group_caches = jax.lax.scan(group_body, x, params["groups"])
+
+    rem_caches = {}
+    for i, spec in enumerate(cfg.remainder):
+        x, rem_caches[f"slot_{i}"] = _block_prefill(
+            cfg, params["remainder"][f"slot_{i}"], spec, x, positions,
+            capacity)
+
+    x = rmsnorm(params["final_norm"], x[:, -1:])
+    logits = lm_head(cfg, params["embed"], x)
+    return logits, {"groups": group_caches, "remainder": rem_caches}
+
+
+def decode_step(cfg: ModelConfig, params, caches, inputs: jax.Array,
+                pos: jax.Array):
+    """One token for the whole stack.
+
+    inputs: (B, 1) token ids or (B, 1, d) embeddings; pos: scalar int32.
+    Returns (logits (B,1,V), updated caches).
+    """
+    if cfg.input_mode == "tokens":
+        x = embed_tokens(cfg, params["embed"], inputs)
+    else:
+        x = inputs.astype(jnp.dtype(cfg.compute_dtype))
+
+    def group_body(x, xs):
+        gparams, gcache = xs
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, new_caches[f"slot_{i}"] = _block_decode(
+                cfg, gparams[f"slot_{i}"], spec, x, gcache[f"slot_{i}"], pos)
+        return x, new_caches
+
+    x, new_group_caches = jax.lax.scan(
+        group_body, x, (params["groups"], caches["groups"]))
+
+    new_rem = {}
+    for i, spec in enumerate(cfg.remainder):
+        x, new_rem[f"slot_{i}"] = _block_decode(
+            cfg, params["remainder"][f"slot_{i}"], spec, x,
+            caches["remainder"][f"slot_{i}"], pos)
+
+    x = rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    return logits, {"groups": new_group_caches, "remainder": new_rem}
+
+
+# ------------------------------------------------------------- accounting
+
+def model_flops_per_token(cfg: ModelConfig, seq_len: int,
+                          training: bool = True) -> float:
+    """MODEL_FLOPS: 6·N_active·D-style accounting (+ attention quadratic
+    term), for the roofline's useful-compute ratio."""
+    n_active = cfg.active_param_count()
+    mult = 6.0 if training else 2.0
+    flops = mult * n_active
+    # attention score+value flops per token: 2 * 2 * H * hd * attended
+    attended = 0.0
+    for spec in cfg.layer_specs:
+        if spec.kind != "attn":
+            continue
+        span = seq_len / 2 if spec.attn_type == "global" else min(
+            cfg.sliding_window, seq_len / 2)
+        attended += span
+    flops += mult / 3 * 2 * 2 * cfg.num_heads * cfg.head_dim * attended * 3
+    return flops

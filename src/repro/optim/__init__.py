@@ -1,0 +1,7 @@
+"""Optimizers: AdamW (+8-bit states), LR schedules, gradient compression."""
+
+from repro.optim.adamw import AdamWConfig, adamw_update, init_adamw
+from repro.optim.schedule import ScheduleConfig, learning_rate
+
+__all__ = ["AdamWConfig", "ScheduleConfig", "adamw_update", "init_adamw",
+           "learning_rate"]

@@ -1,0 +1,93 @@
+"""Blockwise-quantized optimizer moments (8-bit Adam states).
+
+Required to fit the ≥100B-parameter assigned architectures on 16 GB/chip
+meshes: fp32 (m, v) for llama4-maverick-400b is 3.2 TB (12.5 GB/chip on 512
+chips) — int8 moments with per-block fp32 scales cut that 4x
+(EXPERIMENTS.md §Dry-run memory table).
+
+Layout: quantization blocks run along the LAST axis only, so ``q`` keeps
+the parameter's rank and leading-dim shapes — and therefore the
+parameter's sharding.  (An earlier flat layout forced XLA to reshape
+sharded weights to 1-D inside the update, which replicates the full fp32
+moment on every device — a measured 4x/21 GB-per-buffer temp blowup on
+mixtral.  Never flatten a sharded tensor.)
+
+The second moment ``v`` spans many orders of magnitude inside a block;
+linear int8 would underflow small entries to 0 and explode their updates
+through ``m / (sqrt(0)+eps)``.  ``v`` therefore goes through a 6th-root
+companding transform (``power=6``; ``m`` uses power=3) — ratios of 4e9 inside a block still
+quantize to non-zero bins; tests show a companded-int8 Adam trajectory
+tracks fp32 within a few percent.  (bitsandbytes solves this with a
+dynamic-exponent code; root-companding is the TPU-friendly equivalent —
+pure VPU math, no LUT.)
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Block size 16: must DIVIDE every sharded last-dim chunk (d_model/16 or
+# d_ff/16 on the 16-way axes, down to 336 for gemma3) — a block straddling
+# a shard boundary forces XLA to all-gather the whole tensor just to
+# reshape for (de)quantization (measured 60 GB/step on llama4 — §Perf).
+# Cost: one f32 scale per 16 int8 values (25% overhead vs 1.6% at 512).
+BLOCK = 16
+
+__all__ = ["quantize", "dequantize", "qzeros_like", "BLOCK", "padded_dim"]
+
+
+def padded_dim(d: int) -> int:
+    blk = min(BLOCK, max(d, 1))
+    nb = (d + blk - 1) // blk
+    return nb * blk
+
+
+def _blocks(x: jax.Array) -> Tuple[jax.Array, int, int]:
+    """Pad the last dim to a BLOCK multiple; return (x_padded, nb, blk)."""
+    if x.ndim == 0:
+        x = x[None]
+    d = x.shape[-1]
+    blk = min(BLOCK, max(d, 1))
+    nb = (d + blk - 1) // blk
+    pad = nb * blk - d
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, nb, blk
+
+
+def qzeros_like(x: jax.Array) -> Dict[str, jax.Array]:
+    shape = x.shape if x.ndim else (1,)
+    d = shape[-1]
+    blk = min(BLOCK, max(d, 1))
+    nb = (d + blk - 1) // blk
+    return {"q": jnp.zeros(shape[:-1] + (nb * blk,), jnp.int8),
+            "scale": jnp.zeros(shape[:-1] + (nb,), jnp.float32)}
+
+
+def quantize(x: jax.Array, power: int = 1) -> Dict[str, jax.Array]:
+    xp, nb, blk = _blocks(x.astype(jnp.float32))
+    g = xp.reshape(*xp.shape[:-1], nb, blk)
+    if power != 1:
+        g = jnp.sign(g) * jnp.abs(g) ** (1.0 / power)
+    scale = jnp.max(jnp.abs(g), axis=-1) / 127.0            # (..., nb)
+    scale_safe = jnp.maximum(scale, 1e-30)
+    q = jnp.clip(jnp.round(g / scale_safe[..., None]), -127, 127)
+    return {"q": q.astype(jnp.int8).reshape(xp.shape),
+            "scale": scale.astype(jnp.float32)}
+
+
+def dequantize(qs: Dict[str, jax.Array], shape: Tuple[int, ...],
+               power: int = 1) -> jax.Array:
+    d = shape[-1] if shape else 1
+    nb = qs["scale"].shape[-1]
+    blk = qs["q"].shape[-1] // nb
+    g = qs["q"].astype(jnp.float32).reshape(*qs["q"].shape[:-1], nb, blk)
+    g = g * qs["scale"][..., None]
+    if power != 1:
+        g = jnp.sign(g) * jnp.abs(g) ** power
+    out = g.reshape(*qs["q"].shape[:-1], nb * blk)[..., :d]
+    return out.reshape(shape)

@@ -1,0 +1,37 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+__all__ = ["ScheduleConfig", "learning_rate"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    end_lr_frac: float = 0.1
+    kind: str = "cosine"     # "cosine" | "linear" | "constant"
+
+
+def learning_rate(cfg: ScheduleConfig, step: jnp.ndarray) -> jnp.ndarray:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.kind == "constant":
+        decay = 1.0
+    else:
+        frac = jnp.clip((step - cfg.warmup_steps) /
+                        jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+        if cfg.kind == "cosine":
+            decay = cfg.end_lr_frac + (1 - cfg.end_lr_frac) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        elif cfg.kind == "linear":
+            decay = 1.0 - (1.0 - cfg.end_lr_frac) * frac
+        else:
+            raise ValueError(cfg.kind)
+    return cfg.peak_lr * warm * decay

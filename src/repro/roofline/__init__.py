@@ -1,0 +1,8 @@
+"""Roofline derivation from compiled HLO (see EXPERIMENTS.md §Roofline)."""
+
+from repro.roofline.analysis import (HW, RooflineTerms,
+                                     parse_collective_bytes,
+                                     roofline_from_compiled)
+
+__all__ = ["HW", "RooflineTerms", "parse_collective_bytes",
+           "roofline_from_compiled"]

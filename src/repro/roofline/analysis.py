@@ -1,0 +1,138 @@
+"""Roofline term derivation from compiled XLA artifacts.
+
+Three terms per (arch × shape × mesh), per the assignment:
+
+    compute    = HLO_FLOPs      / (chips × peak_FLOP/s)
+    memory     = HLO_bytes      / (chips × HBM_bw)
+    collective = collective_B   / (chips × link_bw)
+
+``compiled.cost_analysis()`` supplies FLOPs / bytes-accessed of the
+*partitioned per-device* module (verified empirically by
+``tests/test_roofline.py::test_cost_analysis_is_per_device``), so the
+global figures are per-device × chips — the formulas below keep everything
+in per-device terms and divide once.
+
+Collective bytes are NOT in cost_analysis: :func:`parse_collective_bytes`
+scans the optimized HLO text and sums the result-shape bytes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute
+(async *-start ops counted once, *-done skipped).
+
+Hardware constants: TPU v5e — 197 bf16 TFLOP/s, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+__all__ = ["HW", "parse_collective_bytes", "roofline_from_compiled",
+           "RooflineTerms"]
+
+HW = {
+    "peak_flops": 197e12,    # bf16 / chip
+    "hbm_bw": 819e9,         # B/s / chip
+    "ici_bw": 50e9,          # B/s / link
+}
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(\(?[a-z0-9\[\],{}/#\s_]*\)?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"(pred|[a-z]+[0-9]+[a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def parse_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes per collective kind over the HLO module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind = m.group(1), m.group(2).lower()
+        b = _shape_bytes(shape_str)
+        out[kind] = out.get(kind, 0) + b
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    flops_per_device: float
+    hbm_bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / HW["peak_flops"]
+
+    @property
+    def memory_s(self) -> float:
+        return self.hbm_bytes_per_device / HW["hbm_bw"]
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / HW["ici_bw"]
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "hbm_bytes_per_device": self.hbm_bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+        }
+
+
+def roofline_from_compiled(compiled, chips: int,
+                           hlo_text: Optional[str] = None) -> RooflineTerms:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    byt = float(cost.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = parse_collective_bytes(text)
+    return RooflineTerms(
+        flops_per_device=flops,
+        hbm_bytes_per_device=byt,
+        collective_bytes_per_device=float(coll.get("total", 0)),
+        chips=chips,
+    )

@@ -1,0 +1,1 @@
+"""Runtime: fault-tolerant train loop, serve loop, straggler detection."""

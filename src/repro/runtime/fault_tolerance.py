@@ -1,0 +1,71 @@
+"""Failure handling + elastic reconfiguration for the training supervisor.
+
+Semantics implemented (and exercised by tests with injected failures):
+
+* **detect**: any exception escaping a step (device loss manifests as
+  ``XlaRuntimeError``; we also accept an injectable ``FailureInjector`` for
+  deterministic testing) marks the step failed.
+* **restore**: roll back to the newest checkpoint; the data loader state is
+  restored from the same checkpoint, so no batch is skipped or repeated.
+* **elastic rescale**: the supervisor asks ``mesh_factory(devices)`` for a
+  new (possibly smaller) mesh built from the devices that are still
+  healthy, re-lowers the step function, and reshards the restored state
+  onto the new topology (Checkpointer.restore(shardings=...)).  Batch
+  size is kept constant by increasing per-device batch (the data-parallel
+  dimension of the global batch is resharded, not shrunk).
+* **give up** after ``max_failures`` consecutive failures.
+
+On this single-process container "losing a host" is simulated by shrinking
+the device list handed to ``mesh_factory``; the full restore→reshard→
+resume path is real.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Callable, List, Optional
+
+__all__ = ["FailureInjector", "RetryPolicy"]
+
+
+class FailureInjector:
+    """Deterministic fault injection for tests and chaos drills.
+
+    ``schedule`` maps step -> exception to raise (or "lose_device:<n>" to
+    simulate shrinking the fleet by n devices before the raise).
+    """
+
+    def __init__(self, schedule: Optional[dict] = None):
+        self.schedule = dict(schedule or {})
+        self.lost_devices = 0
+
+    def maybe_fail(self, step: int):
+        action = self.schedule.pop(step, None)
+        if action is None:
+            return
+        if isinstance(action, str) and action.startswith("lose_device"):
+            n = int(action.split(":")[1]) if ":" in action else 1
+            self.lost_devices += n
+            raise RuntimeError(
+                f"injected device loss at step {step} (-{n} devices)")
+        if isinstance(action, BaseException):
+            raise action
+        raise RuntimeError(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    max_consecutive_failures: int = 3
+    backoff_s: float = 0.0      # no real sleep in tests
+
+    def __post_init__(self):
+        self._consecutive = 0
+
+    def record_success(self):
+        self._consecutive = 0
+
+    def record_failure(self) -> bool:
+        """Returns True if training should keep retrying."""
+        self._consecutive += 1
+        return self._consecutive <= self.max_consecutive_failures

@@ -1,0 +1,31 @@
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose — unit/smoke tests must see exactly
+# one device (the dry-run sets its own 512-device flag in its own process).
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+@pytest.fixture
+def rng():
+    import jax
+    return jax.random.PRNGKey(0)
+
+
+def run_subprocess_devices(code: str, devices: int = 8,
+                           timeout: int = 600) -> str:
+    """Run ``code`` in a fresh python with N host-platform devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    assert proc.returncode == 0, (
+        f"subprocess failed\nSTDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}")
+    return proc.stdout

@@ -1,0 +1,126 @@
+"""Baseline scorers: each must retrieve a planted near neighbour; MagicPig
+estimator accuracy; PQ build determinism; budget accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.baselines import (hard_lsh, hash_attn, magicpig, oracle, pqcache,
+                             quest)
+from repro.core import socket, hashing
+
+
+def _planted(rng, d=64, n=512, target=37):
+    kk, kv, kq = jax.random.split(rng, 3)
+    keys = jax.random.normal(kk, (n, d))
+    values = jax.random.normal(kv, (n, d))
+    q = 2.0 * keys[target] + 0.05 * jax.random.normal(kq, (d,))
+    return keys, values, q
+
+
+def test_oracle_scorer(rng):
+    keys, values, q = _planted(rng)
+    st = oracle.build(None, rng, keys, values)
+    assert int(jnp.argmax(oracle.score(st, q))) == 37
+
+
+def test_hard_lsh_finds_neighbor(rng):
+    keys, values, q = _planted(rng)
+    cfg = hard_lsh.HardLSHConfig(num_planes=2, num_tables=300)
+    st = hard_lsh.build(cfg, rng, keys, values)
+    s = hard_lsh.score(st, cfg, q)
+    assert int(jnp.argmax(s)) == 37
+    assert cfg.bits_per_token == 600
+
+
+def test_hash_attn_finds_neighbor(rng):
+    keys, values, q = _planted(rng)
+    cfg = hash_attn.HashAttnConfig(num_bits=128)
+    st = hash_attn.build(cfg, rng, keys, values)
+    assert int(jnp.argmax(hash_attn.score(st, cfg, q))) == 37
+
+
+def test_quest_page_bounds(rng):
+    keys, values, q = _planted(rng)
+    cfg = quest.QuestConfig(page_size=16)
+    st = quest.build(cfg, rng, keys, values)
+    ps = quest.score_pages(st, q)
+    assert int(jnp.argmax(ps)) == 37 // 16
+    # upper bound property: page bound >= any member's true score
+    true = keys @ q
+    for page in range(4):
+        members = true[page * 16:(page + 1) * 16]
+        assert float(ps[page]) >= float(members.max()) - 1e-4
+
+
+def test_pqcache_scores_and_determinism(rng):
+    keys, values, q = _planted(rng)
+    cfg = pqcache.PQConfig(num_subspaces=16, nbits=4, kmeans_iters=4)
+    st1 = pqcache.build(cfg, rng, keys, values)
+    st2 = pqcache.build(cfg, rng, keys, values)
+    np.testing.assert_array_equal(np.asarray(st1.codes),
+                                  np.asarray(st2.codes))
+    s = pqcache.score(st1, cfg, q)
+    # ADC approximates inner products
+    corr = float(jnp.corrcoef(s, keys @ q)[0, 1])
+    assert corr > 0.7, corr
+    assert int(jnp.argmax(s)) == 37
+
+
+def test_magicpig_estimator_reasonable(rng):
+    keys, values, q = _planted(rng)
+    cfg = magicpig.MagicPigConfig(num_planes=4, num_tables=64,
+                                  min_collisions=1)
+    st = magicpig.build(cfg, rng, keys, values)
+    y = magicpig.attend_estimate(cfg, st, q, keys, values, scale=0.125)
+    ref = oracle.dense_attention(q[None, None, None, None],
+                                 keys[None, None], values[None, None],
+                                 scale=0.125)[0, 0, 0, 0]
+    rel = float(jnp.linalg.norm(y - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.25, rel
+
+
+def test_socket_vs_hard_lsh_at_equal_budget(rng):
+    """The paper's two hard-LSH findings at a 600-bit budget (Tables 2/7):
+    (a) hard LSH at SOCKET's own (P=10, L=60) collapses (Table 2: avg
+    score 10 vs 85); (b) the best *tuned* hard LSH (P=2, L=300) is merely
+    slightly worse — SOCKET matches or beats it."""
+    d, n, k = 64, 2048, 64
+
+    def recall_for(score_fn, q, true_top):
+        got = set(np.asarray(jax.lax.top_k(score_fn(q), k)[1]).tolist())
+        return len(got & true_top) / k
+
+    kk, kq = jax.random.split(rng)
+    keys = jax.random.normal(kk, (n, d))
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.4)
+    w = hashing.make_hash_params(jax.random.fold_in(rng, 1), d, 10, 60)
+    signs = hashing.hash_keys_signs(w, keys)
+    packed = hashing.pack_signs(signs)
+    h_tuned = hard_lsh.HardLSHConfig(num_planes=2, num_tables=300)
+    st_tuned = hard_lsh.build(h_tuned, jax.random.fold_in(rng, 2), keys,
+                              keys)
+    h_same = hard_lsh.HardLSHConfig(num_planes=10, num_tables=60)
+    st_same = hard_lsh.build(h_same, jax.random.fold_in(rng, 3), keys,
+                             keys)
+
+    r = {"socket": [], "hard_tuned": [], "hard_same": []}
+    for trial in range(8):
+        kt = jax.random.fold_in(kq, trial)
+        q = keys[trial * 10] + 0.5 * jax.random.normal(kt, (d,))
+        true_top = set(np.asarray(jax.lax.top_k(keys @ q, k)[1]).tolist())
+        r["socket"].append(recall_for(
+            lambda qq: socket.soft_scores_factorized(
+                cfg, packed, socket.soft_hash_query(w, qq)), q, true_top))
+        r["hard_tuned"].append(recall_for(
+            lambda qq: hard_lsh.score(st_tuned, h_tuned, qq), q, true_top))
+        r["hard_same"].append(recall_for(
+            lambda qq: hard_lsh.score(st_same, h_same, qq), q, true_top))
+
+    m = {key: float(np.mean(v)) for key, v in r.items()}
+    # (a) Table 2: hard LSH at (10, 60) is catastrophically worse
+    assert m["socket"] > m["hard_same"] + 0.2, m
+    # (b) Table 7: SOCKET >= the best tuned hard LSH (within noise)
+    assert m["socket"] >= m["hard_tuned"] - 0.05, m
+    assert m["socket"] > 0.45, m

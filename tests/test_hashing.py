@@ -1,0 +1,67 @@
+"""Bit-packing / hashing invariants (property-based)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@settings(max_examples=25, deadline=None)
+@given(l=st.integers(1, 70), p=st.integers(1, 16), n=st.integers(1, 40))
+def test_pack_unpack_roundtrip(l, p, n):
+    rng = np.random.default_rng(l * 1000 + p * 10 + n)
+    signs = jnp.asarray(rng.random((n, l, p)) > 0.5)
+    packed = hashing.pack_signs(signs)
+    assert packed.dtype == jnp.uint32
+    assert packed.shape == (n, hashing.num_words(l, p))
+    back = hashing.unpack_signs(packed, l, p)
+    assert jnp.all((back > 0) == signs)
+    assert set(np.unique(np.asarray(back))) <= {-1.0, 1.0}
+
+
+@settings(max_examples=20, deadline=None)
+@given(p=st.integers(1, 12))
+def test_num_words_alignment(p):
+    # kernel layout invariant: W*32 is always a multiple of P
+    for l in (1, 7, 37, 60):
+        w = hashing.num_words(l, p)
+        assert w * 32 >= l * p
+        assert (w * 32) % p == 0
+
+
+def test_bucket_ids_match_bits(rng):
+    w = hashing.make_hash_params(rng, 16, 6, 4)
+    keys = jax.random.normal(jax.random.fold_in(rng, 1), (32, 16))
+    signs = hashing.hash_keys_signs(w, keys)
+    ids = hashing.signs_to_bucket_ids(signs)
+    assert ids.shape == (32, 4)
+    assert int(ids.max()) < 64 and int(ids.min()) >= 0
+    # bit i of the id is plane i's sign
+    for plane in range(6):
+        bit = (np.asarray(ids) >> plane) & 1
+        assert np.array_equal(bit, np.asarray(signs[..., plane]).astype(int))
+
+
+def test_hypercube_corners():
+    c = hashing.hypercube_corners(4)
+    assert c.shape == (16, 4)
+    assert len(np.unique(c, axis=0)) == 16
+    assert set(np.unique(c)) == {-1.0, 1.0}
+
+
+def test_collision_prob_matches_angular_kernel(rng):
+    """SimHash identity: P[collision on one plane] = 1 - theta/pi."""
+    d = 24
+    k1, k2 = jax.random.split(rng)
+    a = jax.random.normal(k1, (d,))
+    b = a + 0.5 * jax.random.normal(k2, (d,))
+    cos = float(a @ b / (jnp.linalg.norm(a) * jnp.linalg.norm(b)))
+    expected = 1.0 - np.arccos(cos) / np.pi
+    w = hashing.make_hash_params(jax.random.fold_in(rng, 7), d, 1, 20000)
+    sa = hashing.hash_keys_signs(w, a[None])[0, :, 0]
+    sb = hashing.hash_keys_signs(w, b[None])[0, :, 0]
+    emp = float(jnp.mean(sa == sb))
+    assert abs(emp - expected) < 0.02

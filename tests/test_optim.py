@@ -1,0 +1,128 @@
+"""Optimizer tests: AdamW vs a literal numpy reference, masks, clipping,
+8-bit states (roundtrip property + convergence equivalence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.optim import AdamWConfig, adamw_update, init_adamw
+from repro.optim import quantized_state as q8
+from repro.optim.adamw import is_trainable_path, wants_weight_decay
+from repro.optim.schedule import ScheduleConfig, learning_rate
+
+
+def _np_adamw(w, g_fn, steps, lr, b1=0.9, b2=0.95, eps=1e-8, wd=0.0):
+    m = np.zeros_like(w)
+    v = np.zeros_like(w)
+    for t in range(1, steps + 1):
+        g = g_fn(w)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        upd = (m / (1 - b1 ** t)) / (np.sqrt(v / (1 - b2 ** t)) + eps)
+        w = w - lr * (upd + wd * w)
+    return w
+
+
+def test_adamw_matches_numpy_reference():
+    sched = ScheduleConfig(peak_lr=0.05, warmup_steps=0, kind="constant")
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip_norm=1e9, schedule=sched)
+    w0 = np.linspace(-2, 2, 16).astype(np.float32)
+    g_fn = lambda w: 2 * (w - 0.5)
+
+    params = {"w": jnp.asarray(w0)}
+    state = init_adamw(cfg, params)
+    for _ in range(25):
+        g = {"w": jnp.asarray(g_fn(np.asarray(params["w"])))}
+        params, state, _ = adamw_update(cfg, g, state, params)
+    ref = _np_adamw(w0, g_fn, 25, 0.05)
+    np.testing.assert_allclose(np.asarray(params["w"]), ref, atol=1e-5)
+
+
+def test_weight_decay_applied_with_mask():
+    sched = ScheduleConfig(peak_lr=0.1, warmup_steps=0, kind="constant")
+    cfg = AdamWConfig(weight_decay=0.5, grad_clip_norm=1e9, schedule=sched)
+    params = {"dense_w": jnp.ones((4, 4)), "norm_scale": jnp.ones((4,))}
+    state = init_adamw(cfg, params)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    new_p, _, _ = adamw_update(cfg, zeros, state, params)
+    assert float(jnp.max(new_p["dense_w"])) < 1.0      # decayed
+    assert float(jnp.max(jnp.abs(new_p["norm_scale"] - 1.0))) < 1e-6
+
+
+def test_grad_clipping():
+    sched = ScheduleConfig(peak_lr=1.0, warmup_steps=0, kind="constant")
+    cfg = AdamWConfig(weight_decay=0.0, grad_clip_norm=1.0, schedule=sched)
+    params = {"w": jnp.zeros((4,))}
+    state = init_adamw(cfg, params)
+    huge = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(cfg, huge, state, params)
+    assert float(metrics["grad_norm"]) > 1e6  # reported pre-clip
+
+
+def test_hash_planes_frozen():
+    assert not is_trainable_path("groups/slot_0/attn/hash_w")
+    assert is_trainable_path("groups/slot_0/attn/wq")
+    sched = ScheduleConfig(peak_lr=0.1, warmup_steps=0, kind="constant")
+    cfg = AdamWConfig(schedule=sched)
+    params = {"hash_w": jnp.ones((3, 3)), "w": jnp.ones((3,))}
+    state = init_adamw(cfg, params)
+    g = {"hash_w": jnp.ones((3, 3)), "w": jnp.ones((3,))}
+    new_p, _, _ = adamw_update(cfg, g, state, params)
+    np.testing.assert_array_equal(np.asarray(new_p["hash_w"]),
+                                  np.ones((3, 3)))
+    assert float(jnp.max(jnp.abs(new_p["w"] - 1.0))) > 0
+
+
+def test_schedule_shapes():
+    sched = ScheduleConfig(peak_lr=1.0, warmup_steps=10, decay_steps=100,
+                           kind="cosine", end_lr_frac=0.1)
+    lrs = [float(learning_rate(sched, jnp.int32(s)))
+           for s in (0, 5, 10, 55, 100, 200)]
+    assert lrs[0] == 0.0
+    assert abs(lrs[1] - 0.5) < 1e-6          # mid-warmup
+    assert abs(lrs[2] - 1.0) < 1e-6          # peak
+    assert lrs[3] < lrs[2]
+    assert abs(lrs[4] - 0.1) < 1e-6          # end
+    assert abs(lrs[5] - 0.1) < 1e-6          # clamped
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 5000), power=st.sampled_from([1, 2, 3, 4, 6]),
+       scale=st.floats(1e-6, 1e3))
+def test_q8_roundtrip_bounded_error(n, power, scale):
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.normal(size=(n,)) * scale)
+    if power % 2 == 0:
+        x = jnp.abs(x)
+    qs = q8.quantize(x, power=power)
+    back = q8.dequantize(qs, x.shape, power=power)
+    # companding: relative error within a block bounded by ~power/127
+    tol = (power * 1.2 / 127) * float(jnp.max(jnp.abs(x))) + 1e-9
+    assert float(jnp.max(jnp.abs(back - x))) <= tol * 1.5
+
+
+def test_q8_preserves_leading_shape():
+    x = jnp.ones((3, 5, 700))
+    qs = q8.quantize(x)
+    assert qs["q"].shape[:2] == (3, 5)
+    assert qs["scale"].shape[:2] == (3, 5)
+    back = q8.dequantize(qs, x.shape)
+    assert back.shape == x.shape
+
+
+def test_q8_adam_converges_like_fp32():
+    sched = ScheduleConfig(peak_lr=0.1, warmup_steps=0, kind="constant")
+    loss = lambda p: jnp.sum((p["w"] - 1.0) ** 2)
+    results = {}
+    for bits in (8, 32):
+        cfg = AdamWConfig(weight_decay=0.0, state_bits=bits,
+                          schedule=sched)
+        params = {"w": jax.random.normal(jax.random.PRNGKey(0), (2048,))}
+        state = init_adamw(cfg, params)
+        for _ in range(100):
+            g = jax.grad(loss)(params)
+            params, state, _ = adamw_update(cfg, g, state, params)
+        results[bits] = float(jnp.max(jnp.abs(params["w"] - 1.0)))
+    assert results[8] < max(2 * results[32], 0.05), results

@@ -1,0 +1,187 @@
+"""SOCKET core invariants: the factorization identity, hard-LSH limit,
+selection semantics and end-to-end sparse-attention quality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.baselines import oracle
+from repro.core import hashing, socket
+
+
+def _setup(rng, d=32, n=128, p=6, l=8, tau=0.4):
+    cfg = socket.SocketConfig(num_planes=p, num_tables=l, tau=tau)
+    kw, kk, kq = jax.random.split(rng, 3)
+    w = hashing.make_hash_params(kw, d, p, l)
+    keys = jax.random.normal(kk, (n, d))
+    q = jax.random.normal(kq, (d,))
+    return cfg, w, keys, q
+
+
+@settings(max_examples=15, deadline=None)
+@given(p=st.integers(2, 8), l=st.integers(1, 12),
+       tau=st.floats(0.05, 2.0))
+def test_factorization_identity(p, l, tau):
+    """DESIGN.md §2: the product-form score == explicit corner softmax
+    gather (the paper's eq. 3) — exactly, for every P, L, tau."""
+    rng = jax.random.PRNGKey(p * 100 + l)
+    cfg, w, keys, q = _setup(rng, p=p, l=l, tau=tau)
+    signs = hashing.hash_keys_signs(w, keys)
+    ids = hashing.signs_to_bucket_ids(signs)
+    u = socket.soft_hash_query(w, q)
+    probs = socket.bucket_probs_explicit(u, tau)
+    ref = socket.soft_scores_gather(ids, probs)
+    out = socket.soft_scores_factorized(cfg, hashing.pack_signs(signs), u)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-3, atol=1e-5)
+
+
+def test_logz_matches_logsumexp(rng):
+    cfg, w, keys, q = _setup(rng, p=8, l=6, tau=0.3)
+    u = socket.soft_hash_query(w, q)
+    corners = jnp.asarray(hashing.hypercube_corners(8))
+    logits = jnp.einsum("lp,rp->lr", u, corners) / 0.3
+    ref = jax.scipy.special.logsumexp(logits, axis=-1)
+    out = socket.log_normalizer(u, 0.3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5)
+
+
+def test_chunked_scoring_exact(rng):
+    cfg, w, keys, q = _setup(rng, n=256)
+    signs = hashing.hash_keys_signs(w, keys)
+    packed = hashing.pack_signs(signs)
+    u = socket.soft_hash_query(w, q)
+    full = socket.soft_scores_factorized(cfg, packed, u)
+    chunked = socket.soft_scores_factorized(
+        cfg.replace(score_chunk=32), packed, u)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(chunked),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_int8_storage_matches_packed(rng):
+    cfg, w, keys, q = _setup(rng)
+    signs = hashing.hash_keys_signs(w, keys)
+    u = socket.soft_hash_query(w, q)
+    s_packed = socket.soft_scores_factorized(cfg, hashing.pack_signs(signs),
+                                             u)
+    cfg8 = cfg.replace(bits_storage="int8")
+    flat = (signs.astype(jnp.int8) * 2 - 1).reshape(keys.shape[0], -1)
+    s_int8 = socket.soft_scores_factorized(cfg8, flat, u)
+    np.testing.assert_allclose(np.asarray(s_packed), np.asarray(s_int8),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_tau_to_zero_recovers_hard_lsh(rng):
+    """Section 5.3: tau -> 0 turns soft scores into collision counts / L."""
+    cfg, w, keys, q = _setup(rng, p=4, l=16, tau=1e-3)
+    signs = hashing.hash_keys_signs(w, keys)
+    q_signs = hashing.hash_keys_signs(w, q[None])[0]       # (L, P)
+    collisions = jnp.sum(jnp.all(signs == q_signs[None], axis=-1), axis=-1)
+    scores = socket.soft_scores_factorized(cfg, hashing.pack_signs(signs),
+                                           socket.soft_hash_query(w, q))
+    np.testing.assert_allclose(np.asarray(scores),
+                               np.asarray(collisions, dtype=np.float32),
+                               atol=1e-3)
+
+
+def test_scores_rank_by_similarity(rng):
+    """fig. 1's claim: closer keys get higher soft scores (in expectation).
+    Uses a scale large enough for the signal to dominate hash noise."""
+    d = 48
+    cfg = socket.SocketConfig(num_planes=10, num_tables=200, tau=0.4)
+    kw, kq, kn = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (d,))
+    k_close = q + 0.2 * jax.random.normal(kn, (d,))
+    k_mid = q + 1.0 * jax.random.normal(jax.random.fold_in(kn, 1), (d,))
+    k_far = -q
+    keys = jnp.stack([k_close, k_mid, k_far])
+    w = hashing.make_hash_params(kw, d, 10, 200)
+    signs = hashing.hash_keys_signs(w, keys)
+    s = socket.soft_scores_factorized(cfg, hashing.pack_signs(signs),
+                                      socket.soft_hash_query(w, q))
+    assert s[0] > s[1] > s[2]
+
+
+def test_value_aware_topk_forces_sink_and_window():
+    cfg = socket.SocketConfig(sink_tokens=4, window_tokens=4, min_k=16)
+    n, length = 64, 50
+    scores = jnp.zeros((n,))
+    vnorm = jnp.ones((n,))
+    idx, mask = socket.value_aware_topk(cfg, scores, vnorm, k=16,
+                                        length=length, n_total=n)
+    got = set(np.asarray(idx).tolist())
+    assert {0, 1, 2, 3} <= got, "sink tokens must be selected"
+    assert {46, 47, 48, 49} <= got, "local window must be selected"
+    assert all(i < length for i in got)
+    assert bool(jnp.all(mask))
+
+
+def test_topk_excludes_invalid_slots():
+    cfg = socket.SocketConfig(sink_tokens=2, window_tokens=2, min_k=8)
+    n, length = 32, 10
+    scores = jnp.ones((n,)) * jnp.arange(n)  # later slots score higher
+    vnorm = jnp.ones((n,))
+    idx, mask = socket.value_aware_topk(cfg, scores, vnorm, k=8,
+                                        length=length, n_total=n)
+    sel = np.asarray(idx)[np.asarray(mask)]
+    assert sel.max() < length
+
+
+def test_socket_attend_approximates_dense_on_heavy_hitters(rng):
+    """The paper's regime: concentrated attention => sparse ≈ dense."""
+    d, n, B, KVH, G = 64, 512, 2, 2, 2
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.4,
+                              sparsity=8.0, sink_tokens=8, window_tokens=8,
+                              min_k=32)
+    kw, kk, kv, kq = jax.random.split(rng, 4)
+    w = hashing.make_hash_params(kw, d, 10, 60)
+    keys = jax.random.normal(kk, (B, KVH, n, d))
+    vals = jax.random.normal(kv, (B, KVH, n, d))
+    # heavy hitter: q strongly aligned with key 100 (scaled up)
+    q = 3.0 * keys[:, :, 100][:, :, None, None, :] + \
+        0.1 * jax.random.normal(kq, (B, KVH, G, 1, d))
+    side = socket.precompute_key_hashes(cfg, w, keys, vals)
+    out = socket.socket_attend(cfg, w, q, keys, vals, side, length=n,
+                               scale=1 / np.sqrt(d))
+    ref = oracle.dense_attention(q, keys, vals, scale=1 / np.sqrt(d),
+                                 length=n)
+    rel = float(jnp.linalg.norm(out - ref) / jnp.linalg.norm(ref))
+    assert rel < 0.05, f"sparse attention too far from dense: {rel}"
+
+
+def test_qhead_selection_mode(rng):
+    d, n, B, KVH, G = 32, 128, 1, 2, 2
+    cfg = socket.SocketConfig(num_planes=8, num_tables=24, sparsity=4.0,
+                              sink_tokens=4, window_tokens=4, min_k=16,
+                              selection="qhead")
+    kw, kk, kv, kq = jax.random.split(rng, 4)
+    w = hashing.make_hash_params(kw, d, 8, 24)
+    keys = jax.random.normal(kk, (B, KVH, n, d))
+    vals = jax.random.normal(kv, (B, KVH, n, d))
+    q = keys[:, :, 10][:, :, None, None, :] + 0.1 * jax.random.normal(
+        kq, (B, KVH, G, 1, d))
+    side = socket.precompute_key_hashes(cfg, w, keys, vals)
+    out = socket.socket_attend(cfg, w, q, keys, vals, side, length=n)
+    assert out.shape == (B, KVH, G, 1, d)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_kernel_path_matches_xla_path(rng):
+    d, n, B, KVH, G = 32, 512, 2, 2, 2
+    cfg = socket.SocketConfig(num_planes=8, num_tables=24, tau=0.4,
+                              sparsity=4.0, sink_tokens=4, window_tokens=4,
+                              min_k=32)
+    kw, kk, kv, kq = jax.random.split(rng, 4)
+    w = hashing.make_hash_params(kw, d, 8, 24)
+    keys = jax.random.normal(kk, (B, KVH, n, d))
+    vals = jax.random.normal(kv, (B, KVH, n, d))
+    q = keys[:, :, 100][:, :, None, None, :] + 0.1 * jax.random.normal(
+        kq, (B, KVH, G, 1, d))
+    side = socket.precompute_key_hashes(cfg, w, keys, vals)
+    a = socket.socket_attend(cfg, w, q, keys, vals, side, length=n,
+                             use_kernel=False)
+    b = socket.socket_attend(cfg, w, q, keys, vals, side, length=n,
+                             use_kernel=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,149 @@
+"""Numerical validation of Section 5 (Theorem 3, Lemmas 4-8)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashing, socket, theory
+
+
+def test_lemma4_correlation_formula(rng):
+    """Gamma = C q^T W^T s_hat — closed form vs Monte Carlo."""
+    d, p = 48, 8
+    kq, kw, kk = jax.random.split(rng, 3)
+    q = jax.random.normal(kq, (d,))
+    q = q / jnp.linalg.norm(q)
+    w, _ = jnp.linalg.qr(jax.random.normal(kw, (d, p)))
+    w = w.T                                   # (P, d) orthonormal rows
+    s = jnp.tanh(w @ q)                       # the soft per-plane scores
+    gamma_formula = float(theory.lemma4_gamma(q, w, s))
+
+    keys = jax.random.normal(kk, (200_000, d))
+    x = keys @ q
+    y = jnp.sign(keys @ w.T) @ s
+    corr = float(jnp.corrcoef(x, y)[0, 1])
+    assert abs(corr - gamma_formula) < 0.02
+
+
+def test_hard_vs_soft_correlation_inequality(rng):
+    """Appendix C: Gamma_hard = C ||Wq||_1/sqrt(P) <= C ||Wq||_2 ~ soft."""
+    d, p = 32, 10
+    for seed in range(5):
+        kq, kw = jax.random.split(jax.random.fold_in(rng, seed))
+        q = jax.random.normal(kq, (d,))
+        q = q / jnp.linalg.norm(q)
+        w, _ = jnp.linalg.qr(jax.random.normal(kw, (d, p)))
+        w = w.T
+        wq = w @ q
+        c = np.sqrt(2 / np.pi)
+        gamma_hard = c * float(jnp.sum(jnp.abs(wq))) / np.sqrt(p)
+        gamma_soft = float(theory.lemma4_gamma(q, w, jnp.tanh(wq)))
+        # soft uses tanh ≈ linear in the small-signal regime
+        assert gamma_hard <= gamma_soft + 1e-3
+
+
+def test_eps_tau_limits(rng):
+    """Theorem 3 / Appendix B.1: eps_tau -> 0 as tau -> 0 and
+    -> 1 - 1/R as tau -> inf; monotone in between."""
+    q = jax.random.normal(rng, (32,))
+    p = 6
+    r = 2 ** p
+    values = [float(theory.eps_tau_monte_carlo(rng, q, tau, p))
+              for tau in (0.01, 0.1, 0.5, 2.0, 50.0)]
+    assert values[0] < 0.02
+    assert abs(values[-1] - (1 - 1 / r)) < 0.02
+    assert all(a <= b + 1e-6 for a, b in zip(values, values[1:]))
+
+
+def test_finite_l_error_decays_as_sqrt_l(rng):
+    """Lemma 6: ||y_{tau,L} - y_tau|| ~ L^{-1/2}."""
+    d, n = 24, 96
+    kk, kv, kq = jax.random.split(rng, 3)
+    keys = jax.random.normal(kk, (n, d))
+    values = jax.random.normal(kv, (n, d))
+    q = jax.random.normal(kq, (d,))
+
+    def err_at(l, trials=12):
+        cfg = socket.SocketConfig(num_planes=4, num_tables=l, tau=0.5)
+        # population estimate via a very large L reference
+        cfg_ref = socket.SocketConfig(num_planes=4, num_tables=4096,
+                                      tau=0.5)
+        y_ref, _ = theory.soft_count_attention(
+            cfg_ref, jax.random.fold_in(rng, 999), q, keys, values)
+        errs = []
+        for t in range(trials):
+            y, _ = theory.soft_count_attention(
+                cfg, jax.random.fold_in(rng, t), q, keys, values)
+            errs.append(float(jnp.linalg.norm(y - y_ref)))
+        return np.mean(errs)
+
+    e16, e256 = err_at(16), err_at(256)
+    ratio = e16 / max(e256, 1e-9)
+    # L x16 => error should shrink ~4x; accept [2, 8]
+    assert 2.0 < ratio < 8.0, ratio
+
+
+def test_sampling_estimator_unbiased(rng):
+    """Lemma 7 part 1: E[T(q) | tables] = y_{tau,L}."""
+    d, n = 16, 64
+    kk, kv, kq = jax.random.split(rng, 3)
+    keys = jax.random.normal(kk, (n, d))
+    values = jax.random.normal(kv, (n, d))
+    q = jax.random.normal(kq, (d,))
+    cfg = socket.SocketConfig(num_planes=4, num_tables=32, tau=0.5)
+    y, a_tilde = theory.soft_count_attention(cfg, rng, q, keys, values)
+    estimates = jnp.stack([
+        theory.sampling_estimator(jax.random.fold_in(rng, i), a_tilde,
+                                  values, m=64)
+        for i in range(800)])
+    mean_est = jnp.mean(estimates, axis=0)
+    rel = float(jnp.linalg.norm(mean_est - y) / jnp.linalg.norm(y))
+    # MC standard error at 800 trials is ~0.04 relative; 0.08 = 2 sigma
+    assert rel < 0.08, rel
+
+
+def test_sampling_error_decays_with_m(rng):
+    """Theorem 3's M^{-1/2} term."""
+    d, n = 16, 64
+    kk, kv, kq = jax.random.split(rng, 3)
+    keys = jax.random.normal(kk, (n, d))
+    values = jax.random.normal(kv, (n, d))
+    q = jax.random.normal(kq, (d,))
+    cfg = socket.SocketConfig(num_planes=4, num_tables=32, tau=0.5)
+    y, a_tilde = theory.soft_count_attention(cfg, rng, q, keys, values)
+
+    def rmse(m, trials=60):
+        errs = [float(jnp.linalg.norm(theory.sampling_estimator(
+            jax.random.fold_in(rng, 1000 * m + i), a_tilde, values, m) - y))
+            for i in range(trials)]
+        return np.sqrt(np.mean(np.square(errs)))
+
+    r = rmse(8) / max(rmse(128), 1e-9)
+    assert 2.0 < r < 8.0, r  # M x16 => ~4x
+
+
+def test_correlation_table3_direction(rng):
+    """Table 3's qualitative claim: SOCKET's scores correlate better with
+    q.k than hard LSH counts at a matched (600-bit) budget."""
+    d, n = 64, 2048
+    kk, kq = jax.random.split(rng)
+    keys = jax.random.normal(kk, (n, d))
+    q = jax.random.normal(kq, (d,))
+    true_sim = keys @ q
+
+    cfg = socket.SocketConfig(num_planes=10, num_tables=60, tau=0.5)
+    w = hashing.make_hash_params(jax.random.fold_in(rng, 1), d, 10, 60)
+    signs = hashing.hash_keys_signs(w, keys)
+    soft = socket.soft_scores_factorized(cfg, hashing.pack_signs(signs),
+                                         socket.soft_hash_query(w, q))
+
+    w2 = hashing.make_hash_params(jax.random.fold_in(rng, 2), d, 2, 300)
+    signs2 = hashing.hash_keys_signs(w2, keys)
+    q_signs = hashing.hash_keys_signs(w2, q[None])[0]
+    hard = jnp.sum(jnp.all(signs2 == q_signs[None], axis=-1),
+                   axis=-1).astype(jnp.float32)
+
+    corr_soft = float(jnp.corrcoef(true_sim, soft)[0, 1])
+    corr_hard = float(jnp.corrcoef(true_sim, hard)[0, 1])
+    assert corr_soft > corr_hard, (corr_soft, corr_hard)
