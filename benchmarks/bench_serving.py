@@ -1,0 +1,90 @@
+"""Serving benchmark: continuous-batching engine vs static lockstep batch.
+
+The paper's fig. 3 throughput story at *serving* granularity: Poisson
+arrivals, mixed prompt lengths, paged KV + SOCKET bit-cache.  Reports
+decode throughput, TTFT and p50/p99 per-token latency per backend, plus
+the static-batch baseline for the same token volume.
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --smoke
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+
+def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
+        backends=("socket", "dense")):
+    """Benchmark-harness entry point (see benchmarks/run.py).
+
+    Defaults are the --smoke operating point: tiny model, 8 requests,
+    finishes in well under a minute on one CPU core.
+    """
+    from repro.configs import get_config
+    from repro.launch.serve import run_continuous, run_serve
+
+    rows = []
+    for backend in backends:
+        cfg = get_config("stablelm-12b")
+        if smoke:
+            cfg = cfg.smoke()
+        cfg = cfg.replace(attention_backend=backend)
+        sv = cfg.serving
+        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        top = ceiling - max_new
+        if top < 1:
+            raise ValueError(
+                f"max_new={max_new} leaves no prompt room under the "
+                f"serving context ceiling ({ceiling})")
+        lens = sorted({max(1, top // 4), max(1, top // 2), top})
+
+        # warmup=True: exclude jit compiles from the timed region, like
+        # the static baseline's explicit warm-up — else TTFT/p99 compare
+        # compile time against steady-state decode.
+        reqs, m = run_continuous(cfg, num_requests, rate_rps=50.0,
+                                 prompt_lens=lens, max_new_tokens=max_new,
+                                 seed=0, warmup=True)
+        assert all(r.state == "finished" for r in reqs)
+        rows.append((f"serve_continuous_{backend}", {
+            "tput_tok_s": float(m.throughput_tok_s),
+            "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
+            "tok_ms_p50": float(m.token_latency_s_p50 * 1e3),
+            "tok_ms_p99": float(m.token_latency_s_p99 * 1e3),
+            "preemptions": m.preemptions,
+            "decode_iters": m.decode_iters,
+            "requests": num_requests,
+        }))
+
+        # static lockstep baseline: same #sequences at the mean length
+        mean_len = int(sum(lens) / len(lens))
+        _, prefill_s, decode_s = run_serve(
+            cfg, batch=min(num_requests, sv.max_batch),
+            prompt_len=mean_len, decode_steps=max_new)
+        b = min(num_requests, sv.max_batch)
+        rows.append((f"serve_static_{backend}", {
+            "tput_tok_s": b * max_new / decode_s if decode_s > 0
+            else float("nan"),
+            "prefill_ms": float(prefill_s * 1e3),
+            "decode_ms": float(decode_s * 1e3),
+            "batch": b,
+        }))
+    return rows
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+    for name, metrics in run(smoke=args.smoke,
+                             num_requests=args.num_requests,
+                             max_new=args.max_new_tokens):
+        print(name, metrics)
+
+
+if __name__ == "__main__":
+    main()

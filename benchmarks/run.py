@@ -23,6 +23,7 @@ SUITES = [
     ("tab6_ablations", "benchmarks.bench_ablations"),
     ("fig3a_ttft", "benchmarks.bench_ttft"),
     ("kernels", "benchmarks.bench_kernels"),
+    ("serving", "benchmarks.bench_serving"),
 ]
 
 

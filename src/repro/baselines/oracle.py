@@ -36,14 +36,16 @@ def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     scale: float, length=None) -> jax.Array:
     """Full softmax attention (decode reference).
 
-    q: (B,KVH,G,T,hd); k/v: (B,KVH,N,hd).
+    q: (B,KVH,G,T,hd); k/v: (B,KVH,N,hd).  ``length`` may be a scalar or a
+    ``(B,)`` vector of per-request lengths (ragged serving batch).
     """
     logits = jnp.einsum("bhgtd,bhnd->bhgtn", q.astype(jnp.float32),
                         k.astype(jnp.float32)) * scale
     if length is not None:
+        from repro.core.socket import per_batch
         n = k.shape[2]
-        valid = jnp.arange(n) < jnp.asarray(length, jnp.int32)
-        logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+        length = per_batch(jnp.asarray(length, jnp.int32), logits.ndim)
+        logits = jnp.where(jnp.arange(n) < length, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgtn,bhnd->bhgtd", w, v.astype(jnp.float32))
     return out.astype(q.dtype)

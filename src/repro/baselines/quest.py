@@ -94,7 +94,8 @@ def attend(cfg: QuestConfig, state: QuestState, q: jax.Array,
     scores = score_pages(state, q[..., 0, :])       # (B,KVH,G,n_pages)
     scores = jnp.sum(scores, axis=2)                # (B,KVH,n_pages)
 
-    length = jnp.asarray(length, jnp.int32)
+    # (B,) per-request ragged lengths broadcast against (B,KVH,n_pages)
+    length = sk.per_batch(jnp.asarray(length, jnp.int32), 3)
     page_pos = jnp.arange(n_pages, dtype=jnp.int32)
     page_start = page_pos * ps
     valid = page_start < length

@@ -17,7 +17,7 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
-__all__ = ["LayerSpec", "ModelConfig", "SocketSettings"]
+__all__ = ["LayerSpec", "ModelConfig", "SocketSettings", "ServingSettings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +48,46 @@ class SocketSettings:
     # "pooled": score once with the group-mean query (G x less score
     #           compute/memory; §Perf fidelity numbers in EXPERIMENTS.md)
     selection: str = "kvhead"
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSettings:
+    """Continuous-batching engine shape knobs (repro.serving).
+
+    The paged pool holds ``num_blocks`` fixed-size pages shared by all
+    layers; block 0 is reserved as the trash page that masked slots and
+    padded block-table entries write into.  ``max_blocks_per_seq *
+    block_size`` is the per-request context ceiling and the static length
+    of the gathered ragged-decode view.  ``prefill_buckets`` are the
+    static prompt paddings (each must be a multiple of ``block_size``) —
+    one prefill compile per bucket.
+    """
+
+    block_size: int = 16
+    num_blocks: int = 512
+    max_batch: int = 8
+    max_blocks_per_seq: int = 64
+    prefill_buckets: Tuple[int, ...] = (128, 256, 512, 1024)
+    max_prefill_per_iter: int = 1
+
+    def validate(self) -> None:
+        assert self.num_blocks > 1, "need at least one non-trash block"
+        for b in self.prefill_buckets:
+            assert b % self.block_size == 0, (
+                f"prefill bucket {b} not a multiple of block_size "
+                f"{self.block_size}")
+        assert max(self.prefill_buckets) >= self.max_context, (
+            f"largest prefill bucket {max(self.prefill_buckets)} < "
+            f"max_context {self.max_context}: an admissible request "
+            "(prompt+generated after preemption) could fail prefill "
+            "bucketing mid-run")
+
+    @property
+    def max_context(self) -> int:
+        return self.max_blocks_per_seq * self.block_size
+
+    def replace(self, **kw) -> "ServingSettings":
+        return dataclasses.replace(self, **kw)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,6 +139,8 @@ class ModelConfig:
     # --- sparse attention (the paper's technique) --------------------------
     attention_backend: str = "socket"  # decode backend: socket|dense|quest|hard_lsh
     socket: SocketSettings = SocketSettings()
+    # --- continuous-batching serving engine (repro.serving) ----------------
+    serving: ServingSettings = ServingSettings()
     # context-parallel SOCKET decode: shard_map local-topk + psum merge over
     # these mesh axes (set by the launcher per shape; () = pjit/XLA path)
     decode_cp_axes: Tuple[str, ...] = ()
@@ -209,4 +251,7 @@ class ModelConfig:
             socket=dataclasses.replace(
                 self.socket, num_planes=6, num_tables=12, sink_tokens=4,
                 window_tokens=4, min_k=8, sparsity=4.0),
+            serving=dataclasses.replace(
+                self.serving, block_size=8, num_blocks=48, max_batch=4,
+                max_blocks_per_seq=8, prefill_buckets=(24, 32, 48, 64)),
         )

@@ -41,9 +41,11 @@ __all__ = [
     "soft_scores_gather",
     "soft_scores_factorized",
     "value_aware_topk",
+    "per_batch",
     "sparse_attention_over_subset",
     "socket_attend",
     "topk_budget",
+    "dynamic_topk_budget",
 ]
 
 NEG_INF = -1e30
@@ -103,9 +105,31 @@ class SocketCache:
 
 
 def topk_budget(cfg: SocketConfig, n: int) -> int:
-    """Selection budget k for a context of length n (static python int)."""
-    k = max(cfg.min_k, int(np.ceil(n / cfg.sparsity)))
+    """Selection budget k for a context of length n (static python int).
+
+    Floored at the forced sink+window count: those tokens are *always*
+    attended (paper §6), so a budget smaller than their count would
+    silently evict the recency window (forced ties sort by index, keeping
+    only the prefix sinks) — at deployment settings (sink=window=128,
+    sparsity=10) that used to happen for every context under 2560 tokens.
+    """
+    forced = min(n, cfg.sink_tokens + cfg.window_tokens)
+    k = max(cfg.min_k, forced, int(np.ceil(n / cfg.sparsity)))
     return min(k, n)
+
+
+def dynamic_topk_budget(cfg: SocketConfig, length: jax.Array,
+                        cap: int) -> jax.Array:
+    """Traced per-request budget for a ragged batch: ``ceil(len/sparsity)``
+    with the same ``min_k`` and forced sink+window floors as
+    :func:`topk_budget`, clamped to the static selection size ``cap``
+    (``cap = topk_budget(cfg, n_view)`` guarantees the floors fit)."""
+    length = jnp.asarray(length, jnp.int32)
+    forced = jnp.minimum(length, cfg.sink_tokens + cfg.window_tokens)
+    k = jnp.maximum(
+        jnp.ceil(length.astype(jnp.float32) /
+                 cfg.sparsity).astype(jnp.int32), forced)
+    return jnp.clip(k, cfg.min_k, cap)
 
 
 # ---------------------------------------------------------------------------
@@ -259,9 +283,20 @@ def soft_scores_factorized(cfg: SocketConfig, bits: jax.Array,
 # Algorithm 3 — value-aware top-k selection + exact attention on the subset
 # ---------------------------------------------------------------------------
 
+def per_batch(x: jax.Array, ndim: int) -> jax.Array:
+    """Reshape a ``(B,)`` per-request scalar (e.g. a ragged batch's length
+    vector) so it broadcasts against a ``(B, ..., N)`` tensor of rank
+    ``ndim``; scalars pass through unchanged."""
+    if x.ndim == 1:
+        return x.reshape(x.shape[0], *([1] * (ndim - 1)))
+    return x
+
+
 def value_aware_topk(cfg: SocketConfig, scores: jax.Array, vnorm: jax.Array,
                      *, k: int, length: jax.Array | int,
-                     n_total: int) -> Tuple[jax.Array, jax.Array]:
+                     n_total: int,
+                     budget: Optional[jax.Array] = None,
+                     ) -> Tuple[jax.Array, jax.Array]:
     """Select indices of the k keys with largest ``score * ||v||``.
 
     Sink tokens (prefix) and the trailing local window are force-included by
@@ -273,21 +308,32 @@ def value_aware_topk(cfg: SocketConfig, scores: jax.Array, vnorm: jax.Array,
       scores: ``(..., N)`` soft collision scores.
       vnorm:  ``(..., N)`` value norms.
       k:      static selection budget (includes sink/window).
-      length: current valid context length (dynamic scalar or int).
+      length: current valid context length — dynamic scalar, int, or a
+              ``(B,)`` vector of per-request lengths (ragged serving batch).
       n_total: static cache capacity N.
+      budget: optional dynamic per-request budget ``(B,)`` (or scalar)
+              ≤ ``k``; selections ranked past it are masked out.  This is
+              how the serving engine applies the paper's ``k = N/sparsity``
+              with N = each request's *live* context length while keeping
+              the top-k shape static.  Forced sink/window tokens sort
+              first (+inf), so they survive any budget ≥ their count.
 
     Returns:
       (indices ``(..., k)`` int32, validity mask ``(..., k)`` bool).
     """
     pos = jnp.arange(n_total, dtype=jnp.int32)
-    length = jnp.asarray(length, jnp.int32)
+    length = per_batch(jnp.asarray(length, jnp.int32), scores.ndim)
     valid = pos < length
     eff = scores.astype(jnp.float32) * vnorm.astype(jnp.float32)
     forced = (pos < cfg.sink_tokens) | (pos >= length - cfg.window_tokens)
     eff = jnp.where(forced, jnp.float32(np.finfo(np.float32).max), eff)
     eff = jnp.where(valid, eff, NEG_INF)
     top_vals, top_idx = jax.lax.top_k(eff, k)
-    return top_idx.astype(jnp.int32), top_vals > NEG_INF / 2
+    mask = top_vals > NEG_INF / 2
+    if budget is not None:
+        budget = per_batch(jnp.asarray(budget, jnp.int32), scores.ndim)
+        mask = mask & (jnp.arange(k, dtype=jnp.int32) < budget)
+    return top_idx.astype(jnp.int32), mask
 
 
 def sparse_attention_over_subset(q: jax.Array, k_sel: jax.Array,
@@ -315,7 +361,8 @@ def socket_attend(cfg: SocketConfig, w_hash: jax.Array, q: jax.Array,
                   k_cache: jax.Array, v_cache: jax.Array,
                   side: SocketCache, *, length: jax.Array | int,
                   scale: Optional[float] = None,
-                  use_kernel: bool = False) -> jax.Array:
+                  use_kernel: bool = False,
+                  budget: Optional[jax.Array] = None) -> jax.Array:
     """Full SOCKET decode attention (Algorithms 2+3) for one new query step.
 
     Args:
@@ -323,8 +370,11 @@ def socket_attend(cfg: SocketConfig, w_hash: jax.Array, q: jax.Array,
       q:       ``(B, KVH, G, 1, hd)`` query (GQA grouped layout).
       k_cache: ``(B, KVH, N, hd)``; v_cache same.
       side:    SocketCache with bits ``(B, KVH, N, W)`` and vnorm.
-      length:  valid prefix length of the cache.
+      length:  valid prefix length of the cache (scalar or ``(B,)`` for a
+               ragged serving batch).
       use_kernel: route scoring through the Pallas kernel (TPU path).
+      budget: optional dynamic per-request top-k budget (see
+              :func:`value_aware_topk`).
 
     Returns:
       attention output ``(B, KVH, G, 1, hd)``.
@@ -373,7 +423,8 @@ def socket_attend(cfg: SocketConfig, w_hash: jax.Array, q: jax.Array,
     vnorm = side.vnorm.astype(jnp.float32)
     if cfg.selection in ("kvhead", "pooled"):
         idx, sel_mask = value_aware_topk(
-            cfg, scores, vnorm, k=kq, length=length, n_total=n)
+            cfg, scores, vnorm, k=kq, length=length, n_total=n,
+            budget=budget)
         k_sel = jnp.take_along_axis(k_cache, idx[..., None], axis=2)
         v_sel = jnp.take_along_axis(v_cache, idx[..., None], axis=2)
         return sparse_attention_over_subset(q, k_sel, v_sel, sel_mask,
@@ -381,7 +432,8 @@ def socket_attend(cfg: SocketConfig, w_hash: jax.Array, q: jax.Array,
 
     # per-q-head route
     idx, sel_mask = value_aware_topk(
-        cfg, scores, vnorm[:, :, None], k=kq, length=length, n_total=n)
+        cfg, scores, vnorm[:, :, None], k=kq, length=length, n_total=n,
+        budget=budget)
     k_sel = jnp.take_along_axis(k_cache[:, :, None], idx[..., None], axis=3)
     v_sel = jnp.take_along_axis(v_cache[:, :, None], idx[..., None], axis=3)
     logits = jnp.einsum("bhgtd,bhgkd->bhgtk", q.astype(jnp.float32),

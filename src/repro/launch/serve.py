@@ -1,5 +1,15 @@
-"""Serving launcher: prefill a batch of prompts, decode with SOCKET sparse
-attention, report throughput.
+"""Serving launcher.
+
+Two engines:
+
+* ``--engine static`` (legacy): prefill one fixed-shape batch, decode in
+  lockstep, report throughput.
+* ``--engine continuous``: the paged-KV continuous-batching engine
+  (repro.serving) fed Poisson-arriving requests of mixed prompt lengths;
+  reports throughput, TTFT and p50/p99 per-token latency.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch stablelm-12b \
+        --smoke --engine continuous --backend socket
 
     PYTHONPATH=src python -m repro.launch.serve --arch stablelm-12b \
         --smoke --batch 4 --prompt-len 256 --decode-steps 64 \
@@ -14,6 +24,7 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config
 from repro.models import param as pm
@@ -22,15 +33,20 @@ from repro.runtime.steps import make_prefill_step, make_serve_step
 
 
 def run_serve(cfg, batch: int, prompt_len: int, decode_steps: int,
-              seed: int = 0):
-    """Prefill + greedy decode; returns (tokens, prefill_s, decode_s)."""
+              seed: int = 0, prompt=None):
+    """Prefill + greedy decode; returns (tokens, prefill_s, decode_s).
+
+    ``prompt``: optional (batch, prompt_len) int32 token array — the
+    parity tests feed the same prompts to both engines.
+    """
     rng = jax.random.PRNGKey(seed)
     params = pm.unbox(tfm.init_model(cfg, rng))
     capacity = prompt_len + decode_steps
     if cfg.input_mode == "tokens":
-        prompt = jax.random.randint(rng, (batch, prompt_len), 0,
-                                    cfg.vocab_size)
-        batch_in = {"tokens": prompt}
+        if prompt is None:
+            prompt = jax.random.randint(rng, (batch, prompt_len), 0,
+                                        cfg.vocab_size)
+        batch_in = {"tokens": jnp.asarray(prompt, jnp.int32)}
     else:
         batch_in = {"embeds": jax.random.normal(
             rng, (batch, prompt_len, cfg.d_model),
@@ -65,15 +81,59 @@ def run_serve(cfg, batch: int, prompt_len: int, decode_steps: int,
     return jnp.concatenate(toks, axis=1), prefill_s, decode_s
 
 
+def make_poisson_requests(cfg, num_requests: int, rate_rps: float,
+                          prompt_lens, max_new_tokens: int, seed: int = 0):
+    """Poisson arrival process with prompt lengths drawn from
+    ``prompt_lens`` (the multi-tenant mixed-length regime)."""
+    from repro.serving import Request
+    rng = np.random.default_rng(seed)
+    t = 0.0
+    reqs = []
+    for _ in range(num_requests):
+        t += float(rng.exponential(1.0 / rate_rps))
+        plen = int(rng.choice(prompt_lens))
+        prompt = rng.integers(0, cfg.vocab_size, size=plen,
+                              dtype=np.int64).tolist()
+        reqs.append(Request(prompt=prompt, max_new_tokens=max_new_tokens,
+                            arrival=t))
+    return reqs
+
+
+def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
+                   max_new_tokens: int, seed: int = 0, realtime=True,
+                   warmup=False):
+    """Continuous-batching serve; returns (requests, ServeMetrics).
+
+    ``warmup=True`` pre-compiles the decode step and every prefill bucket
+    so the reported TTFT/latency reflect steady-state serving, not jit.
+    """
+    from repro.serving.engine import ContinuousBatchingEngine
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed))
+    if warmup:
+        engine.warmup()
+    reqs = make_poisson_requests(cfg, num_requests, rate_rps, prompt_lens,
+                                 max_new_tokens, seed=seed)
+    metrics = engine.run(reqs, realtime=realtime)
+    return reqs, metrics
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--engine", default="static",
+                    choices=["static", "continuous"])
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--decode-steps", type=int, default=64)
     ap.add_argument("--backend", default="socket",
                     choices=["socket", "dense", "quest", "hard_lsh"])
+    # continuous-engine knobs
+    ap.add_argument("--num-requests", type=int, default=8)
+    ap.add_argument("--rate", type=float, default=20.0,
+                    help="Poisson arrival rate (requests/s)")
+    ap.add_argument("--max-new-tokens", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -81,11 +141,38 @@ def main():
         cfg = cfg.smoke()
     cfg = cfg.replace(attention_backend=args.backend)
 
+    if args.engine == "continuous":
+        sv = cfg.serving
+        # mixed prompt lengths, bounded so prompt+generated fits a bucket
+        max_new = args.max_new_tokens or (8 if args.smoke else 64)
+        # prompt + generated must fit both a prefill bucket and the
+        # per-request block table
+        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        top = ceiling - max_new
+        if top < 1:
+            ap.error(f"--max-new-tokens {max_new} leaves no prompt room "
+                     f"under the serving context ceiling "
+                     f"({ceiling} tokens)")
+        lens = sorted({max(1, top // 4), max(1, top // 2),
+                       max(1, (3 * top) // 4), top})
+        reqs, m = run_continuous(cfg, args.num_requests, args.rate, lens,
+                                 max_new, seed=args.seed)
+        print(json.dumps({
+            "arch": cfg.name, "backend": args.backend,
+            "engine": "continuous",
+            "prompt_lens": lens,
+            "max_new_tokens": max_new,
+            "finished": sum(r.state == "finished" for r in reqs),
+            **m.to_json(),
+        }, indent=2))
+        return
+
     toks, prefill_s, decode_s = run_serve(cfg, args.batch, args.prompt_len,
-                                          args.decode_steps)
+                                          args.decode_steps,
+                                          seed=args.seed)
     tput = args.batch * args.decode_steps / decode_s
     print(json.dumps({
-        "arch": cfg.name, "backend": args.backend,
+        "arch": cfg.name, "backend": args.backend, "engine": "static",
         "prefill_s": round(prefill_s, 3),
         "decode_s": round(decode_s, 3),
         "decode_tokens_per_s": round(tput, 1),

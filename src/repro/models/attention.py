@@ -339,36 +339,65 @@ def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
 def _decode_update_global(cfg: ModelConfig, params: Dict, cache: Dict,
                           k_new: jax.Array, v_new: jax.Array,
                           pos: jax.Array) -> Dict:
-    """Append the new token's K/V (+ backend metadata) at index ``pos``."""
+    """Append the new token's K/V (+ backend metadata) at index ``pos``.
+
+    ``pos`` is a scalar (whole batch at one position) or a ``(B,)`` vector
+    of per-request positions (ragged serving batch → per-row scatter).
+    """
     cache = dict(cache)
     kc = jnp.swapaxes(k_new, 1, 2)  # (B,KV,1,hd)
     vc = jnp.swapaxes(v_new, 1, 2)
     b, kv, _, hd = kc.shape
-    cache["k"] = jax.lax.dynamic_update_slice(
-        cache["k"], kc.astype(cache["k"].dtype), (0, 0, pos, 0))
-    cache["v"] = jax.lax.dynamic_update_slice(
-        cache["v"], vc.astype(cache["v"].dtype), (0, 0, pos, 0))
+    ragged = jnp.ndim(pos) == 1
+    if ragged:
+        bidx = jnp.arange(b)
+        cache["k"] = cache["k"].at[bidx, :, pos].set(
+            kc[:, :, 0].astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[bidx, :, pos].set(
+            vc[:, :, 0].astype(cache["v"].dtype))
+    else:
+        cache["k"] = jax.lax.dynamic_update_slice(
+            cache["k"], kc.astype(cache["k"].dtype), (0, 0, pos, 0))
+        cache["v"] = jax.lax.dynamic_update_slice(
+            cache["v"], vc.astype(cache["v"].dtype), (0, 0, pos, 0))
     backend = cfg.attention_backend
     if backend in ("socket", "hard_lsh"):
         scfg = socket_config_of(cfg)
         side = socket.precompute_key_hashes(scfg, params["hash_w"], kc, vc)
-        cache["bits"] = jax.lax.dynamic_update_slice(
-            cache["bits"], side.bits, (0, 0, pos, 0))
-        cache["vnorm"] = jax.lax.dynamic_update_slice(
-            cache["vnorm"], side.vnorm.astype(cache["vnorm"].dtype),
-            (0, 0, pos))
+        if ragged:
+            bidx = jnp.arange(b)
+            cache["bits"] = cache["bits"].at[bidx, :, pos].set(
+                side.bits[:, :, 0])
+            cache["vnorm"] = cache["vnorm"].at[bidx, :, pos].set(
+                side.vnorm[:, :, 0].astype(cache["vnorm"].dtype))
+        else:
+            cache["bits"] = jax.lax.dynamic_update_slice(
+                cache["bits"], side.bits, (0, 0, pos, 0))
+            cache["vnorm"] = jax.lax.dynamic_update_slice(
+                cache["vnorm"], side.vnorm.astype(cache["vnorm"].dtype),
+                (0, 0, pos))
     elif backend == "quest":
         page = pos // 16
-        old_min = jax.lax.dynamic_slice(
-            cache["kmin"], (0, 0, page, 0), (b, kv, 1, hd))
-        old_max = jax.lax.dynamic_slice(
-            cache["kmax"], (0, 0, page, 0), (b, kv, 1, hd))
-        cache["kmin"] = jax.lax.dynamic_update_slice(
-            cache["kmin"], jnp.minimum(old_min, kc.astype(old_min.dtype)),
-            (0, 0, page, 0))
-        cache["kmax"] = jax.lax.dynamic_update_slice(
-            cache["kmax"], jnp.maximum(old_max, kc.astype(old_max.dtype)),
-            (0, 0, page, 0))
+        if ragged:
+            bidx = jnp.arange(b)
+            knew = kc[:, :, 0]
+            cache["kmin"] = cache["kmin"].at[bidx, :, page].min(
+                knew.astype(cache["kmin"].dtype))
+            cache["kmax"] = cache["kmax"].at[bidx, :, page].max(
+                knew.astype(cache["kmax"].dtype))
+        else:
+            old_min = jax.lax.dynamic_slice(
+                cache["kmin"], (0, 0, page, 0), (b, kv, 1, hd))
+            old_max = jax.lax.dynamic_slice(
+                cache["kmax"], (0, 0, page, 0), (b, kv, 1, hd))
+            cache["kmin"] = jax.lax.dynamic_update_slice(
+                cache["kmin"], jnp.minimum(old_min,
+                                           kc.astype(old_min.dtype)),
+                (0, 0, page, 0))
+            cache["kmax"] = jax.lax.dynamic_update_slice(
+                cache["kmax"], jnp.maximum(old_max,
+                                           kc.astype(old_max.dtype)),
+                (0, 0, page, 0))
     return cache
 
 
@@ -384,7 +413,14 @@ def _hard_lsh_decode_scores(scfg: socket.SocketConfig, bits: jax.Array,
 def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
                      cache: Dict, pos: jax.Array, attn_type: str,
                      ) -> Tuple[jax.Array, Dict]:
-    """One decode step.  x: (B, 1, d); pos: scalar int32 (current index).
+    """One decode step.  x: (B, 1, d); pos: scalar int32 (current index)
+    OR a ``(B,)`` int32 vector of per-request indices (ragged serving
+    batch — each row of the batch sits at its own context length).
+
+    In the ragged case SOCKET's top-k budget is applied *per request* from
+    each live length (``k_r = clip(ceil(len_r / sparsity), min_k, k_cap)``)
+    via dynamic masking under a static ``top_k`` — the serving-engine
+    realization of the paper's ``k = N / sparsity``.
 
     Returns (y (B,1,d), updated cache).
     """
@@ -394,7 +430,9 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
     kv = params["wk"].shape[1]
     g = h_eff // kv
     scale = 1.0 / np.sqrt(hd)
-    positions = jnp.full((b, 1), pos, jnp.int32)
+    ragged = jnp.ndim(pos) == 1
+    positions = jnp.reshape(pos, (b, 1)).astype(jnp.int32) if ragged \
+        else jnp.full((b, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(cfg, params, x, positions)
     qg = jnp.transpose(q.reshape(b, 1, kv, g, hd), (0, 2, 3, 1, 4))
     # qg: (B, KV, G, 1, hd)
@@ -403,20 +441,32 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
         cap = cache["k"].shape[2]
         slot = pos % cap
         cache = dict(cache)
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
-            (0, 0, slot, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
-            (0, 0, slot, 0))
+        if ragged:
+            bidx = jnp.arange(b)
+            cache["k"] = cache["k"].at[bidx, :, slot].set(
+                k_new[:, 0].astype(cache["k"].dtype))
+            cache["v"] = cache["v"].at[bidx, :, slot].set(
+                v_new[:, 0].astype(cache["v"].dtype))
+        else:
+            cache["k"] = jax.lax.dynamic_update_slice(
+                cache["k"],
+                jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
+                (0, 0, slot, 0))
+            cache["v"] = jax.lax.dynamic_update_slice(
+                cache["v"],
+                jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
+                (0, 0, slot, 0))
         # ring-slot absolute positions; invalid slots masked out
         sl = jnp.arange(cap, dtype=jnp.int32)
-        ring_pos = pos - ((pos - sl) % cap)
+        pos_b = pos[:, None] if ragged else pos     # (B,1) | scalar
+        ring_pos = pos_b - ((pos_b - sl) % cap)      # (B,cap) | (cap,)
         valid = ring_pos >= 0
+        if not ragged:
+            valid = valid[None]
         logits = jnp.einsum("bkgtd,bknd->bkgtn", qg.astype(jnp.float32),
                             cache["k"].astype(jnp.float32)) * scale
         logits = softcap(logits, cfg.attn_logit_softcap)
-        logits = jnp.where(valid[None, None, None, None], logits, NEG_INF)
+        logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
         w = jax.nn.softmax(logits, axis=-1)
         ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
                          cache["v"].astype(jnp.float32))
@@ -424,6 +474,12 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
         cache = _decode_update_global(cfg, params, cache, k_new, v_new, pos)
         length = pos + 1
         backend = cfg.attention_backend
+        if ragged and backend in ("socket", "hard_lsh"):
+            scfg = socket_config_of(cfg)
+            budget = socket.dynamic_topk_budget(
+                scfg, length, socket.topk_budget(scfg, cache["k"].shape[2]))
+        else:
+            budget = None
         if backend == "dense":
             ctx = oracle.dense_attention(qg, cache["k"], cache["v"],
                                          scale=scale, length=length)
@@ -432,6 +488,10 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
             mesh = shd.current_mesh()
             if cfg.decode_cp_axes and mesh is not None and any(
                     a in mesh.shape for a in cfg.decode_cp_axes):
+                if ragged:
+                    raise NotImplementedError(
+                        "ragged decode + context-parallel SOCKET: use the "
+                        "pjit/XLA path (decode_cp_axes=())")
                 # §Perf: shard_map context-parallel path — local top-k per
                 # sequence shard + psum online-softmax merge; avoids
                 # materializing the (B,KVH,N) global score tensor
@@ -448,7 +508,7 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
                     scfg, params["hash_w"], qg, cache["k"], cache["v"],
                     socket.SocketCache(bits=cache["bits"],
                                        vnorm=cache["vnorm"]),
-                    length=length, scale=scale)
+                    length=length, scale=scale, budget=budget)
         elif backend == "hard_lsh":
             scfg = socket_config_of(cfg)
             n = cache["k"].shape[2]
@@ -459,7 +519,7 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
             kq = socket.topk_budget(scfg, n)
             idx, sel_mask = socket.value_aware_topk(
                 scfg, scores, cache["vnorm"].astype(jnp.float32), k=kq,
-                length=length, n_total=n)
+                length=length, n_total=n, budget=budget)
             k_sel = jnp.take_along_axis(cache["k"], idx[..., None], axis=2)
             v_sel = jnp.take_along_axis(cache["v"], idx[..., None], axis=2)
             ctx = socket.sparse_attention_over_subset(

@@ -175,6 +175,25 @@ def _input_embed(cfg: ModelConfig, params, batch: Dict) -> jax.Array:
                "batch", "act_seq", "embed")
 
 
+@jax.custom_vjp
+def _fwd_barrier(x):
+    # optimization_barrier has no differentiation rule in this jax; the
+    # barrier is only needed on the forward carry (see group_body), so give
+    # it a pass-through gradient.
+    return jax.lax.optimization_barrier(x)
+
+
+def _fwd_barrier_fwd(x):
+    return _fwd_barrier(x), None
+
+
+def _fwd_barrier_bwd(_, g):
+    return (g,)
+
+
+_fwd_barrier.defvjp(_fwd_barrier_fwd, _fwd_barrier_bwd)
+
+
 def forward_train(cfg: ModelConfig, params, batch: Dict):
     """Full forward.  batch: {tokens|embeds, (positions)} -> (logits, aux)."""
     x = _input_embed(cfg, params, batch)
@@ -193,7 +212,7 @@ def forward_train(cfg: ModelConfig, params, batch: Dict):
         # barrier: stops XLA from hoisting the backward pass's f32 upcast
         # of the saved carry into the forward loop (which would materialize
         # a duplicate f32 residual stack — observed 2.5x temp blowup).
-        x = jax.lax.optimization_barrier(x)
+        x = _fwd_barrier(x)
         return (x, lb, zl), None
 
     body = _remat(cfg, group_body)
@@ -267,8 +286,15 @@ def decode_cache_axes(cfg: ModelConfig, long_context: bool = False):
     return {"groups": groups, "remainder": rem}
 
 
-def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int):
-    """Process the prompt, returning (last-token logits, caches)."""
+def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
+            last_index=None):
+    """Process the prompt, returning (last-token logits, caches).
+
+    ``last_index``: optional ``(B,)`` int32 of per-request last *real*
+    prompt positions.  The serving engine pads prompts up to a static
+    bucket length; without it the returned logits would belong to the
+    padding garbage rather than each prompt's true final token.
+    """
     x = _input_embed(cfg, params, batch)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
@@ -288,7 +314,11 @@ def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int):
             cfg, params["remainder"][f"slot_{i}"], spec, x, positions,
             capacity)
 
-    x = rmsnorm(params["final_norm"], x[:, -1:])
+    if last_index is None:
+        x = x[:, -1:]
+    else:
+        x = x[jnp.arange(b), jnp.asarray(last_index, jnp.int32)][:, None]
+    x = rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params["embed"], x)
     return logits, {"groups": group_caches, "remainder": rem_caches}
 
@@ -297,7 +327,9 @@ def decode_step(cfg: ModelConfig, params, caches, inputs: jax.Array,
                 pos: jax.Array):
     """One token for the whole stack.
 
-    inputs: (B, 1) token ids or (B, 1, d) embeddings; pos: scalar int32.
+    inputs: (B, 1) token ids or (B, 1, d) embeddings; pos: scalar int32 or
+    a ``(B,)`` vector of per-request positions (ragged serving batch — see
+    :func:`repro.models.attention.attention_decode`).
     Returns (logits (B,1,V), updated caches).
     """
     if cfg.input_mode == "tokens":

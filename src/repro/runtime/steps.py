@@ -76,13 +76,25 @@ def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
     return train_step
 
 
-def make_prefill_step(cfg: ModelConfig, capacity: int) -> Callable:
+def make_prefill_step(cfg: ModelConfig, capacity: int,
+                      bucketed: bool = False) -> Callable:
+    """``bucketed=True`` adds a ``last_index`` argument: the continuous
+    engine pads prompts to a static bucket, so the last *real* token's
+    position must be passed explicitly (see :func:`tfm.prefill`)."""
+    if bucketed:
+        def prefill_bucketed(params, batch, last_index):
+            return tfm.prefill(cfg, params, batch, capacity=capacity,
+                               last_index=last_index)
+        return prefill_bucketed
+
     def prefill_step(params, batch):
         return tfm.prefill(cfg, params, batch, capacity=capacity)
     return prefill_step
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, caches, inp, pos) -> (logits, caches).  ``pos`` may be a
+    scalar (static batch) or a ``(B,)`` vector (ragged continuous batch)."""
     def serve_step(params, caches, inp, pos):
         return tfm.decode_step(cfg, params, caches, inp, pos)
     return serve_step

@@ -1,0 +1,25 @@
+"""Continuous-batching serving subsystem (paged KV + SOCKET bit-cache).
+
+See :mod:`repro.serving.engine` for the engine,
+:mod:`repro.serving.scheduler` for the request lifecycle and
+:mod:`repro.serving.block_pool` / :mod:`repro.serving.paged` for the
+host- and device-side halves of the paged pool.  Design notes in
+``src/repro/serving/README.md``.
+"""
+
+from repro.serving.block_pool import TRASH_BLOCK, BlockPool
+from repro.serving.scheduler import (DECODE, FINISHED, PREFILL, WAITING,
+                                     Request, Scheduler)
+
+__all__ = ["BlockPool", "TRASH_BLOCK", "Request", "Scheduler",
+           "WAITING", "PREFILL", "DECODE", "FINISHED",
+           "ContinuousBatchingEngine", "ServeMetrics"]
+
+
+def __getattr__(name):
+    # Engine (and its jax-heavy deps) loads lazily so pure-host users of
+    # the pool/scheduler — and their unit tests — stay import-light.
+    if name in ("ContinuousBatchingEngine", "ServeMetrics"):
+        from repro.serving import engine
+        return getattr(engine, name)
+    raise AttributeError(name)

@@ -1,0 +1,67 @@
+"""Host-side block accounting for the paged KV + SOCKET bit-cache pool.
+
+The device-side pool (see :mod:`repro.serving.paged`) is a set of
+``num_blocks`` fixed-size pages per layer, shared by every layer: one
+physical block id addresses the same page index in every layer's K, V,
+packed-hash-bit and value-norm arrays, so a single allocation covers the
+whole stack (the vLLM layout, adapted to JAX static shapes).
+
+Block 0 is reserved as the **trash page**: padded block-table entries and
+masked (inactive) decode slots read from and write to it, which keeps the
+jitted engine step free of conditionals.  It is never handed out.
+
+This module is deliberately jax-free — pure Python accounting that the
+scheduler drives — so pool invariants are unit-testable in microseconds.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional
+
+__all__ = ["TRASH_BLOCK", "BlockPool"]
+
+TRASH_BLOCK = 0
+
+
+class BlockPool:
+    """Free-list allocator over physical block ids ``1..num_blocks-1``."""
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (block 0 is the trash page)")
+        self.num_blocks = num_blocks
+        # LIFO free list: recently freed blocks are reused first (warm).
+        self._free: List[int] = list(range(num_blocks - 1, 0, -1))
+        self._allocated = [False] * num_blocks
+
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def num_used(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Allocate ``n`` blocks, or return None (state unchanged) if the
+        pool cannot satisfy the request — all-or-nothing."""
+        if n < 0:
+            raise ValueError(n)
+        if n > len(self._free):
+            return None
+        blocks = [self._free.pop() for _ in range(n)]
+        for b in blocks:
+            self._allocated[b] = True
+        return blocks
+
+    def free(self, blocks: List[int]) -> None:
+        for b in blocks:
+            if b == TRASH_BLOCK:
+                raise ValueError("attempt to free the trash block")
+            if not self._allocated[b]:
+                raise ValueError(f"double free of block {b}")
+            self._allocated[b] = False
+            self._free.append(b)
+
+    def is_allocated(self, block: int) -> bool:
+        return self._allocated[block]

@@ -1,0 +1,261 @@
+"""Continuous-batching serving engine (sglang/vLLM-style, JAX-static).
+
+Each iteration interleaves **prefill** (admit up to
+``serving.max_prefill_per_iter`` waiting requests, one jitted
+bucket-padded forward each, KV written straight into the paged pool) with
+one **ragged decode step** over all running slots: a single jit-compiled
+function gathers every slot's block table into contiguous cache views,
+runs the unmodified model ``decode_step`` with a per-slot ``pos`` vector
+(masked slots point at the trash page), and scatters each slot's new
+token back to its page.  Static shapes throughout — one decode compile
+total, one prefill compile per bucket.
+
+Greedy sampling; ``input_mode == "tokens"``, all-attention all-global
+layouts only (sliding-window rings and SSM state are per-slot, not paged
+— ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import param as pm
+from repro.models import transformer as tfm
+from repro.runtime.steps import make_prefill_step, make_serve_step
+from repro.serving import paged
+from repro.serving.block_pool import TRASH_BLOCK, BlockPool
+from repro.serving.scheduler import Request, Scheduler
+
+__all__ = ["ContinuousBatchingEngine", "ServeMetrics"]
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    """Aggregate serving metrics for one engine run."""
+
+    num_requests: int
+    total_generated: int
+    wall_s: float
+    throughput_tok_s: float
+    ttft_s_mean: float
+    ttft_s_p99: float
+    token_latency_s_p50: float
+    token_latency_s_p99: float
+    preemptions: int
+    decode_iters: int
+
+    def to_json(self) -> Dict:
+        return {k: (round(v, 6) if isinstance(v, float) else v)
+                for k, v in dataclasses.asdict(self).items()}
+
+
+def _percentile(xs: List[float], q: float) -> float:
+    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+
+
+class ContinuousBatchingEngine:
+    """Paged-KV continuous batching over one model replica."""
+
+    def __init__(self, cfg: ModelConfig, params=None,
+                 rng: Optional[jax.Array] = None):
+        self._validate(cfg)
+        self.cfg = cfg
+        self.serving = cfg.serving
+        self.serving.validate()
+        if params is None:
+            rng = rng if rng is not None else jax.random.PRNGKey(0)
+            params = pm.unbox(tfm.init_model(cfg, rng))
+        self.params = params
+        self.pages = paged.init_paged_caches(cfg, self.serving)
+        self.pool = BlockPool(self.serving.num_blocks)
+        self.scheduler = Scheduler(
+            self.pool, max_batch=self.serving.max_batch,
+            max_blocks_per_seq=self.serving.max_blocks_per_seq,
+            block_size=self.serving.block_size)
+        self._decode_fn = self._build_decode()
+        self._prefill_fns: Dict[int, callable] = {}
+
+    @staticmethod
+    def _validate(cfg: ModelConfig) -> None:
+        if cfg.input_mode != "tokens":
+            raise NotImplementedError(
+                "continuous engine serves token models only")
+        for spec in cfg.layer_specs:
+            if spec.kind != "attn" or spec.attn_type != "global":
+                raise NotImplementedError(
+                    "continuous engine requires all-global attention "
+                    f"layers (got kind={spec.kind!r} "
+                    f"attn_type={spec.attn_type!r})")
+        if cfg.attention_backend not in ("socket", "dense", "hard_lsh"):
+            raise NotImplementedError(
+                f"backend {cfg.attention_backend!r} not paged "
+                "(quest keeps page-granularity stats of its own)")
+        if cfg.decode_cp_axes:
+            raise NotImplementedError(
+                "ragged decode + context-parallel SOCKET is a ROADMAP item")
+
+    # --------------------------------------------------------------- jit
+    def _build_decode(self):
+        serve = make_serve_step(self.cfg)
+        bs = self.serving.block_size
+
+        def step(params, pages, tokens, bt, pos):
+            views = paged.gather_views(pages, bt)
+            logits, views = serve(params, views, tokens, pos)
+            pages = paged.scatter_token(pages, views, bt, pos, bs)
+            return jnp.argmax(logits[:, -1], axis=-1), pages
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    def _prefill_fn(self, bucket: int):
+        if bucket not in self._prefill_fns:
+            prefill = make_prefill_step(self.cfg, bucket, bucketed=True)
+
+            def step(params, pages, tokens, last_index, bt_row):
+                logits, caches = prefill(params, {"tokens": tokens},
+                                         last_index)
+                pages = paged.write_prefill(pages, caches, bt_row)
+                return jnp.argmax(logits[:, -1], axis=-1), pages
+
+            self._prefill_fns[bucket] = jax.jit(step, donate_argnums=(1,))
+        return self._prefill_fns[bucket]
+
+    def warmup(self) -> None:
+        """Trigger every jit compile (decode step + all prefill buckets)
+        against the trash page, so a subsequent run's TTFT and latency
+        percentiles measure serving, not compilation."""
+        sv = self.serving
+        tokens = jnp.zeros((sv.max_batch, 1), jnp.int32)
+        bt = jnp.full((sv.max_batch, sv.max_blocks_per_seq), TRASH_BLOCK,
+                      jnp.int32)
+        pos = jnp.zeros((sv.max_batch,), jnp.int32)
+        _, self.pages = self._decode_fn(self.params, self.pages, tokens,
+                                        bt, pos)
+        for bucket in sv.prefill_buckets:
+            bt_row = jnp.full((bucket // sv.block_size,), TRASH_BLOCK,
+                              jnp.int32)
+            _, self.pages = self._prefill_fn(bucket)(
+                self.params, self.pages,
+                jnp.zeros((1, bucket), jnp.int32),
+                jnp.zeros((1,), jnp.int32), bt_row)
+
+    def _bucket_for(self, n: int) -> int:
+        for b in sorted(self.serving.prefill_buckets):
+            if b >= n:
+                return b
+        raise ValueError(f"prompt of {n} tokens exceeds largest prefill "
+                         f"bucket {max(self.serving.prefill_buckets)}")
+
+    # -------------------------------------------------------------- run
+    def run(self, requests: List[Request],
+            realtime: bool = True) -> ServeMetrics:
+        """Serve ``requests`` (arrival times in seconds relative to run
+        start) to completion.  ``realtime=False`` treats arrivals as
+        already-arrived (offline batch; deterministic, used by tests)."""
+        sched = self.scheduler
+        sv = self.serving
+        for r in requests:
+            sched.submit(r)
+        t0 = time.perf_counter()
+        now = lambda: (time.perf_counter() - t0) if realtime else \
+            float("inf")
+        decode_iters = 0
+
+        while sched.has_work:
+            # ---------------- prefill phase -----------------------------
+            for _ in range(sv.max_prefill_per_iter):
+                req = sched.try_admit(now())
+                if req is None:
+                    break
+                self._prefill_one(req)
+                first = now() if realtime else 0.0
+                if req.t_first_token is None:
+                    req.t_first_token = first
+                sched.activate(req)
+                if req.done:          # max_new_tokens == 1 degenerate case
+                    sched.finish(req, now() if realtime else 0.0)
+
+            # ---------------- ragged decode phase -----------------------
+            runnable = sched.ensure_decode_blocks()
+            if not runnable:
+                if sched.waiting and not sched.running:
+                    nxt = min(r.arrival for r in sched.waiting)
+                    wait = nxt - now()
+                    if realtime and wait > 0:
+                        time.sleep(min(wait, 0.05))
+                continue
+            t_it = time.perf_counter()
+            tokens = np.zeros((sv.max_batch, 1), np.int32)
+            bt = np.full((sv.max_batch, sv.max_blocks_per_seq),
+                         TRASH_BLOCK, np.int32)
+            pos = np.zeros((sv.max_batch,), np.int32)
+            for r in runnable:
+                tokens[r.slot, 0] = r.input_token(r.pos)
+                bt[r.slot, :len(r.blocks)] = r.blocks
+                pos[r.slot] = r.pos
+            next_tok, self.pages = self._decode_fn(
+                self.params, self.pages, jnp.asarray(tokens),
+                jnp.asarray(bt), jnp.asarray(pos))
+            next_tok = np.asarray(next_tok)
+            it_s = time.perf_counter() - t_it
+            decode_iters += 1
+            for r in runnable:
+                # post-preemption replay: steps whose output token is
+                # already recorded only rebuild KV — the recomputation is
+                # identical, so the produced token is discarded, not
+                # re-sampled (token-exact resume).
+                replaying = r.pos - len(r.prompt) + 1 < len(r.generated)
+                if not replaying:
+                    r.generated.append(int(next_tok[r.slot]))
+                    r.token_latencies.append(it_s)
+                r.pos += 1
+                if r.done and not replaying:
+                    sched.finish(r, now() if realtime else 0.0)
+
+        wall = time.perf_counter() - t0
+        return self._metrics(requests, wall, decode_iters)
+
+    def _prefill_one(self, req: Request) -> None:
+        prompt = req.prefill_tokens
+        bucket = self._bucket_for(len(prompt))
+        tokens = np.zeros((1, bucket), np.int32)
+        tokens[0, :len(prompt)] = prompt
+        bt_row = np.full((bucket // self.serving.block_size,), TRASH_BLOCK,
+                         np.int32)
+        bt_row[:len(req.blocks)] = req.blocks
+        first_tok, self.pages = self._prefill_fn(bucket)(
+            self.params, self.pages, jnp.asarray(tokens),
+            jnp.asarray([len(prompt) - 1], jnp.int32),
+            jnp.asarray(bt_row))
+        if not req.generated:
+            req.generated.append(int(np.asarray(first_tok)[0]))
+        # resumed after preemption: the prefill only rebuilt the prompt's
+        # KV; recorded tokens now replay through the decode path (the
+        # backend that originally produced them), so generation is
+        # token-exact regardless of pool pressure.
+
+    def _metrics(self, requests: List[Request], wall: float,
+                 decode_iters: int) -> ServeMetrics:
+        ttfts = [r.t_first_token - r.arrival for r in requests
+                 if r.t_first_token is not None]
+        lats = [t for r in requests for t in r.token_latencies]
+        total = sum(len(r.generated) for r in requests)
+        return ServeMetrics(
+            num_requests=len(requests),
+            total_generated=total,
+            wall_s=wall,
+            throughput_tok_s=total / wall if wall > 0 else float("nan"),
+            ttft_s_mean=float(np.mean(ttfts)) if ttfts else float("nan"),
+            ttft_s_p99=_percentile(ttfts, 99),
+            token_latency_s_p50=_percentile(lats, 50),
+            token_latency_s_p99=_percentile(lats, 99),
+            preemptions=sum(r.preemptions for r in requests),
+            decode_iters=decode_iters,
+        )

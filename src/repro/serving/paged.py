@@ -1,0 +1,127 @@
+"""Device-side paged cache pool: KV pages + SOCKET side-cache pages.
+
+Layout: every layer-cache leaf of the standard decode cache (see
+:func:`repro.models.transformer.init_decode_caches`) is re-homed with the
+batch axis replaced by the **physical block axis** and the capacity axis by
+the **block size**::
+
+    k / v   : (num_blocks, KVH, block_size, hd)
+    bits    : (num_blocks, KVH, block_size, W)     (SOCKET packed hash bits)
+    vnorm   : (num_blocks, KVH, block_size)        (SOCKET value norms)
+
+Grouped (scan-stacked) layers carry a leading group axis; all per-leaf
+helpers are plain rank-polymorphic functions lifted over that axis with
+``jax.vmap``.  One block id addresses the same page in every layer, so the
+host allocator (:mod:`repro.serving.block_pool`) hands out one id list per
+request for the whole stack.
+
+The ragged engine step gathers each slot's block table into the standard
+contiguous ``(B, KVH, max_context, ...)`` view, runs the unmodified model
+decode, then scatters the one newly written token per slot back to its
+page.  This is the XLA-portable formulation; a Pallas paged-attention
+kernel that consumes block tables directly is the TPU fast path this
+layout is designed for (ROADMAP open item).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ServingSettings
+from repro.models import transformer as tfm
+
+__all__ = ["init_paged_caches", "gather_views", "scatter_token",
+           "write_prefill"]
+
+
+def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
+    """Zero-initialized paged pool, reusing the model's cache builder with
+    batch=num_blocks and capacity=block_size."""
+    serving.validate()
+    return tfm.init_decode_caches(cfg, batch=serving.num_blocks,
+                                  capacity=serving.block_size)
+
+
+# ------------------------------------------------------------------ leaves
+
+def _gather_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
+    """(NB, KVH, bs, *rest), (B, nb) -> (B, KVH, nb*bs, *rest)."""
+    b, nb = bt.shape
+    g = pages[bt]                            # (B, nb, KVH, bs, *rest)
+    g = jnp.moveaxis(g, 2, 1)                # (B, KVH, nb, bs, *rest)
+    return g.reshape(b, pages.shape[1], nb * pages.shape[2],
+                     *pages.shape[3:])
+
+
+def _scatter_leaf(pages: jax.Array, view: jax.Array, blk: jax.Array,
+                  off: jax.Array, pos: jax.Array) -> jax.Array:
+    """Write the token each slot produced at ``view[b, :, pos[b]]`` into
+    physical page ``blk[b]`` offset ``off[b]``.  Inactive slots carry
+    ``blk == TRASH_BLOCK``; duplicate trash writes are benign."""
+    b = view.shape[0]
+    tok = view[jnp.arange(b), :, pos]        # (B, KVH, *rest)
+    return pages.at[blk, :, off].set(tok.astype(pages.dtype))
+
+
+def _write_prefill_leaf(pages: jax.Array, leaf: jax.Array,
+                        bt_row: jax.Array) -> jax.Array:
+    """Scatter a batch=1 prefill cache leaf (1, KVH, bucket, *rest) into
+    pages addressed by ``bt_row`` ((bucket/bs,) block ids, trash-padded)."""
+    kvh, bucket = leaf.shape[1], leaf.shape[2]
+    bs = pages.shape[2]
+    nb = bucket // bs
+    blocks = leaf[0].reshape(kvh, nb, bs, *leaf.shape[3:])
+    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, bs, *rest)
+    return pages.at[bt_row].set(blocks.astype(pages.dtype))
+
+
+# ------------------------------------------------------------------- tree
+
+def gather_views(pages, bt: jax.Array):
+    """Materialize the ragged batch's contiguous cache views.
+
+    bt: (B, max_blocks_per_seq) int32 physical block ids (trash-padded).
+    Returns a cache pytree shaped exactly like
+    ``init_decode_caches(cfg, B, max_context)``.
+    """
+    grouped = jax.vmap(_gather_leaf, in_axes=(0, None))
+    return {
+        "groups": jax.tree_util.tree_map(
+            lambda p: grouped(p, bt), pages["groups"]),
+        "remainder": jax.tree_util.tree_map(
+            lambda p: _gather_leaf(p, bt), pages["remainder"]),
+    }
+
+
+def scatter_token(pages, views, bt: jax.Array, pos: jax.Array,
+                  block_size: int):
+    """Write each slot's newly decoded token back from the contiguous view
+    into its page; returns the updated pool pytree."""
+    b = bt.shape[0]
+    blk = bt[jnp.arange(b), pos // block_size]   # (B,) physical blocks
+    off = pos % block_size
+    grouped = jax.vmap(
+        lambda p, v: _scatter_leaf(p, v, blk, off, pos), in_axes=(0, 0))
+    return {
+        "groups": jax.tree_util.tree_map(
+            grouped, pages["groups"], views["groups"]),
+        "remainder": jax.tree_util.tree_map(
+            lambda p, v: _scatter_leaf(p, v, blk, off, pos),
+            pages["remainder"], views["remainder"]),
+    }
+
+
+def write_prefill(pages, caches, bt_row: jax.Array):
+    """Scatter a freshly prefilled (batch=1, capacity=bucket) cache pytree
+    into the pool.  ``bt_row``: (bucket/block_size,) block ids — entries
+    past the request's real block count point at the trash page."""
+    grouped = jax.vmap(
+        lambda p, c: _write_prefill_leaf(p, c, bt_row), in_axes=(0, 0))
+    return {
+        "groups": jax.tree_util.tree_map(
+            grouped, pages["groups"], caches["groups"]),
+        "remainder": jax.tree_util.tree_map(
+            lambda p, c: _write_prefill_leaf(p, c, bt_row),
+            pages["remainder"], caches["remainder"]),
+    }

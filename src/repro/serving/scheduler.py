@@ -1,0 +1,221 @@
+"""Request lifecycle + continuous-batching scheduler (host side, jax-free).
+
+Lifecycle::
+
+    WAITING --admit--> PREFILL --activate--> DECODE --finish--> FINISHED
+       ^                                       |
+       +----------- preempt (blocks freed) ----+
+
+Admission is by free-block accounting: a waiting request is admitted only
+when a decode slot is free and the pool can cover its prompt blocks plus
+one block of decode headroom.  On pool exhaustion mid-decode the scheduler
+preempts the least-recently-used running request (recompute-style: its
+blocks are freed and it re-enters the waiting queue keeping its generated
+tokens; on re-admission the original prompt is re-prefilled and recorded
+tokens replay through the decode path — resume is token-exact, see
+:attr:`Request.prefill_tokens`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+from repro.serving.block_pool import BlockPool
+
+__all__ = ["Request", "Scheduler",
+           "WAITING", "PREFILL", "DECODE", "FINISHED"]
+
+WAITING = "waiting"
+PREFILL = "prefill"
+DECODE = "decode"
+FINISHED = "finished"
+
+_rid = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request and its mutable engine-side state."""
+
+    prompt: List[int]                      # original prompt token ids
+    max_new_tokens: int
+    arrival: float = 0.0                   # seconds relative to run start
+    rid: int = dataclasses.field(default_factory=lambda: next(_rid))
+
+    state: str = WAITING
+    slot: Optional[int] = None             # decode slot while running
+    blocks: List[int] = dataclasses.field(default_factory=list)
+    generated: List[int] = dataclasses.field(default_factory=list)
+    pos: int = 0                           # next cache index to write
+    last_used: int = 0                     # scheduler clock, for LRU
+    preemptions: int = 0
+
+    # metrics (seconds relative to run start)
+    t_first_token: Optional[float] = None
+    t_finished: Optional[float] = None
+    token_latencies: List[float] = dataclasses.field(default_factory=list)
+
+    @property
+    def effective_prompt(self) -> List[int]:
+        """Original prompt plus everything already generated — after a
+        preemption the KV for generated tokens is gone and gets recomputed,
+        but the tokens themselves are kept."""
+        return self.prompt + self.generated
+
+    @property
+    def prefill_tokens(self) -> List[int]:
+        """Tokens whose KV the (re-)prefill builds: always the *original*
+        prompt.  Generated tokens are NOT re-prefilled on resume — prefill
+        runs dense attention, but their KV was originally produced under
+        the sparse decode backend, so re-prefilling them would change the
+        hidden states and hence the continuation.  Instead the engine
+        *replays* the recorded tokens through the decode path (see
+        :meth:`input_token`), which repeats the original computation
+        exactly — preemption is token-exact, not just count-exact."""
+        return self.prompt
+
+    def input_token(self, pos: int) -> int:
+        """The token consumed by a decode step writing at cache index
+        ``pos``; during post-preemption replay this is a recorded token
+        rather than the last generated one."""
+        i = pos - len(self.prompt)
+        assert 0 <= i < len(self.generated), (pos, len(self.prompt),
+                                              len(self.generated))
+        return self.generated[i]
+
+    @property
+    def num_remaining(self) -> int:
+        return self.max_new_tokens - len(self.generated)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class Scheduler:
+    """Slot + block bookkeeping for the continuous-batching engine."""
+
+    def __init__(self, pool: BlockPool, *, max_batch: int,
+                 max_blocks_per_seq: int, block_size: int):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.block_size = block_size
+        self.waiting: List[Request] = []       # FCFS by (arrival, rid)
+        self.running: Dict[int, Request] = {}  # slot -> request
+        self._free_slots = list(range(max_batch - 1, -1, -1))
+        self._clock = 0
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request) -> None:
+        if not req.prompt:
+            raise ValueError(f"request {req.rid} has an empty prompt")
+        need = self._blocks_for(len(req.prompt) + req.max_new_tokens)
+        if need > self.max_blocks_per_seq:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks > "
+                f"max_blocks_per_seq={self.max_blocks_per_seq}")
+        if need > self.pool.num_blocks - 1:
+            raise ValueError(
+                f"request {req.rid} needs {need} blocks over its lifetime "
+                f"but the pool only has {self.pool.num_blocks - 1} — "
+                "unservable even alone (the engine would spin forever)")
+        req.state = WAITING
+        self.waiting.append(req)
+        self.waiting.sort(key=lambda r: (r.arrival, r.rid))
+
+    def _blocks_for(self, tokens: int) -> int:
+        return -(-tokens // self.block_size)
+
+    # ---------------------------------------------------------- admission
+    def try_admit(self, now: float) -> Optional[Request]:
+        """Pop the first arrived waiting request that fits (free slot AND
+        prompt blocks + 1 decode-headroom block); allocate its prompt
+        blocks and move it to PREFILL.  Returns None if nothing fits."""
+        if not self._free_slots:
+            return None
+        for i, req in enumerate(self.waiting):
+            if req.arrival > now:
+                break                       # sorted: nothing arrived yet
+            need = self._blocks_for(len(req.prefill_tokens))
+            lifetime = self._blocks_for(
+                len(req.effective_prompt) + req.num_remaining)
+            # decode headroom only if the request will ever grow past its
+            # prompt blocks — otherwise a prompt filling the whole pool
+            # could pass submit() yet never admit (engine would spin).
+            headroom = 1 if lifetime > need else 0
+            if need + headroom > self.pool.num_free:
+                continue                    # try a smaller request behind it
+            blocks = self.pool.alloc(need)
+            assert blocks is not None
+            self.waiting.pop(i)
+            req.blocks = blocks
+            req.slot = self._free_slots.pop()
+            req.state = PREFILL
+            req.pos = len(req.prefill_tokens)
+            return req
+        return None
+
+    def activate(self, req: Request) -> None:
+        """Prefill done; request joins the ragged decode batch."""
+        assert req.state == PREFILL
+        req.state = DECODE
+        self.running[req.slot] = req
+
+    # ----------------------------------------------------------- stepping
+    def ensure_decode_blocks(self) -> List[Request]:
+        """Grow each running request's block table to cover writing index
+        ``pos``; preempt LRU victims on exhaustion.  Returns the requests
+        runnable this step (sorted by slot)."""
+        self._clock += 1
+        for slot in sorted(self.running):
+            req = self.running.get(slot)
+            if req is None:
+                continue
+            req.last_used = self._clock
+            while len(req.blocks) < req.pos // self.block_size + 1:
+                got = self.pool.alloc(1)
+                if got is not None:
+                    req.blocks.extend(got)
+                    continue
+                victim = self._lru_victim()
+                self.preempt(victim)
+                if victim is req:
+                    break
+        return [self.running[s] for s in sorted(self.running)]
+
+    def _lru_victim(self) -> Request:
+        return min(self.running.values(),
+                   key=lambda r: (r.last_used, -r.arrival, -r.rid))
+
+    def preempt(self, req: Request) -> None:
+        """Free the request's slot + blocks and requeue it (recompute)."""
+        assert req.state == DECODE or req.state == PREFILL
+        self.pool.free(req.blocks)
+        req.blocks = []
+        self.running.pop(req.slot, None)
+        self._free_slots.append(req.slot)
+        req.slot = None
+        req.preemptions += 1
+        self.submit(req)
+
+    def finish(self, req: Request, now: float) -> None:
+        assert req.state == DECODE
+        self.pool.free(req.blocks)
+        req.blocks = []
+        self.running.pop(req.slot)
+        self._free_slots.append(req.slot)
+        req.slot = None
+        req.state = FINISHED
+        req.t_finished = now
+
+    # ------------------------------------------------------------- status
+    @property
+    def has_work(self) -> bool:
+        return bool(self.waiting or self.running)
+
+    @property
+    def num_running(self) -> int:
+        return len(self.running)

@@ -1,0 +1,41 @@
+"""Optional-``hypothesis`` shim for the property-based tests.
+
+The container image does not guarantee ``hypothesis`` is installed, and a
+bare ``from hypothesis import ...`` at module scope aborts the *whole*
+tier-1 collection.  Importing ``given``/``settings``/``st`` from here keeps
+the non-property tests in those modules running everywhere: when
+``hypothesis`` is available the real decorators are re-exported; when it
+is missing, ``@given`` turns the test into an explicit skip and the
+strategy constructors become inert placeholders (they are only evaluated
+at decoration time).
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            def stub(*a, **k):
+                pytest.skip("hypothesis not installed")
+            stub.__name__ = fn.__name__
+            stub.__doc__ = fn.__doc__
+            return stub
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _StubStrategies:
+        """Accepts any ``st.<name>(...)`` call made inside ``@given``."""
+
+        def __getattr__(self, name):
+            def factory(*_a, **_k):
+                return None
+            return factory
+
+    st = _StubStrategies()

@@ -1,0 +1,252 @@
+"""Serving subsystem: block pool, scheduler lifecycle, and continuous
+ragged-decode parity against the static lockstep engine."""
+
+import numpy as np
+import pytest
+
+from repro.serving import (DECODE, FINISHED, WAITING, BlockPool, Request,
+                           Scheduler, TRASH_BLOCK)
+
+# --------------------------------------------------------------- block pool
+
+
+def test_pool_alloc_free_roundtrip():
+    pool = BlockPool(num_blocks=8)          # block 0 reserved
+    assert pool.num_free == 7
+    a = pool.alloc(3)
+    assert len(a) == 3 and TRASH_BLOCK not in a
+    assert pool.num_free == 4 and pool.num_used == 3
+    b = pool.alloc(4)
+    assert pool.num_free == 0
+    assert pool.alloc(1) is None            # exhausted
+    pool.free(a)
+    assert pool.num_free == 3
+    pool.free(b)
+    assert pool.num_free == 7 and pool.num_used == 0
+
+
+def test_pool_alloc_is_all_or_nothing():
+    pool = BlockPool(num_blocks=4)
+    assert pool.alloc(5) is None
+    assert pool.num_free == 3               # state unchanged on failure
+    got = pool.alloc(3)
+    assert sorted(got) == [1, 2, 3]
+
+
+def test_pool_rejects_bad_frees():
+    pool = BlockPool(num_blocks=4)
+    blocks = pool.alloc(2)
+    pool.free(blocks)
+    with pytest.raises(ValueError):
+        pool.free(blocks)                   # double free
+    with pytest.raises(ValueError):
+        pool.free([TRASH_BLOCK])            # trash page is not freeable
+
+
+# ---------------------------------------------------------------- scheduler
+
+
+def _sched(num_blocks=16, max_batch=2, max_nb=8, bs=8):
+    return Scheduler(BlockPool(num_blocks), max_batch=max_batch,
+                     max_blocks_per_seq=max_nb, block_size=bs)
+
+
+def test_scheduler_admission_is_fcfs_and_slot_gated():
+    s = _sched(max_batch=2)
+    reqs = [Request(prompt=[1] * 8, max_new_tokens=4, arrival=0.1 * i)
+            for i in range(3)]
+    for r in reqs:
+        s.submit(r)
+    first = s.try_admit(now=1.0)
+    second = s.try_admit(now=1.0)
+    assert (first.rid, second.rid) == (reqs[0].rid, reqs[1].rid)
+    assert s.try_admit(now=1.0) is None     # both slots taken
+    assert first.state == "prefill" and first.blocks
+    s.activate(first)
+    s.activate(second)
+    s.finish(first, now=2.0)
+    assert first.state == FINISHED and first.blocks == []
+    third = s.try_admit(now=2.0)            # freed slot admits the queue head
+    assert third.rid == reqs[2].rid
+
+
+def test_scheduler_respects_arrival_times():
+    s = _sched()
+    r = Request(prompt=[1] * 8, max_new_tokens=4, arrival=5.0)
+    s.submit(r)
+    assert s.try_admit(now=1.0) is None     # not arrived yet
+    assert s.try_admit(now=5.0) is not None
+
+
+def test_scheduler_admission_accounts_free_blocks():
+    # pool of 3 usable blocks; a 2-block prompt + 1 headroom fits, but a
+    # second identical request must wait until the first frees its blocks.
+    s = _sched(num_blocks=4, max_batch=2, bs=8)
+    a = Request(prompt=[1] * 16, max_new_tokens=4, arrival=0.0)
+    b = Request(prompt=[2] * 16, max_new_tokens=4, arrival=0.0)
+    s.submit(a)
+    s.submit(b)
+    got = s.try_admit(now=0.0)
+    assert got.rid == a.rid
+    assert s.try_admit(now=0.0) is None     # blocks exhausted, slot free
+    s.activate(a)
+    s.finish(a, now=1.0)
+    assert s.try_admit(now=1.0).rid == b.rid
+
+
+def test_scheduler_preempts_lru_on_block_exhaustion():
+    # 5 usable blocks, two 2-block requests admitted (4 used, 1 free);
+    # both then need a 3rd block -> the LRU one is preempted, requeued
+    # with its generated tokens intact, and its blocks are freed.
+    s = _sched(num_blocks=6, max_batch=2, bs=8)
+    a = Request(prompt=[1] * 16, max_new_tokens=20, arrival=0.0)
+    b = Request(prompt=[2] * 16, max_new_tokens=20, arrival=0.1)
+    s.submit(a)
+    s.submit(b)
+    for r in (s.try_admit(1.0), s.try_admit(1.0)):
+        s.activate(r)
+    a.generated = [7, 8]
+    b.generated = [9]
+    a.pos = 18                              # wants block 3 (covers idx 18)
+    b.pos = 17
+    runnable = s.ensure_decode_blocks()
+    assert len(runnable) == 1               # one survivor, one preempted
+    preempted, survivor = (a, b) if a.state == WAITING else (b, a)
+    assert survivor.state == DECODE and len(survivor.blocks) == 3
+    assert preempted.blocks == [] and preempted.preemptions == 1
+    assert preempted in s.waiting
+    # generated tokens preserved and folded into the re-prefill prompt
+    assert preempted.effective_prompt[:16] == preempted.prompt
+    assert len(preempted.effective_prompt) == 16 + len(preempted.generated)
+
+
+def test_scheduler_admits_pool_filling_request_without_headroom():
+    # lifetime blocks == prompt blocks == whole pool: no decode block will
+    # ever be needed, so admission must not demand +1 headroom (it used to,
+    # leaving the request unadmittable forever -> engine spin).
+    s = _sched(num_blocks=4, max_batch=1, bs=8)
+    r = Request(prompt=[1] * 22, max_new_tokens=2, arrival=0.0)
+    s.submit(r)
+    got = s.try_admit(now=0.0)
+    assert got is r and len(r.blocks) == 3
+
+
+def test_scheduler_rejects_unservable_requests():
+    s = _sched(num_blocks=4, max_nb=64, bs=8)
+    with pytest.raises(ValueError):         # needs more than the whole pool
+        s.submit(Request(prompt=[1] * 64, max_new_tokens=8, arrival=0.0))
+    with pytest.raises(ValueError):         # exceeds per-seq block table
+        _sched(max_nb=2).submit(
+            Request(prompt=[1] * 32, max_new_tokens=8, arrival=0.0))
+
+
+# ------------------------------------------------- continuous-engine parity
+
+
+def _smoke_cfg(backend):
+    from repro.configs import get_config
+    return get_config("stablelm-12b").smoke().replace(
+        attention_backend=backend)
+
+
+@pytest.mark.parametrize("backend", ["socket", "dense"])
+def test_continuous_matches_static_same_length(backend):
+    """Same-length requests through the paged ragged engine reproduce the
+    static lockstep engine token-for-token (same params, same prompts)."""
+    import jax
+    from repro.launch.serve import run_serve
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke_cfg(backend)
+    batch, plen, steps = 3, 24, 8
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(0, cfg.vocab_size, size=(batch, plen))
+    static_toks, _, _ = run_serve(cfg, batch, plen, steps, seed=0,
+                                  prompt=prompts)
+
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    reqs = [Request(prompt=prompts[i].tolist(),
+                    max_new_tokens=steps + 1, arrival=0.0)
+            for i in range(batch)]
+    engine.run(reqs, realtime=False)
+
+    static_toks = np.asarray(static_toks)
+    for i, r in enumerate(reqs):
+        assert r.state == FINISHED
+        assert r.generated == static_toks[i].tolist(), (
+            f"request {i}: {r.generated} != {static_toks[i].tolist()}")
+
+
+def test_continuous_mixed_lengths_match_per_request_static():
+    """Ragged batch of different prompt lengths: every request must decode
+    exactly as if it were served alone by the static engine."""
+    import jax
+    from repro.launch.serve import run_serve
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke_cfg("socket")
+    steps = 6
+    rng = np.random.default_rng(1)
+    plens = [8, 24]
+    prompts = [rng.integers(0, cfg.vocab_size, size=(1, p)) for p in plens]
+
+    refs = []
+    for pr in prompts:
+        toks, _, _ = run_serve(cfg, 1, pr.shape[1], steps, seed=0,
+                               prompt=pr)
+        refs.append(np.asarray(toks)[0].tolist())
+
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    reqs = [Request(prompt=pr[0].tolist(), max_new_tokens=steps + 1,
+                    arrival=0.0) for pr in prompts]
+    engine.run(reqs, realtime=False)
+    for r, ref in zip(reqs, refs):
+        assert r.generated == ref, (r.generated, ref)
+
+
+def test_continuous_engine_preemption_end_to_end():
+    """A pool too small for the full working set forces preemption; every
+    request must still finish with the full token budget AND the exact
+    token sequence an unpressured pool produces (recompute-resume goes
+    through the sparse decode path, not the prefill logits)."""
+    import jax
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke_cfg("socket")
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).tolist()
+               for _ in range(2)]
+
+    def serve(num_blocks):
+        eng = ContinuousBatchingEngine(
+            cfg.replace(serving=cfg.serving.replace(
+                num_blocks=num_blocks, max_batch=2)),
+            rng=jax.random.PRNGKey(0))
+        reqs = [Request(prompt=p, max_new_tokens=24, arrival=0.0)
+                for p in prompts]
+        metrics = eng.run(reqs, realtime=False)
+        return eng, reqs, metrics
+
+    # 8 usable blocks; two requests each admitted at 2 prompt blocks but
+    # growing to 5 over 24 generated tokens (10 total > 8) -> exhaustion.
+    engine, reqs, metrics = serve(num_blocks=9)
+    for r in reqs:
+        assert r.state == FINISHED and len(r.generated) == 24
+    assert metrics.preemptions > 0          # the pool really was too small
+    assert engine.pool.num_used == 0        # everything returned
+
+    _, calm_reqs, calm_metrics = serve(num_blocks=48)
+    assert calm_metrics.preemptions == 0
+    for pressured, calm in zip(reqs, calm_reqs):
+        assert pressured.generated == calm.generated
+
+
+def test_engine_rejects_unsupported_configs():
+    from repro.configs import get_config
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    with pytest.raises(NotImplementedError):   # sliding-window layers
+        ContinuousBatchingEngine(get_config("gemma3-27b").smoke())
+    with pytest.raises(NotImplementedError):   # quest metadata not paged
+        ContinuousBatchingEngine(
+            _smoke_cfg("quest"))
