@@ -3,7 +3,9 @@
 The paper's fig. 3 throughput story at *serving* granularity: Poisson
 arrivals, mixed prompt lengths, paged KV + SOCKET bit-cache.  Reports
 decode throughput, TTFT and p50/p99 per-token latency per backend, plus
-the static-batch baseline for the same token volume.
+the static-batch baseline for the same token volume, plus the per-step
+gathered-bytes accounting (full contiguous views vs the paged top-k
+gather) that the DecodeBackend/KVView redesign exists to win.
 
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke
 """
@@ -47,6 +49,11 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
                                  prompt_lens=lens, max_new_tokens=max_new,
                                  seed=0, warmup=True)
         assert all(r.state == "finished" for r in reqs)
+        # memory-traffic accounting: bytes a decode step would move by
+        # materializing full contiguous cache views vs what the paged
+        # backend actually gathers (metadata + top-k K/V rows)
+        from repro.serving.paged import gather_footprint
+        fp = gather_footprint(cfg)
         rows.append((f"serve_continuous_{backend}", {
             "tput_tok_s": float(m.throughput_tok_s),
             "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
@@ -55,6 +62,9 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
             "preemptions": m.preemptions,
             "decode_iters": m.decode_iters,
             "requests": num_requests,
+            "gathered_kb_full_view": fp["full_view_bytes_per_step"] / 1024,
+            "gathered_kb_per_step": fp["paged_bytes_per_step"] / 1024,
+            "selected_kv_rows": fp["selected_rows"],
         }))
 
         # static lockstep baseline: same #sequences at the mean length

@@ -20,7 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["QuestConfig", "build", "score_pages", "attend"]
+__all__ = ["QuestConfig", "build", "score_pages", "page_budget",
+           "select_tokens", "attend"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,21 +78,37 @@ def token_scores(state: QuestState, cfg: QuestConfig, q: jax.Array,
     return rep[..., :n]
 
 
-def attend(cfg: QuestConfig, state: QuestState, q: jax.Array,
-           k_cache: jax.Array, v_cache: jax.Array, *, length,
-           scale: float) -> jax.Array:
-    """Decode attention over the top pages (q: (B,KVH,G,1,hd))."""
+def page_budget(cfg: QuestConfig, n_pages: int, n: int) -> int:
+    """Static page-selection budget for a token capacity of ``n`` (shared
+    by :func:`select_tokens` and the serving gather accounting)."""
+    budget_tokens = max(cfg.min_pages * cfg.page_size,
+                        int(np.ceil(n / cfg.sparsity)))
+    return min(n_pages, max(cfg.min_pages, budget_tokens // cfg.page_size))
+
+
+def select_tokens(cfg: QuestConfig, state: QuestState, q: jax.Array, *,
+                  length, n: int):
+    """Top-page selection expanded to token indices for one decode step.
+
+    q: (B,KVH,G,1,hd); ``length`` scalar or per-request ``(B,)`` vector;
+    ``n``: token capacity of the cache the indices address.  Sink-prefix
+    and trailing-window pages are force-included; pages past ``length``
+    are masked out.  Returns (idx ``(B,KVH,k_pages*ps)`` int32, validity
+    mask of the same shape).
+    """
     from repro.core import socket as sk
 
-    b, kvh, g, t, hd = q.shape
-    n = k_cache.shape[2]
+    b, kvh = q.shape[:2]
     ps = cfg.page_size
     n_pages = state.kmin.shape[-2]
-    budget_tokens = max(cfg.min_pages * ps,
-                        int(np.ceil(n / cfg.sparsity)))
-    k_pages = min(n_pages, max(cfg.min_pages, budget_tokens // ps))
+    k_pages = page_budget(cfg, n_pages, n)
 
-    scores = score_pages(state, q[..., 0, :])       # (B,KVH,G,n_pages)
+    # explicit G axis on the stats: (B,KVH,1,n_pages,d) against q's
+    # (B,KVH,G,·,d) — rank-only broadcasting silently misaligned B with G
+    # whenever batch != group size
+    state_g = QuestState(kmin=state.kmin[..., None, :, :],
+                         kmax=state.kmax[..., None, :, :])
+    scores = score_pages(state_g, q[..., 0, :])     # (B,KVH,G,n_pages)
     scores = jnp.sum(scores, axis=2)                # (B,KVH,n_pages)
 
     # (B,) per-request ragged lengths broadcast against (B,KVH,n_pages)
@@ -109,7 +126,17 @@ def attend(cfg: QuestConfig, state: QuestState, q: jax.Array,
     offs = jnp.arange(ps, dtype=jnp.int32)
     idx = (top_pages[..., None] * ps + offs).reshape(b, kvh, k_pages * ps)
     idx = jnp.minimum(idx, n - 1)
-    sel_mask = idx < length
+    return idx, idx < length
+
+
+def attend(cfg: QuestConfig, state: QuestState, q: jax.Array,
+           k_cache: jax.Array, v_cache: jax.Array, *, length,
+           scale: float) -> jax.Array:
+    """Decode attention over the top pages (q: (B,KVH,G,1,hd))."""
+    from repro.core import socket as sk
+
+    idx, sel_mask = select_tokens(cfg, state, q, length=length,
+                                  n=k_cache.shape[2])
     k_sel = jnp.take_along_axis(k_cache, idx[..., None], axis=2)
     v_sel = jnp.take_along_axis(v_cache, idx[..., None], axis=2)
     return sk.sparse_attention_over_subset(q, k_sel, v_sel, sel_mask,

@@ -17,7 +17,8 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
-__all__ = ["LayerSpec", "ModelConfig", "SocketSettings", "ServingSettings"]
+__all__ = ["LayerSpec", "ModelConfig", "SocketSettings", "QuestSettings",
+           "ServingSettings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +49,25 @@ class SocketSettings:
     # "pooled": score once with the group-mean query (G x less score
     #           compute/memory; §Perf fidelity numbers in EXPERIMENTS.md)
     selection: str = "kvhead"
+    # Pallas kernel routing for the decode path (models.backends.socket):
+    # score via kernels/socket_score and attend the selected subset via
+    # kernels/flash_decode.  Off-TPU both run in interpret mode (bit-exact
+    # semantics, interpreter speed) — the XLA fallback is the CPU default.
+    use_score_kernel: bool = False
+    use_flash_decode: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class QuestSettings:
+    """Quest baseline page geometry (models.backends.quest).
+
+    ``page_size`` is the single source of truth for Quest's metadata
+    granularity; it must divide ``ServingSettings.block_size`` so each
+    paged-pool block carries whole min/max rows.
+    """
+
+    page_size: int = 16
+    min_pages: int = 4
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,8 +157,10 @@ class ModelConfig:
     remat_policy: str = "none"      # "none" | "full" | "dots"
     logical_pad_heads: bool = False # zero-pad heads to mesh divisibility
     # --- sparse attention (the paper's technique) --------------------------
-    attention_backend: str = "socket"  # decode backend: socket|dense|quest|hard_lsh
+    # decode backend name, resolved via repro.models.backends.get_backend
+    attention_backend: str = "socket"
     socket: SocketSettings = SocketSettings()
+    quest: QuestSettings = QuestSettings()
     # --- continuous-batching serving engine (repro.serving) ----------------
     serving: ServingSettings = ServingSettings()
     # context-parallel SOCKET decode: shard_map local-topk + psum merge over
@@ -251,6 +273,7 @@ class ModelConfig:
             socket=dataclasses.replace(
                 self.socket, num_planes=6, num_tables=12, sink_tokens=4,
                 window_tokens=4, min_k=8, sparsity=4.0),
+            quest=dataclasses.replace(self.quest, page_size=8),
             serving=dataclasses.replace(
                 self.serving, block_size=8, num_blocks=48, max_batch=4,
                 max_blocks_per_seq=8, prefill_buckets=(24, 32, 48, 64)),

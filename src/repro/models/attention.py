@@ -4,52 +4,70 @@ Training/prefill: dense causal attention (XLA einsum path — the Pallas
 ``flash_prefill`` kernel is the TPU fast path and is validated against the
 same math in tests).  Local layers apply a sliding-window mask.
 
-Decode: the KV cache is ``(B, KVH, N, hd)``.  Global layers dispatch on
-``cfg.attention_backend``:
+Decode — the ``DecodeBackend`` / ``KVView`` contract
+----------------------------------------------------
 
-* ``socket``    — the paper's technique (Algorithms 1-3): packed hash bits +
-                  value norms live in the cache; scoring via the factorized
-                  soft-collision kernel; exact attention over top-k.
-* ``hard_lsh``  — same cached bits, hard collision counting (ablation).
-* ``quest``     — page min/max metadata + page top-k.
-* ``dense``     — full attention (baseline / roofline reference).
+Global layers own no backend logic: every decode backend (``socket``,
+``hard_lsh``, ``quest``, ``dense``, …) is one module in
+:mod:`repro.models.backends` implementing the
+:class:`~repro.models.backends.DecodeBackend` interface and registered
+under its ``cfg.attention_backend`` name:
 
-Local (sliding-window) layers decode from a ring buffer of ``window`` slots
-— for gemma3's 5:1 pattern this keeps the long_500k cache bounded by the
-window on 52 of 62 layers (DESIGN.md §5).
+* ``cache_spec(cfg)``     — declarative leaf layout (trailing shape,
+                            dtype, sequence granularity, init fill);
+                            :func:`init_attention_cache` and
+                            :func:`cache_logical_axes` derive from it.
+* ``prefill_build(...)``  — prompt K/V rows + backend metadata into a
+                            fresh contiguous cache.
+* ``append(...)``         — one new token through a ``KVView``.
+* ``attend(...)``         — decode attention against a ``KVView``.
+
+A :class:`~repro.models.backends.KVView` hides cache layout:
+``ContiguousView`` wraps the standard ``(B, KVH, N, ...)`` cache used by
+the static/batch path; ``PagedView`` wraps the serving engine's page pool
+plus a per-request block table (pass ``block_tables`` to
+:func:`attention_decode`).  Backends whose ``attend`` touches K/V only
+through indexed ``gather_rows`` (top-k selection) declare
+``supports_paged`` — the serving engine then skips contiguous-view
+materialization entirely and per decode step moves only the small
+metadata leaves plus ``O(top_k)`` K/V rows.
+
+**Adding a backend**: write one module under ``models/backends/``
+implementing the four methods against the ``KVView`` API, register it in
+``models/backends/__init__.py``, and it is reachable from training-free
+decode, the static serve path and (if paged-capable) the continuous
+engine, with sharding axes and paged-pool layout derived from its spec.
+
+``pos`` may be a scalar (lockstep batch) or a ``(B,)`` vector of
+per-request positions (ragged serving batch); backends derive per-request
+sparsity budgets from the vector case.
+
+Local (sliding-window) layers decode from a ring buffer of ``window``
+slots — for gemma3's 5:1 pattern this keeps the long_500k cache bounded
+by the window on 52 of 62 layers (DESIGN.md §5).  Ring buffers are
+per-slot state, not backend-routed (paging them is a ROADMAP item).
 """
 
 from __future__ import annotations
 
-import math
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.baselines import oracle
 from repro.configs.base import ModelConfig
-from repro.core import hashing, socket
 from repro.distributed import sharding as shd
 from repro.distributed.sharding import lsc
+from repro.models import backends
 from repro.models import param as pm
+from repro.models.backends import socket_config_of
 from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, softcap
 
 __all__ = ["init_attention", "attention_train", "attention_prefill",
            "attention_decode", "init_attention_cache", "socket_config_of"]
 
 NEG_INF = -1e30
-
-
-def socket_config_of(cfg: ModelConfig) -> socket.SocketConfig:
-    s = cfg.socket
-    return socket.SocketConfig(
-        num_planes=s.num_planes, num_tables=s.num_tables, tau=s.tau,
-        sparsity=s.sparsity, sink_tokens=s.sink_tokens,
-        window_tokens=s.window_tokens, min_k=s.min_k,
-        bits_storage=s.bits_storage, score_chunk=s.score_chunk,
-        score_dtype=s.score_dtype, selection=s.selection)
 
 
 def _eff_heads(cfg: ModelConfig) -> Tuple[int, int]:
@@ -238,46 +256,18 @@ def init_attention_cache(cfg: ModelConfig, batch: int, capacity: int,
             "k": jnp.zeros((batch, kv, cap, hd), dtype),
             "v": jnp.zeros((batch, kv, cap, hd), dtype),
         }
-    cache = {
-        "k": jnp.zeros((batch, kv, capacity, hd), dtype),
-        "v": jnp.zeros((batch, kv, capacity, hd), dtype),
-    }
-    backend = cfg.attention_backend
-    if backend in ("socket", "hard_lsh"):
-        scfg = socket_config_of(cfg)
-        if scfg.bits_storage == "packed":
-            w = hashing.num_words(scfg.num_tables, scfg.num_planes)
-            cache["bits"] = jnp.zeros((batch, kv, capacity, w), jnp.uint32)
-        else:
-            cache["bits"] = jnp.zeros(
-                (batch, kv, capacity, scfg.num_tables * scfg.num_planes),
-                jnp.int8)
-        cache["vnorm"] = jnp.zeros((batch, kv, capacity), jnp.bfloat16)
-    elif backend == "quest":
-        ps = 16
-        n_pages = (capacity + ps - 1) // ps
-        cache["kmin"] = jnp.full((batch, kv, n_pages, hd), np.inf, dtype)
-        cache["kmax"] = jnp.full((batch, kv, n_pages, hd), -np.inf, dtype)
-    return cache
+    backend = backends.get_backend(cfg.attention_backend)
+    return backend.init_cache(cfg, batch, kv, capacity, dtype)
 
 
 def cache_logical_axes(cfg: ModelConfig, attn_type: str,
                        long_context: bool = False) -> Dict:
     """Logical axis names mirroring :func:`init_attention_cache`."""
-    seq = "cache_seq_cp" if long_context else "cache_seq"
-    base = {"k": ("cache_batch", "cache_heads", seq, None),
-            "v": ("cache_batch", "cache_heads", seq, None)}
     if attn_type == "local":
         return {"k": ("cache_batch", "cache_heads", "cache_seq", None),
                 "v": ("cache_batch", "cache_heads", "cache_seq", None)}
-    backend = cfg.attention_backend
-    if backend in ("socket", "hard_lsh"):
-        base["bits"] = ("cache_batch", "cache_heads", seq, None)
-        base["vnorm"] = ("cache_batch", "cache_heads", seq)
-    elif backend == "quest":
-        base["kmin"] = ("cache_batch", "cache_heads", seq, None)
-        base["kmax"] = ("cache_batch", "cache_heads", seq, None)
-    return base
+    seq = "cache_seq_cp" if long_context else "cache_seq"
+    return backends.get_backend(cfg.attention_backend).cache_axes(cfg, seq)
 
 
 # ---------------------------------------------------------------- prefill
@@ -307,122 +297,32 @@ def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
         cache["v"] = cache["v"].at[:, :, slot].set(
             jnp.take(vc, src, axis=2))
         return y, cache
-    cache["k"] = cache["k"].at[:, :, :t].set(kc)
-    cache["v"] = cache["v"].at[:, :, :t].set(vc)
-    backend = cfg.attention_backend
-    if backend in ("socket", "hard_lsh"):
-        scfg = socket_config_of(cfg)
-        side = socket.precompute_key_hashes(
-            scfg, jax.lax.stop_gradient(params["hash_w"]), kc, vc)
-        cache["bits"] = cache["bits"].at[:, :, :t].set(side.bits)
-        cache["vnorm"] = cache["vnorm"].at[:, :, :t].set(
-            side.vnorm.astype(cache["vnorm"].dtype))
-    elif backend == "quest":
-        ps = 16
-        n_pages_t = (t + ps - 1) // ps
-        pad = n_pages_t * ps - t
-        kpad_min = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
-                           constant_values=np.inf)
-        kpad_max = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
-                           constant_values=-np.inf)
-        kmin = kpad_min.reshape(b, kc.shape[1], n_pages_t, ps,
-                                cfg.head_dim).min(axis=3)
-        kmax = kpad_max.reshape(b, kc.shape[1], n_pages_t, ps,
-                                cfg.head_dim).max(axis=3)
-        cache["kmin"] = cache["kmin"].at[:, :, :n_pages_t].set(kmin)
-        cache["kmax"] = cache["kmax"].at[:, :, :n_pages_t].set(kmax)
-    return y, cache
+    backend = backends.get_backend(cfg.attention_backend)
+    return y, backend.prefill_build(cfg, params, cache, kc, vc)
 
 
 # ----------------------------------------------------------------- decode
 
-def _decode_update_global(cfg: ModelConfig, params: Dict, cache: Dict,
-                          k_new: jax.Array, v_new: jax.Array,
-                          pos: jax.Array) -> Dict:
-    """Append the new token's K/V (+ backend metadata) at index ``pos``.
-
-    ``pos`` is a scalar (whole batch at one position) or a ``(B,)`` vector
-    of per-request positions (ragged serving batch → per-row scatter).
-    """
-    cache = dict(cache)
-    kc = jnp.swapaxes(k_new, 1, 2)  # (B,KV,1,hd)
-    vc = jnp.swapaxes(v_new, 1, 2)
-    b, kv, _, hd = kc.shape
-    ragged = jnp.ndim(pos) == 1
-    if ragged:
-        bidx = jnp.arange(b)
-        cache["k"] = cache["k"].at[bidx, :, pos].set(
-            kc[:, :, 0].astype(cache["k"].dtype))
-        cache["v"] = cache["v"].at[bidx, :, pos].set(
-            vc[:, :, 0].astype(cache["v"].dtype))
-    else:
-        cache["k"] = jax.lax.dynamic_update_slice(
-            cache["k"], kc.astype(cache["k"].dtype), (0, 0, pos, 0))
-        cache["v"] = jax.lax.dynamic_update_slice(
-            cache["v"], vc.astype(cache["v"].dtype), (0, 0, pos, 0))
-    backend = cfg.attention_backend
-    if backend in ("socket", "hard_lsh"):
-        scfg = socket_config_of(cfg)
-        side = socket.precompute_key_hashes(scfg, params["hash_w"], kc, vc)
-        if ragged:
-            bidx = jnp.arange(b)
-            cache["bits"] = cache["bits"].at[bidx, :, pos].set(
-                side.bits[:, :, 0])
-            cache["vnorm"] = cache["vnorm"].at[bidx, :, pos].set(
-                side.vnorm[:, :, 0].astype(cache["vnorm"].dtype))
-        else:
-            cache["bits"] = jax.lax.dynamic_update_slice(
-                cache["bits"], side.bits, (0, 0, pos, 0))
-            cache["vnorm"] = jax.lax.dynamic_update_slice(
-                cache["vnorm"], side.vnorm.astype(cache["vnorm"].dtype),
-                (0, 0, pos))
-    elif backend == "quest":
-        page = pos // 16
-        if ragged:
-            bidx = jnp.arange(b)
-            knew = kc[:, :, 0]
-            cache["kmin"] = cache["kmin"].at[bidx, :, page].min(
-                knew.astype(cache["kmin"].dtype))
-            cache["kmax"] = cache["kmax"].at[bidx, :, page].max(
-                knew.astype(cache["kmax"].dtype))
-        else:
-            old_min = jax.lax.dynamic_slice(
-                cache["kmin"], (0, 0, page, 0), (b, kv, 1, hd))
-            old_max = jax.lax.dynamic_slice(
-                cache["kmax"], (0, 0, page, 0), (b, kv, 1, hd))
-            cache["kmin"] = jax.lax.dynamic_update_slice(
-                cache["kmin"], jnp.minimum(old_min,
-                                           kc.astype(old_min.dtype)),
-                (0, 0, page, 0))
-            cache["kmax"] = jax.lax.dynamic_update_slice(
-                cache["kmax"], jnp.maximum(old_max,
-                                           kc.astype(old_max.dtype)),
-                (0, 0, page, 0))
-    return cache
-
-
-def _hard_lsh_decode_scores(scfg: socket.SocketConfig, bits: jax.Array,
-                            u_signs: jax.Array) -> jax.Array:
-    """Hard collision counts from the same packed bits (tau->0 ablation)."""
-    l, p = scfg.num_tables, scfg.num_planes
-    k_signs = hashing.unpack_signs(bits, l, p)           # (B,KV,N,L,P)
-    agree = jnp.einsum("bknlp,bkglp->bkgnl", k_signs, u_signs)
-    return jnp.sum((agree >= p).astype(jnp.float32), axis=-1)
-
-
 def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
                      cache: Dict, pos: jax.Array, attn_type: str,
+                     block_tables: Optional[jax.Array] = None,
                      ) -> Tuple[jax.Array, Dict]:
     """One decode step.  x: (B, 1, d); pos: scalar int32 (current index)
     OR a ``(B,)`` int32 vector of per-request indices (ragged serving
     batch — each row of the batch sits at its own context length).
 
-    In the ragged case SOCKET's top-k budget is applied *per request* from
-    each live length (``k_r = clip(ceil(len_r / sparsity), min_k, k_cap)``)
-    via dynamic masking under a static ``top_k`` — the serving-engine
-    realization of the paper's ``k = N / sparsity``.
+    ``block_tables``: when given (``(B, blocks_per_seq)`` physical block
+    ids), ``cache`` is the serving engine's **page pool** rather than a
+    contiguous cache — the backend appends and attends through a
+    :class:`~repro.models.backends.PagedView`, so paged-capable backends
+    never materialize the full per-request K/V view.
 
-    Returns (y (B,1,d), updated cache).
+    In the ragged case the sparse backends' top-k budget is applied *per
+    request* from each live length (``k_r = clip(ceil(len_r / sparsity),
+    min_k, k_cap)``) via dynamic masking under a static ``top_k`` — the
+    serving-engine realization of the paper's ``k = N / sparsity``.
+
+    Returns (y (B,1,d), updated cache/pool).
     """
     b = x.shape[0]
     hd = cfg.head_dim
@@ -471,71 +371,18 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
         ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
                          cache["v"].astype(jnp.float32))
     else:
-        cache = _decode_update_global(cfg, params, cache, k_new, v_new, pos)
-        length = pos + 1
-        backend = cfg.attention_backend
-        if ragged and backend in ("socket", "hard_lsh"):
-            scfg = socket_config_of(cfg)
-            budget = socket.dynamic_topk_budget(
-                scfg, length, socket.topk_budget(scfg, cache["k"].shape[2]))
+        backend = backends.get_backend(cfg.attention_backend)
+        spec = backend.cache_spec(cfg)
+        if block_tables is None:
+            view = backends.ContiguousView(cache, spec)
         else:
-            budget = None
-        if backend == "dense":
-            ctx = oracle.dense_attention(qg, cache["k"], cache["v"],
-                                         scale=scale, length=length)
-        elif backend == "socket":
-            scfg = socket_config_of(cfg)
-            mesh = shd.current_mesh()
-            if cfg.decode_cp_axes and mesh is not None and any(
-                    a in mesh.shape for a in cfg.decode_cp_axes):
-                if ragged:
-                    raise NotImplementedError(
-                        "ragged decode + context-parallel SOCKET: use the "
-                        "pjit/XLA path (decode_cp_axes=())")
-                # §Perf: shard_map context-parallel path — local top-k per
-                # sequence shard + psum online-softmax merge; avoids
-                # materializing the (B,KVH,N) global score tensor
-                from repro.distributed.context_parallel import \
-                    context_parallel_socket_attend
-                ctx = context_parallel_socket_attend(
-                    scfg, mesh, cfg.decode_cp_axes, params["hash_w"], qg,
-                    cache["k"], cache["v"], cache["bits"],
-                    cache["vnorm"].astype(jnp.float32),
-                    length=length, scale=scale,
-                    batch_axes=cfg.decode_cp_batch_axes)
-            else:
-                ctx = socket.socket_attend(
-                    scfg, params["hash_w"], qg, cache["k"], cache["v"],
-                    socket.SocketCache(bits=cache["bits"],
-                                       vnorm=cache["vnorm"]),
-                    length=length, scale=scale, budget=budget)
-        elif backend == "hard_lsh":
-            scfg = socket_config_of(cfg)
-            n = cache["k"].shape[2]
-            u = socket.soft_hash_query(params["hash_w"], qg[..., 0, :])
-            u_signs = jnp.where(u >= 0, 1.0, -1.0)
-            scores = _hard_lsh_decode_scores(scfg, cache["bits"], u_signs)
-            scores = jnp.sum(scores, axis=2)
-            kq = socket.topk_budget(scfg, n)
-            idx, sel_mask = socket.value_aware_topk(
-                scfg, scores, cache["vnorm"].astype(jnp.float32), k=kq,
-                length=length, n_total=n, budget=budget)
-            k_sel = jnp.take_along_axis(cache["k"], idx[..., None], axis=2)
-            v_sel = jnp.take_along_axis(cache["v"], idx[..., None], axis=2)
-            ctx = socket.sparse_attention_over_subset(
-                qg, k_sel, v_sel, sel_mask, scale=scale)
-        elif backend == "quest":
-            from repro.baselines import quest as quest_mod
-            qcfg = quest_mod.QuestConfig(
-                page_size=16, sparsity=cfg.socket.sparsity,
-                sink_tokens=cfg.socket.sink_tokens,
-                window_tokens=cfg.socket.window_tokens)
-            state = quest_mod.QuestState(kmin=cache["kmin"],
-                                         kmax=cache["kmax"])
-            ctx = quest_mod.attend(qcfg, state, qg, cache["k"], cache["v"],
-                                   length=length, scale=scale)
-        else:
-            raise ValueError(backend)
+            view = backends.PagedView(cache, spec, block_tables,
+                                      block_size=cfg.serving.block_size)
+        backend.append(cfg, params, view, jnp.swapaxes(k_new, 1, 2),
+                       jnp.swapaxes(v_new, 1, 2), pos)
+        ctx = backend.attend(cfg, params, qg, view, length=pos + 1,
+                             scale=scale)
+        cache = view.arrays
 
     ctx = jnp.transpose(ctx, (0, 3, 1, 2, 4)).reshape(b, 1, h_eff, hd)
     return _merge_heads(cfg, params, ctx.astype(x.dtype)), cache

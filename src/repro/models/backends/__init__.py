@@ -1,0 +1,57 @@
+"""Decode-backend registry.
+
+Every global-attention decode backend is one module implementing the
+:class:`~repro.models.backends.base.DecodeBackend` interface and
+registered here under its ``cfg.attention_backend`` name.  Adding a
+backend = one module + one :func:`register` call; nothing in
+``models/attention.py`` or the serving engine branches on backend names.
+
+See ``base.py`` for the contract (cache_spec / prefill_build / append /
+attend over a :class:`~repro.models.backends.base.KVView`) and
+``src/repro/serving/README.md`` for what paged capability requires.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+from repro.models.backends.base import (ContiguousView, DecodeBackend,
+                                        KVView, LeafSpec, PagedView,
+                                        gather_trace, gather_trace_reset)
+
+__all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
+           "LeafSpec", "register", "get_backend", "registered_backends",
+           "gather_trace", "gather_trace_reset", "socket_config_of"]
+
+_REGISTRY: Dict[str, DecodeBackend] = {}
+
+
+def register(cls):
+    """Class decorator: instantiate and register a backend by its name."""
+    assert cls.name, cls
+    _REGISTRY[cls.name] = cls()
+    return cls
+
+
+def get_backend(name: str) -> DecodeBackend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown attention backend {name!r}; registered: "
+            f"{registered_backends()}") from None
+
+
+def registered_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---- built-in backends ----------------------------------------------------
+from repro.models.backends.dense import DenseBackend
+from repro.models.backends.hard_lsh import HardLSHBackend
+from repro.models.backends.quest import QuestBackend
+from repro.models.backends.socket import SocketBackend, socket_config_of
+
+for _cls in (SocketBackend, HardLSHBackend, QuestBackend, DenseBackend):
+    register(_cls)
+del _cls

@@ -1,0 +1,341 @@
+"""DecodeBackend protocol + KVView abstraction for sparse decode attention.
+
+A **decode backend** owns one global-attention layer's cache layout and the
+three operations the model/engine needs:
+
+* ``cache_spec(cfg)``      — declarative leaf layout (:class:`LeafSpec`):
+                             trailing shape, dtype, sequence **granularity**
+                             (tokens per row — Quest metadata is
+                             page-granular), and init fill value.
+* ``prefill_build(...)``   — write the prompt's K/V rows + backend metadata
+                             into a freshly allocated contiguous cache.
+* ``append(...)``          — write one new token (K/V + metadata) through a
+                             :class:`KVView` at logical position ``pos``.
+* ``attend(...)``          — decode attention for one query step against a
+                             :class:`KVView`.
+
+``attend``/``append`` never touch array layout directly: they go through a
+:class:`KVView`, which has two realizations.  :class:`ContiguousView` wraps
+the standard ``(B, KVH, N, ...)`` cache; :class:`PagedView` wraps the
+serving engine's page pool ``(num_blocks, KVH, block_size, ...)`` plus a
+per-request block table, translating logical token indices through the
+table.  A backend whose ``attend`` reads full K/V only through
+``gather_rows`` (top-k selection) is **paged-capable**
+(``supports_paged``): the engine then never materializes contiguous K/V
+views — per step it moves only the small metadata leaves plus
+``O(top_k)`` K/V rows.
+
+Paged-view reads are recorded in a trace-time log (:func:`gather_trace`)
+so tests and benchmarks can assert exactly which leaves a backend
+materializes per decode step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["LeafSpec", "KVView", "ContiguousView", "PagedView",
+           "DecodeBackend", "kv_leaf_specs", "write_prefill_kv",
+           "subset_attention", "gather_trace", "gather_trace_reset"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LeafSpec:
+    """Layout of one cache leaf along ``(batch, KVH, seq_rows, *suffix)``.
+
+    ``granularity`` is tokens per sequence row: 1 for token-granular leaves
+    (k, v, bits, vnorm), ``page_size`` for Quest's per-page min/max
+    statistics.  A capacity of ``N`` tokens allocates ``ceil(N /
+    granularity)`` rows.  ``dtype is None`` means "use the cache compute
+    dtype"; ``fill`` is the zero/identity init value (±inf for min/max).
+    """
+
+    suffix: Tuple[int, ...] = ()
+    dtype: Optional[Any] = None
+    granularity: int = 1
+    fill: float = 0.0
+
+    def rows(self, capacity: int) -> int:
+        return -(-capacity // self.granularity)
+
+    def leaf_dtype(self, cache_dtype) -> Any:
+        return cache_dtype if self.dtype is None else jnp.dtype(self.dtype)
+
+
+def kv_leaf_specs(cfg) -> Dict[str, LeafSpec]:
+    """The K/V leaves every backend stores."""
+    hd = cfg.head_dim
+    return {"k": LeafSpec(suffix=(hd,)), "v": LeafSpec(suffix=(hd,))}
+
+
+# --------------------------------------------------------------------- trace
+
+# Trace-time log of paged-view materializations: each PagedView.leaf /
+# gather_rows call appends (kind, leaf_name, shape) while the enclosing
+# function is being traced.  Tests assert the SOCKET paged path never
+# materializes full "k"/"v" leaves; the serving benchmark turns the shapes
+# into per-step gathered bytes.
+_GATHER_TRACE = []
+
+
+def gather_trace_reset() -> None:
+    _GATHER_TRACE.clear()
+
+
+def gather_trace():
+    return list(_GATHER_TRACE)
+
+
+# --------------------------------------------------------------------- views
+
+class KVView:
+    """Uniform read/write interface over one layer's decode cache.
+
+    ``arrays`` maps leaf name -> array; layout depends on the subclass.
+    Writes replace entries in ``arrays`` functionally (the dict mutates,
+    the arrays never do) — callers read back ``view.arrays`` as the
+    updated cache pytree.
+    """
+
+    def __init__(self, arrays: Dict[str, jax.Array],
+                 spec: Dict[str, LeafSpec]):
+        self.arrays = dict(arrays)
+        self.spec = spec
+
+    # ---- reads
+    @property
+    def n_tokens(self) -> int:
+        """Logical token capacity of the view."""
+        raise NotImplementedError
+
+    def leaf(self, name: str) -> jax.Array:
+        """Full logical-layout leaf ``(B, KVH, rows, *suffix)``."""
+        raise NotImplementedError
+
+    def gather_rows(self, name: str, idx: jax.Array) -> jax.Array:
+        """Rows of a token-granular leaf at logical indices ``idx``
+        ``(B, KVH, *sel)`` -> ``(B, KVH, *sel, *suffix)``."""
+        raise NotImplementedError
+
+    # ---- writes (one token at logical position pos: scalar or (B,))
+    def write_token(self, name: str, pos: jax.Array,
+                    value: jax.Array) -> None:
+        """Set the row covering token ``pos`` to ``value`` (B, KVH, *suffix)."""
+        raise NotImplementedError
+
+    def rmw_token(self, name: str, pos: jax.Array, fn) -> None:
+        """Read-modify-write the row covering token ``pos`` (Quest min/max):
+        ``row <- fn(row)``."""
+        raise NotImplementedError
+
+    # ---- helpers
+    def _pos_vec(self, pos: jax.Array, batch: int) -> jax.Array:
+        pos = jnp.asarray(pos, jnp.int32)
+        return jnp.broadcast_to(pos, (batch,)) if pos.ndim == 0 else pos
+
+
+class ContiguousView(KVView):
+    """Today's layout: each leaf is ``(B, KVH, rows, *suffix)``."""
+
+    @property
+    def n_tokens(self) -> int:
+        return self.arrays["k"].shape[2] * self.spec["k"].granularity
+
+    def leaf(self, name: str) -> jax.Array:
+        return self.arrays[name]
+
+    def gather_rows(self, name: str, idx: jax.Array) -> jax.Array:
+        assert self.spec[name].granularity == 1, name
+        a = self.arrays[name]
+        b, kvh = a.shape[:2]
+        bidx = jnp.arange(b).reshape(b, *([1] * (idx.ndim - 1)))
+        hidx = jnp.arange(kvh).reshape(1, kvh, *([1] * (idx.ndim - 2)))
+        return a[bidx, hidx, idx]
+
+    def _row(self, name: str, pos: jax.Array):
+        a = self.arrays[name]
+        pos = self._pos_vec(pos, a.shape[0])
+        return a, jnp.arange(a.shape[0]), pos // self.spec[name].granularity
+
+    # Scalar pos (lockstep batch) keeps the dynamic-update-slice lowering —
+    # a per-row scatter for the whole-batch-one-position case is markedly
+    # slower than DUS on TPU; the gather/scatter form is only for ragged
+    # (B,) position vectors.
+    def write_token(self, name, pos, value) -> None:
+        a = self.arrays[name]
+        if jnp.ndim(pos) == 0:
+            row = jnp.asarray(pos, jnp.int32) // self.spec[name].granularity
+            start = (0, 0, row) + (0,) * (a.ndim - 3)
+            self.arrays[name] = jax.lax.dynamic_update_slice(
+                a, value[:, :, None].astype(a.dtype), start)
+            return
+        a, bidx, row = self._row(name, pos)
+        self.arrays[name] = a.at[bidx, :, row].set(value.astype(a.dtype))
+
+    def rmw_token(self, name, pos, fn) -> None:
+        a = self.arrays[name]
+        if jnp.ndim(pos) == 0:
+            row = jnp.asarray(pos, jnp.int32) // self.spec[name].granularity
+            start = (0, 0, row) + (0,) * (a.ndim - 3)
+            old = jax.lax.dynamic_slice(
+                a, start, (a.shape[0], a.shape[1], 1) + a.shape[3:])
+            self.arrays[name] = jax.lax.dynamic_update_slice(
+                a, fn(old[:, :, 0])[:, :, None].astype(a.dtype), start)
+            return
+        a, bidx, row = self._row(name, pos)
+        self.arrays[name] = a.at[bidx, :, row].set(
+            fn(a[bidx, :, row]).astype(a.dtype))
+
+
+class PagedView(KVView):
+    """Serving-engine layout: each leaf is ``(num_blocks, KVH,
+    block_size / granularity, *suffix)`` plus a per-request block table
+    ``(B, blocks_per_seq)`` of physical block ids (trash-padded).
+
+    Logical token ``t`` of request ``b`` lives in physical block
+    ``block_table[b, t // block_size]`` at row ``(t % block_size) //
+    granularity``.  ``leaf()`` materializes the full logical view (cheap
+    for metadata leaves, what paged-capable backends avoid for K/V);
+    ``gather_rows`` translates selected logical indices through the table
+    and touches only those rows.
+    """
+
+    def __init__(self, arrays, spec, block_table: jax.Array,
+                 block_size: int):
+        super().__init__(arrays, spec)
+        self.block_table = block_table
+        self.block_size = block_size
+
+    @property
+    def n_tokens(self) -> int:
+        return self.block_table.shape[1] * self.block_size
+
+    def leaf(self, name: str) -> jax.Array:
+        pages = self.arrays[name]
+        bt = self.block_table
+        b, nb = bt.shape
+        g = pages[bt]                      # (B, nb, KVH, rows_pb, *suffix)
+        g = jnp.moveaxis(g, 2, 1)          # (B, KVH, nb, rows_pb, *suffix)
+        out = g.reshape(b, pages.shape[1], nb * pages.shape[2],
+                        *pages.shape[3:])
+        _GATHER_TRACE.append(("leaf", name, out.shape))
+        return out
+
+    def gather_rows(self, name: str, idx: jax.Array) -> jax.Array:
+        assert self.spec[name].granularity == 1, name
+        pages = self.arrays[name]
+        bt = self.block_table
+        b, kvh = bt.shape[0], pages.shape[1]
+        bidx = jnp.arange(b).reshape(b, *([1] * (idx.ndim - 1)))
+        hidx = jnp.arange(kvh).reshape(1, kvh, *([1] * (idx.ndim - 2)))
+        blk = bt[bidx, idx // self.block_size]
+        out = pages[blk, hidx, idx % self.block_size]
+        _GATHER_TRACE.append(("rows", name, out.shape))
+        return out
+
+    def _addr(self, name: str, pos: jax.Array):
+        pages = self.arrays[name]
+        pos = self._pos_vec(pos, self.block_table.shape[0])
+        bidx = jnp.arange(self.block_table.shape[0])
+        blk = self.block_table[bidx, pos // self.block_size]
+        row = (pos % self.block_size) // self.spec[name].granularity
+        return pages, blk, row
+
+    def write_token(self, name, pos, value) -> None:
+        pages, blk, row = self._addr(name, pos)
+        self.arrays[name] = pages.at[blk, :, row].set(
+            value.astype(pages.dtype))
+
+    def rmw_token(self, name, pos, fn) -> None:
+        pages, blk, row = self._addr(name, pos)
+        self.arrays[name] = pages.at[blk, :, row].set(
+            fn(pages[blk, :, row]).astype(pages.dtype))
+
+
+# ------------------------------------------------------------------ backend
+
+def write_prefill_kv(cache: Dict[str, jax.Array], kc: jax.Array,
+                     vc: jax.Array) -> Dict[str, jax.Array]:
+    """Write the prompt K/V ``(B, KVH, T, hd)`` into rows [0, T)."""
+    t = kc.shape[2]
+    cache = dict(cache)
+    cache["k"] = cache["k"].at[:, :, :t].set(kc.astype(cache["k"].dtype))
+    cache["v"] = cache["v"].at[:, :, :t].set(vc.astype(cache["v"].dtype))
+    return cache
+
+
+def subset_attention(cfg, q: jax.Array, k_sel: jax.Array, v_sel: jax.Array,
+                     sel_mask: jax.Array, *, scale: float) -> jax.Array:
+    """Exact attention over a gathered subset, routed through the Pallas
+    ``flash_decode`` kernel when ``cfg.socket.use_flash_decode`` is set
+    (interpret mode off-TPU) and the layout is the shared-KV one."""
+    if cfg.socket.use_flash_decode and k_sel.ndim == 4:
+        from repro.kernels.flash_decode import ops as fd_ops
+        return fd_ops.flash_decode(q, k_sel, v_sel, sel_mask, scale=scale)
+    from repro.core import socket as sk
+    return sk.sparse_attention_over_subset(q, k_sel, v_sel, sel_mask,
+                                           scale=scale)
+
+
+class DecodeBackend:
+    """One decode-attention backend (see module docstring).
+
+    Subclasses set ``name`` (registry key) and ``supports_paged`` (True
+    iff ``attend`` reads K/V only via ``gather_rows`` so the serving
+    engine can skip contiguous-view materialization entirely).
+    """
+
+    name: str = ""
+    supports_paged: bool = False
+
+    # ---- layout ---------------------------------------------------------
+    def cache_spec(self, cfg) -> Dict[str, LeafSpec]:
+        raise NotImplementedError
+
+    def init_cache(self, cfg, batch: int, kv_heads: int, capacity: int,
+                   dtype) -> Dict[str, jax.Array]:
+        """Allocate one layer's contiguous cache from the spec."""
+        out = {}
+        for name, s in self.cache_spec(cfg).items():
+            out[name] = jnp.full(
+                (batch, kv_heads, s.rows(capacity), *s.suffix),
+                s.fill, s.leaf_dtype(dtype))
+        return out
+
+    def cache_axes(self, cfg, seq_axis: str) -> Dict[str, Tuple]:
+        """Logical sharding axes mirroring :meth:`init_cache`."""
+        return {name: ("cache_batch", "cache_heads", seq_axis) +
+                (None,) * len(s.suffix)
+                for name, s in self.cache_spec(cfg).items()}
+
+    # ---- ops ------------------------------------------------------------
+    def prefill_build(self, cfg, params, cache: Dict[str, jax.Array],
+                      kc: jax.Array, vc: jax.Array) -> Dict[str, jax.Array]:
+        """Write prompt K/V ``(B, KVH, T, hd)`` + metadata into ``cache``."""
+        raise NotImplementedError
+
+    def append(self, cfg, params, view: KVView, kc: jax.Array,
+               vc: jax.Array, pos: jax.Array) -> None:
+        """Write one token's K/V ``(B, KVH, 1, hd)`` + metadata at ``pos``
+        (scalar or per-request ``(B,)`` vector) through the view."""
+        raise NotImplementedError
+
+    def attend(self, cfg, params, q: jax.Array, view: KVView, *,
+               length, scale: float) -> jax.Array:
+        """Decode attention for ``q`` ``(B, KVH, G, 1, hd)`` against the
+        view's first ``length`` tokens (scalar or ragged ``(B,)``).
+        Per-request sparsity budgets are derived from ``length`` when it
+        is a vector."""
+        raise NotImplementedError
+
+    # ---- accounting -----------------------------------------------------
+    def selected_rows(self, cfg, n: int) -> int:
+        """Static K/V rows gathered per step at capacity ``n`` (for the
+        memory-traffic accounting in :func:`repro.serving.paged
+        .gather_footprint`)."""
+        return n

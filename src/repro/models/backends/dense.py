@@ -1,0 +1,36 @@
+"""Dense decode backend (full attention; baseline / roofline reference).
+
+Not paged-capable: every step reads the whole K/V context, so the serving
+engine materializes contiguous views for it (`paged.gather_views`) — the
+memory-traffic-bound path the sparse backends exist to avoid.
+"""
+
+from __future__ import annotations
+
+from repro.baselines import oracle
+from repro.models.backends import base
+from repro.models.backends.base import KVView
+
+__all__ = ["DenseBackend"]
+
+
+class DenseBackend(base.DecodeBackend):
+    name = "dense"
+    supports_paged = False
+
+    def cache_spec(self, cfg):
+        return base.kv_leaf_specs(cfg)
+
+    def prefill_build(self, cfg, params, cache, kc, vc):
+        del cfg, params
+        return base.write_prefill_kv(cache, kc, vc)
+
+    def append(self, cfg, params, view: KVView, kc, vc, pos):
+        del cfg, params
+        view.write_token("k", pos, kc[:, :, 0])
+        view.write_token("v", pos, vc[:, :, 0])
+
+    def attend(self, cfg, params, q, view: KVView, *, length, scale):
+        del cfg, params
+        return oracle.dense_attention(q, view.leaf("k"), view.leaf("v"),
+                                      scale=scale, length=length)

@@ -1,0 +1,52 @@
+"""Hard-LSH decode backend (tau -> 0 ablation of SOCKET).
+
+Shares SOCKET's cache layout (packed sign bits + value norms) and
+value-aware top-k, but scores by *hard* collision counting: a key scores
+the number of tables whose every plane sign agrees with the query's.
+Paged-capable for the same reason SOCKET is — scoring reads only the bits
+leaf, K/V only at the selected rows.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core import socket as sk
+from repro.models.backends import base
+from repro.models.backends.socket import SocketBackend, socket_config_of
+
+__all__ = ["HardLSHBackend"]
+
+
+def _hard_collision_scores(scfg: sk.SocketConfig, bits, u_signs):
+    """Hard collision counts from the same packed bits.
+
+    bits (B,KVH,N,W); u_signs (B,KVH,G,L,P) ±1.  Returns (B,KVH,G,N).
+    """
+    l, p = scfg.num_tables, scfg.num_planes
+    k_signs = hashing.unpack_signs(bits, l, p)           # (B,KVH,N,L,P)
+    agree = jnp.einsum("bknlp,bkglp->bkgnl", k_signs, u_signs)
+    return jnp.sum((agree >= p).astype(jnp.float32), axis=-1)
+
+
+class HardLSHBackend(SocketBackend):
+    name = "hard_lsh"
+    supports_paged = True
+
+    def attend(self, cfg, params, q, view, *, length, scale):
+        scfg = socket_config_of(cfg)
+        n = view.n_tokens
+        budget = self._budget(cfg, length, n)
+        u = sk.soft_hash_query(params["hash_w"], q[..., 0, :])
+        u_signs = jnp.where(u >= 0, 1.0, -1.0)
+        scores = _hard_collision_scores(scfg, view.leaf("bits"), u_signs)
+        scores = jnp.sum(scores, axis=2)                 # sum over group
+        kq = sk.topk_budget(scfg, n)
+        idx, sel_mask = sk.value_aware_topk(
+            scfg, scores, view.leaf("vnorm").astype(jnp.float32), k=kq,
+            length=length, n_total=n, budget=budget)
+        k_sel = view.gather_rows("k", idx)
+        v_sel = view.gather_rows("v", idx)
+        return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
+                                     scale=scale)

@@ -1,0 +1,113 @@
+"""Quest decode backend (page min/max metadata + page top-k) [43].
+
+The metadata leaves are **page-granular** (``granularity =
+cfg.quest.page_size`` rows in the cache spec): in the serving engine's
+pool each physical block carries ``block_size / page_size`` min/max rows,
+so Quest no longer fakes contiguous stats tensors — its page table IS the
+block pool.  ``page_size`` must divide ``ServingSettings.block_size``
+(asserted here and at engine construction).
+
+Paged-capable: page scoring reads only the small kmin/kmax leaves; K/V
+are gathered only for the selected pages.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.baselines import quest as quest_mod
+from repro.models.backends import base
+from repro.models.backends.base import KVView, LeafSpec
+
+__all__ = ["QuestBackend"]
+
+
+class QuestBackend(base.DecodeBackend):
+    name = "quest"
+    supports_paged = True
+
+    @staticmethod
+    def quest_config(cfg) -> quest_mod.QuestConfig:
+        """Single source of truth for Quest knobs: page geometry from
+        ``cfg.quest``, budget/sink/window shared with the SOCKET settings."""
+        return quest_mod.QuestConfig(
+            page_size=cfg.quest.page_size, sparsity=cfg.socket.sparsity,
+            sink_tokens=cfg.socket.sink_tokens,
+            window_tokens=cfg.socket.window_tokens,
+            min_pages=cfg.quest.min_pages)
+
+    # ---- layout ---------------------------------------------------------
+    def cache_spec(self, cfg):
+        ps = cfg.quest.page_size
+        if cfg.serving.block_size % ps:
+            raise ValueError(
+                f"quest page_size {ps} must divide serving block_size "
+                f"{cfg.serving.block_size} (one block = whole pages)")
+        hd = cfg.head_dim
+        spec = base.kv_leaf_specs(cfg)
+        spec["kmin"] = LeafSpec(suffix=(hd,), granularity=ps, fill=np.inf)
+        spec["kmax"] = LeafSpec(suffix=(hd,), granularity=ps, fill=-np.inf)
+        return spec
+
+    # ---- ops ------------------------------------------------------------
+    def prefill_build(self, cfg, params, cache, kc, vc):
+        del params
+        cache = base.write_prefill_kv(cache, kc, vc)
+        b, kvh, t, hd = kc.shape
+        ps = cfg.quest.page_size
+        n_pages_t = -(-t // ps)
+        pad = n_pages_t * ps - t
+        kpad_min = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                           constant_values=np.inf)
+        kpad_max = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+                           constant_values=-np.inf)
+        kmin = kpad_min.reshape(b, kvh, n_pages_t, ps, hd).min(axis=3)
+        kmax = kpad_max.reshape(b, kvh, n_pages_t, ps, hd).max(axis=3)
+        cache["kmin"] = cache["kmin"].at[:, :, :n_pages_t].set(
+            kmin.astype(cache["kmin"].dtype))
+        cache["kmax"] = cache["kmax"].at[:, :, :n_pages_t].set(
+            kmax.astype(cache["kmax"].dtype))
+        return cache
+
+    def append(self, cfg, params, view: KVView, kc, vc, pos):
+        del params
+        view.write_token("k", pos, kc[:, :, 0])
+        view.write_token("v", pos, vc[:, :, 0])
+        knew = kc[:, :, 0]                               # (B, KVH, hd)
+        # A token opening a fresh page must *reset* the stats, not merge:
+        # in the serving pool a decode-growth block may be a reused page
+        # still carrying the previous owner's min/max (BlockPool never
+        # scrubs device memory), and merging against stale bounds corrupts
+        # page selection.  Page starts always coincide with block starts
+        # (page_size | block_size), so resetting at pos % page_size == 0
+        # covers every first write into a page.
+        first = jnp.asarray(pos, jnp.int32) % cfg.quest.page_size == 0
+        if first.ndim:
+            first = first[:, None, None]                 # (B,1,1) ragged
+        view.rmw_token(
+            "kmin", pos, lambda old: jnp.where(
+                first, knew.astype(old.dtype),
+                jnp.minimum(old, knew.astype(old.dtype))))
+        view.rmw_token(
+            "kmax", pos, lambda old: jnp.where(
+                first, knew.astype(old.dtype),
+                jnp.maximum(old, knew.astype(old.dtype))))
+
+    def attend(self, cfg, params, q, view: KVView, *, length, scale):
+        del params
+        qcfg = self.quest_config(cfg)
+        state = quest_mod.QuestState(kmin=view.leaf("kmin"),
+                                     kmax=view.leaf("kmax"))
+        idx, sel_mask = quest_mod.select_tokens(
+            qcfg, state, q, length=length, n=view.n_tokens)
+        k_sel = view.gather_rows("k", idx)
+        v_sel = view.gather_rows("v", idx)
+        return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
+                                     scale=scale)
+
+    # ---- accounting -----------------------------------------------------
+    def selected_rows(self, cfg, n):
+        qcfg = self.quest_config(cfg)
+        n_pages = -(-n // qcfg.page_size)
+        return quest_mod.page_budget(qcfg, n_pages, n) * qcfg.page_size

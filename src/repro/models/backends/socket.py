@@ -1,0 +1,183 @@
+"""SOCKET decode backend (the paper's technique, Algorithms 1-3).
+
+Cache leaves: K/V plus the side-cache of packed hash bits and value norms
+(Algorithm 1).  ``attend`` soft-hashes the query (Algorithm 2), scores
+every cached key with the factorized soft-collision kernel — through the
+Pallas scoring kernel when ``cfg.socket.use_score_kernel`` is set — runs
+value-aware top-k (Algorithm 3), and attends exactly over the selected
+subset (``flash_decode`` when ``cfg.socket.use_flash_decode``).
+
+Paged-capable: scoring reads only the bits/vnorm leaves (~64x smaller
+than K/V at deployment settings), and K/V are touched only at the
+``top_k ∪ sink ∪ window`` rows the selection returns — the serving engine
+never materializes contiguous K/V views for this backend.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from repro.core import socket as sk
+from repro.models.backends import base
+from repro.models.backends.base import ContiguousView, KVView, LeafSpec
+
+__all__ = ["SocketBackend", "socket_config_of"]
+
+
+def socket_config_of(cfg) -> sk.SocketConfig:
+    """Map the model config's :class:`SocketSettings` to the scorer's
+    :class:`~repro.core.socket.SocketConfig`."""
+    s = cfg.socket
+    return sk.SocketConfig(
+        num_planes=s.num_planes, num_tables=s.num_tables, tau=s.tau,
+        sparsity=s.sparsity, sink_tokens=s.sink_tokens,
+        window_tokens=s.window_tokens, min_k=s.min_k,
+        bits_storage=s.bits_storage, score_chunk=s.score_chunk,
+        score_dtype=s.score_dtype, selection=s.selection)
+
+
+class SocketBackend(base.DecodeBackend):
+    name = "socket"
+    supports_paged = True
+
+    # ---- layout ---------------------------------------------------------
+    def cache_spec(self, cfg):
+        scfg = socket_config_of(cfg)
+        spec = base.kv_leaf_specs(cfg)
+        if scfg.bits_storage == "packed":
+            w = hashing.num_words(scfg.num_tables, scfg.num_planes)
+            spec["bits"] = LeafSpec(suffix=(w,), dtype=jnp.uint32)
+        else:
+            spec["bits"] = LeafSpec(
+                suffix=(scfg.num_tables * scfg.num_planes,), dtype=jnp.int8)
+        spec["vnorm"] = LeafSpec(suffix=(), dtype=jnp.bfloat16)
+        return spec
+
+    # ---- ops ------------------------------------------------------------
+    def prefill_build(self, cfg, params, cache, kc, vc):
+        t = kc.shape[2]
+        cache = base.write_prefill_kv(cache, kc, vc)
+        scfg = socket_config_of(cfg)
+        side = sk.precompute_key_hashes(
+            scfg, jax.lax.stop_gradient(params["hash_w"]), kc, vc)
+        cache["bits"] = cache["bits"].at[:, :, :t].set(side.bits)
+        cache["vnorm"] = cache["vnorm"].at[:, :, :t].set(
+            side.vnorm.astype(cache["vnorm"].dtype))
+        return cache
+
+    def append(self, cfg, params, view: KVView, kc, vc, pos):
+        view.write_token("k", pos, kc[:, :, 0])
+        view.write_token("v", pos, vc[:, :, 0])
+        scfg = socket_config_of(cfg)
+        side = sk.precompute_key_hashes(scfg, params["hash_w"], kc, vc)
+        view.write_token("bits", pos, side.bits[:, :, 0])
+        view.write_token("vnorm", pos, side.vnorm[:, :, 0])
+
+    def _budget(self, cfg, length, n):
+        """Ragged per-request top-k budget (None for scalar length)."""
+        if jnp.ndim(length) != 1:
+            return None
+        scfg = socket_config_of(cfg)
+        return sk.dynamic_topk_budget(scfg, length,
+                                      sk.topk_budget(scfg, n))
+
+    def _scores(self, cfg, params, q, view: KVView):
+        """(soft-hash u, collision scores) for the selection mode."""
+        scfg = socket_config_of(cfg)
+        if scfg.selection == "pooled":
+            # one soft-hash per KV head from the group-mean query — G x
+            # less scoring work/memory (TPU operating point, DESIGN.md §2)
+            u = sk.soft_hash_query(params["hash_w"],
+                                   jnp.mean(q[..., 0, :], axis=2))
+        else:
+            u = sk.soft_hash_query(params["hash_w"], q[..., 0, :])
+        bits = view.leaf("bits")
+        if cfg.socket.use_score_kernel:
+            if scfg.selection not in ("kvhead", "pooled"):
+                raise NotImplementedError(
+                    "the Pallas scoring kernel group-sums scores (kvhead "
+                    "selection); use the XLA path for per-q-head selection")
+            if scfg.bits_storage != "packed":
+                raise NotImplementedError(
+                    "the Pallas scoring kernel unpacks uint32 words; "
+                    "bits_storage='int8' must use the XLA path")
+            from repro.kernels.socket_score import ops as score_ops
+            # kernel wants (B,KVH,G,L,P); pooled hashes once per KV head
+            u_k = u[:, :, None] if scfg.selection == "pooled" else u
+            scores = score_ops.socket_score(
+                bits, u_k, vnorm=None, num_tables=scfg.num_tables,
+                num_planes=scfg.num_planes, tau=scfg.tau)  # (B,KVH,N), G-sum
+        elif scfg.selection == "pooled":
+            scores = sk.soft_scores_factorized(scfg, bits, u)  # (B,KVH,N)
+        else:
+            scores = sk.soft_scores_factorized(
+                scfg, bits[:, :, None], u)                     # (B,KVH,G,N)
+            if scfg.selection == "kvhead":
+                # group-marginal collision mass: sum over the query group
+                scores = jnp.sum(scores, axis=2)
+        return scores
+
+    def attend(self, cfg, params, q, view: KVView, *, length, scale):
+        scfg = socket_config_of(cfg)
+        if scfg.selection not in ("kvhead", "pooled", "qhead"):
+            raise ValueError(scfg.selection)
+        n = view.n_tokens
+        budget = self._budget(cfg, length, n)
+
+        mesh = None
+        if isinstance(view, ContiguousView) and cfg.decode_cp_axes:
+            from repro.distributed import sharding as shd
+            mesh = shd.current_mesh()
+            if mesh is not None and not any(a in mesh.shape
+                                            for a in cfg.decode_cp_axes):
+                mesh = None
+        if mesh is not None:
+            if jnp.ndim(length) == 1:
+                raise NotImplementedError(
+                    "ragged decode + context-parallel SOCKET: use the "
+                    "pjit/XLA path (decode_cp_axes=())")
+            # §Perf: shard_map context-parallel path — local top-k per
+            # sequence shard + psum online-softmax merge; avoids
+            # materializing the (B,KVH,N) global score tensor
+            from repro.distributed.context_parallel import \
+                context_parallel_socket_attend
+            cache = view.arrays
+            return context_parallel_socket_attend(
+                scfg, mesh, cfg.decode_cp_axes, params["hash_w"], q,
+                cache["k"], cache["v"], cache["bits"],
+                cache["vnorm"].astype(jnp.float32),
+                length=length, scale=scale,
+                batch_axes=cfg.decode_cp_batch_axes)
+
+        scores = self._scores(cfg, params, q, view)
+        vnorm = view.leaf("vnorm").astype(jnp.float32)
+        kq = sk.topk_budget(scfg, n)
+        if scfg.selection in ("kvhead", "pooled"):
+            idx, sel_mask = sk.value_aware_topk(
+                scfg, scores, vnorm, k=kq, length=length, n_total=n,
+                budget=budget)
+            k_sel = view.gather_rows("k", idx)
+            v_sel = view.gather_rows("v", idx)
+            return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
+                                         scale=scale)
+        # per-q-head selection: fold G into the selection axis, gather per
+        # (kvh, g).  More faithful to the paper's single-head exposition
+        # but loses the shared KV gather (and the flash_decode layout).
+        idx, sel_mask = sk.value_aware_topk(
+            scfg, scores, vnorm[:, :, None], k=kq, length=length,
+            n_total=n, budget=budget)
+        k_sel = view.gather_rows("k", idx)          # (B,KVH,G,K,hd)
+        v_sel = view.gather_rows("v", idx)
+        logits = jnp.einsum("bhgtd,bhgkd->bhgtk", q.astype(jnp.float32),
+                            k_sel.astype(jnp.float32)) * scale
+        logits = jnp.where(sel_mask[:, :, :, None, :], logits, sk.NEG_INF)
+        wts = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bhgtk,bhgkd->bhgtd", wts,
+                         v_sel.astype(jnp.float32))
+        return out.astype(q.dtype)
+
+    # ---- accounting -----------------------------------------------------
+    def selected_rows(self, cfg, n):
+        return sk.topk_budget(socket_config_of(cfg), n)

@@ -90,11 +90,13 @@ def _block_prefill(cfg: ModelConfig, params: Dict, spec: LayerSpec,
 
 
 def _block_decode(cfg: ModelConfig, params: Dict, spec: LayerSpec,
-                  x: jax.Array, cache: Dict, pos: jax.Array):
+                  x: jax.Array, cache: Dict, pos: jax.Array,
+                  block_tables=None):
     h = rmsnorm(params["norm_mix"], x)
     if spec.kind == "attn":
         h, cache = attn.attention_decode(cfg, params["attn"], h, cache, pos,
-                                         spec.attn_type)
+                                         spec.attn_type,
+                                         block_tables=block_tables)
     else:
         h, cache = mb.mamba_decode(cfg, params["mamba"], h, cache)
     x = x + h
@@ -324,12 +326,17 @@ def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
 
 
 def decode_step(cfg: ModelConfig, params, caches, inputs: jax.Array,
-                pos: jax.Array):
+                pos: jax.Array, block_tables=None):
     """One token for the whole stack.
 
     inputs: (B, 1) token ids or (B, 1, d) embeddings; pos: scalar int32 or
     a ``(B,)`` vector of per-request positions (ragged serving batch — see
     :func:`repro.models.attention.attention_decode`).
+
+    ``block_tables``: per-request ``(B, blocks_per_seq)`` physical block
+    ids — when given, ``caches`` is the serving engine's page pool (leaves
+    ``(num_blocks, KVH, block_size, ...)``, shared block ids across
+    layers) and attention layers read/write it through ``PagedView``.
     Returns (logits (B,1,V), updated caches).
     """
     if cfg.input_mode == "tokens":
@@ -342,7 +349,8 @@ def decode_step(cfg: ModelConfig, params, caches, inputs: jax.Array,
         new_caches = {}
         for i, spec in enumerate(cfg.pattern):
             x, new_caches[f"slot_{i}"] = _block_decode(
-                cfg, gparams[f"slot_{i}"], spec, x, gcache[f"slot_{i}"], pos)
+                cfg, gparams[f"slot_{i}"], spec, x, gcache[f"slot_{i}"],
+                pos, block_tables)
         return x, new_caches
 
     x, new_group_caches = jax.lax.scan(
@@ -352,7 +360,7 @@ def decode_step(cfg: ModelConfig, params, caches, inputs: jax.Array,
     for i, spec in enumerate(cfg.remainder):
         x, new_rem[f"slot_{i}"] = _block_decode(
             cfg, params["remainder"][f"slot_{i}"], spec, x,
-            caches["remainder"][f"slot_{i}"], pos)
+            caches["remainder"][f"slot_{i}"], pos, block_tables)
 
     x = rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params["embed"], x)

@@ -93,8 +93,11 @@ def make_prefill_step(cfg: ModelConfig, capacity: int,
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:
-    """(params, caches, inp, pos) -> (logits, caches).  ``pos`` may be a
-    scalar (static batch) or a ``(B,)`` vector (ragged continuous batch)."""
-    def serve_step(params, caches, inp, pos):
-        return tfm.decode_step(cfg, params, caches, inp, pos)
+    """(params, caches, inp, pos[, block_tables]) -> (logits, caches).
+    ``pos`` may be a scalar (static batch) or a ``(B,)`` vector (ragged
+    continuous batch); ``block_tables`` switches ``caches`` to the paged
+    pool (see :func:`tfm.decode_step`)."""
+    def serve_step(params, caches, inp, pos, block_tables=None):
+        return tfm.decode_step(cfg, params, caches, inp, pos,
+                               block_tables=block_tables)
     return serve_step

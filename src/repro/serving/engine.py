@@ -3,12 +3,18 @@
 Each iteration interleaves **prefill** (admit up to
 ``serving.max_prefill_per_iter`` waiting requests, one jitted
 bucket-padded forward each, KV written straight into the paged pool) with
-one **ragged decode step** over all running slots: a single jit-compiled
-function gathers every slot's block table into contiguous cache views,
-runs the unmodified model ``decode_step`` with a per-slot ``pos`` vector
-(masked slots point at the trash page), and scatters each slot's new
-token back to its page.  Static shapes throughout — one decode compile
-total, one prefill compile per bucket.
+one **ragged decode step** over all running slots, a single jit-compiled
+function with a per-slot ``pos`` vector (masked slots point at the trash
+page).  Static shapes throughout — one decode compile total, one prefill
+compile per bucket.
+
+For **paged-capable** backends (``DecodeBackend.supports_paged``: socket,
+hard_lsh, quest) the decode step hands the page pool + block tables
+straight to the model: appends write to pages in place and attention
+reads only the small metadata leaves plus the selected ``O(top_k)`` K/V
+rows (``PagedView``) — no contiguous cache view is ever materialized.
+Backends that need the whole context every step (dense) fall back to the
+gather/scatter round trip (``paged.gather_views`` / ``scatter_token``).
 
 Greedy sampling; ``input_mode == "tokens"``, all-attention all-global
 layouts only (sliding-window rings and SSM state are per-slot, not paged
@@ -26,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.models import backends as bk
 from repro.models import param as pm
 from repro.models import transformer as tfm
 from repro.runtime.steps import make_prefill_step, make_serve_step
@@ -73,6 +80,7 @@ class ContinuousBatchingEngine:
             rng = rng if rng is not None else jax.random.PRNGKey(0)
             params = pm.unbox(tfm.init_model(cfg, rng))
         self.params = params
+        self.backend = bk.get_backend(cfg.attention_backend)
         self.pages = paged.init_paged_caches(cfg, self.serving)
         self.pool = BlockPool(self.serving.num_blocks)
         self.scheduler = Scheduler(
@@ -93,10 +101,10 @@ class ContinuousBatchingEngine:
                     "continuous engine requires all-global attention "
                     f"layers (got kind={spec.kind!r} "
                     f"attn_type={spec.attn_type!r})")
-        if cfg.attention_backend not in ("socket", "dense", "hard_lsh"):
-            raise NotImplementedError(
-                f"backend {cfg.attention_backend!r} not paged "
-                "(quest keeps page-granularity stats of its own)")
+        # resolves the backend (ValueError on unknown names) and validates
+        # its cache layout against the serving geometry (e.g. quest's
+        # page_size must divide block_size)
+        bk.get_backend(cfg.attention_backend).cache_spec(cfg)
         if cfg.decode_cp_axes:
             raise NotImplementedError(
                 "ragged decode + context-parallel SOCKET is a ROADMAP item")
@@ -106,11 +114,22 @@ class ContinuousBatchingEngine:
         serve = make_serve_step(self.cfg)
         bs = self.serving.block_size
 
-        def step(params, pages, tokens, bt, pos):
-            views = paged.gather_views(pages, bt)
-            logits, views = serve(params, views, tokens, pos)
-            pages = paged.scatter_token(pages, views, bt, pos, bs)
-            return jnp.argmax(logits[:, -1], axis=-1), pages
+        if self.backend.supports_paged:
+            # page-native path: the pool + block tables go straight into
+            # the model; no K/V view is ever materialized.
+            def step(params, pages, tokens, bt, pos):
+                logits, pages = serve(params, pages, tokens, pos, bt)
+                return jnp.argmax(logits[:, -1], axis=-1), pages
+        else:
+            gran = {name: s.granularity for name, s in
+                    self.backend.cache_spec(self.cfg).items()}
+
+            def step(params, pages, tokens, bt, pos):
+                views = paged.gather_views(pages, bt)
+                logits, views = serve(params, views, tokens, pos)
+                pages = paged.scatter_token(pages, views, bt, pos, bs,
+                                            granularity=gran)
+                return jnp.argmax(logits[:, -1], axis=-1), pages
 
         return jax.jit(step, donate_argnums=(1,))
 

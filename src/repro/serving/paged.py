@@ -1,13 +1,16 @@
-"""Device-side paged cache pool: KV pages + SOCKET side-cache pages.
+"""Device-side paged cache pool: KV pages + backend metadata pages.
 
 Layout: every layer-cache leaf of the standard decode cache (see
 :func:`repro.models.transformer.init_decode_caches`) is re-homed with the
 batch axis replaced by the **physical block axis** and the capacity axis by
-the **block size**::
+the **block size** (divided by the leaf's sequence granularity — Quest's
+page-granular min/max rows pack ``block_size / page_size`` rows per
+block)::
 
     k / v   : (num_blocks, KVH, block_size, hd)
     bits    : (num_blocks, KVH, block_size, W)     (SOCKET packed hash bits)
     vnorm   : (num_blocks, KVH, block_size)        (SOCKET value norms)
+    kmin/max: (num_blocks, KVH, block_size/ps, hd) (Quest page stats)
 
 Grouped (scan-stacked) layers carry a leading group axis; all per-leaf
 helpers are plain rank-polymorphic functions lifted over that axis with
@@ -15,24 +18,31 @@ helpers are plain rank-polymorphic functions lifted over that axis with
 host allocator (:mod:`repro.serving.block_pool`) hands out one id list per
 request for the whole stack.
 
-The ragged engine step gathers each slot's block table into the standard
-contiguous ``(B, KVH, max_context, ...)`` view, runs the unmodified model
-decode, then scatters the one newly written token per slot back to its
-page.  This is the XLA-portable formulation; a Pallas paged-attention
-kernel that consumes block tables directly is the TPU fast path this
-layout is designed for (ROADMAP open item).
+**Paged-capable backends** (``DecodeBackend.supports_paged``) consume this
+pool directly through :class:`repro.models.backends.PagedView` — the
+engine passes the pool + block tables into ``decode_step`` and no
+contiguous view is ever materialized for K/V.  For the remaining backends
+(dense) the engine falls back to the gather/scatter round trip below:
+materialize each slot's ``(B, KVH, max_context, ...)`` view, run the
+unmodified decode, scatter the one new token back.  That XLA-portable
+path is memory-traffic-bound at long context — :func:`gather_footprint`
+quantifies the difference.
 """
 
 from __future__ import annotations
 
+from typing import Dict, Optional
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ModelConfig, ServingSettings
+from repro.models import backends as bk
 from repro.models import transformer as tfm
 
 __all__ = ["init_paged_caches", "gather_views", "scatter_token",
-           "write_prefill"]
+           "write_prefill", "gather_footprint"]
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
@@ -43,36 +53,42 @@ def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
                                   capacity=serving.block_size)
 
 
+def _leaf_name(path) -> str:
+    return path[-1].key
+
+
 # ------------------------------------------------------------------ leaves
 
 def _gather_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
-    """(NB, KVH, bs, *rest), (B, nb) -> (B, KVH, nb*bs, *rest)."""
+    """(NB, KVH, rows_pb, *rest), (B, nb) -> (B, KVH, nb*rows_pb, *rest)."""
     b, nb = bt.shape
-    g = pages[bt]                            # (B, nb, KVH, bs, *rest)
-    g = jnp.moveaxis(g, 2, 1)                # (B, KVH, nb, bs, *rest)
+    g = pages[bt]                            # (B, nb, KVH, rows_pb, *rest)
+    g = jnp.moveaxis(g, 2, 1)                # (B, KVH, nb, rows_pb, *rest)
     return g.reshape(b, pages.shape[1], nb * pages.shape[2],
                      *pages.shape[3:])
 
 
 def _scatter_leaf(pages: jax.Array, view: jax.Array, blk: jax.Array,
-                  off: jax.Array, pos: jax.Array) -> jax.Array:
-    """Write the token each slot produced at ``view[b, :, pos[b]]`` into
-    physical page ``blk[b]`` offset ``off[b]``.  Inactive slots carry
-    ``blk == TRASH_BLOCK``; duplicate trash writes are benign."""
+                  pos: jax.Array, block_size: int, gran: int) -> jax.Array:
+    """Write the row each slot updated at token index ``pos[b]`` (view row
+    ``pos // gran``) into physical page ``blk[b]`` row ``(pos %
+    block_size) // gran``.  Inactive slots carry ``blk == TRASH_BLOCK``;
+    duplicate trash writes are benign."""
     b = view.shape[0]
-    tok = view[jnp.arange(b), :, pos]        # (B, KVH, *rest)
-    return pages.at[blk, :, off].set(tok.astype(pages.dtype))
+    row = view[jnp.arange(b), :, pos // gran]    # (B, KVH, *rest)
+    off = (pos % block_size) // gran
+    return pages.at[blk, :, off].set(row.astype(pages.dtype))
 
 
 def _write_prefill_leaf(pages: jax.Array, leaf: jax.Array,
                         bt_row: jax.Array) -> jax.Array:
-    """Scatter a batch=1 prefill cache leaf (1, KVH, bucket, *rest) into
+    """Scatter a batch=1 prefill cache leaf (1, KVH, rows, *rest) into
     pages addressed by ``bt_row`` ((bucket/bs,) block ids, trash-padded)."""
-    kvh, bucket = leaf.shape[1], leaf.shape[2]
-    bs = pages.shape[2]
-    nb = bucket // bs
-    blocks = leaf[0].reshape(kvh, nb, bs, *leaf.shape[3:])
-    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, bs, *rest)
+    kvh, rows = leaf.shape[1], leaf.shape[2]
+    rows_pb = pages.shape[2]
+    nb = rows // rows_pb
+    blocks = leaf[0].reshape(kvh, nb, rows_pb, *leaf.shape[3:])
+    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, rows_pb, *rest)
     return pages.at[bt_row].set(blocks.astype(pages.dtype))
 
 
@@ -95,21 +111,27 @@ def gather_views(pages, bt: jax.Array):
 
 
 def scatter_token(pages, views, bt: jax.Array, pos: jax.Array,
-                  block_size: int):
-    """Write each slot's newly decoded token back from the contiguous view
-    into its page; returns the updated pool pytree."""
+                  block_size: int,
+                  granularity: Optional[Dict[str, int]] = None):
+    """Write each slot's newly updated row back from the contiguous view
+    into its page; returns the updated pool pytree.
+
+    ``granularity``: optional leaf-name -> tokens-per-row map (from the
+    backend's ``cache_spec``) for page-granular metadata leaves; token-
+    granular leaves may be omitted.
+    """
+    gran = granularity or {}
     b = bt.shape[0]
     blk = bt[jnp.arange(b), pos // block_size]   # (B,) physical blocks
-    off = pos % block_size
-    grouped = jax.vmap(
-        lambda p, v: _scatter_leaf(p, v, blk, off, pos), in_axes=(0, 0))
-    return {
-        "groups": jax.tree_util.tree_map(
-            grouped, pages["groups"], views["groups"]),
-        "remainder": jax.tree_util.tree_map(
-            lambda p, v: _scatter_leaf(p, v, blk, off, pos),
-            pages["remainder"], views["remainder"]),
-    }
+
+    def scatter(path, p, v):
+        g = gran.get(_leaf_name(path), 1)
+        fn = lambda pp, vv: _scatter_leaf(pp, vv, blk, pos, block_size, g)
+        if path[0].key == "groups":
+            return jax.vmap(fn)(p, v)
+        return fn(p, v)
+
+    return jax.tree_util.tree_map_with_path(scatter, pages, views)
 
 
 def write_prefill(pages, caches, bt_row: jax.Array):
@@ -124,4 +146,45 @@ def write_prefill(pages, caches, bt_row: jax.Array):
         "remainder": jax.tree_util.tree_map(
             lambda p, c: _write_prefill_leaf(p, c, bt_row),
             pages["remainder"], caches["remainder"]),
+    }
+
+
+# -------------------------------------------------------------- accounting
+
+def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
+    """Per-decode-step gathered bytes for the whole stack, full-view vs
+    paged (the tentpole's memory-traffic win, reported by
+    ``benchmarks/bench_serving.py``).
+
+    ``full_view_bytes_per_step``: every cache leaf materialized at
+    ``(max_batch, KVH, max_context, ...)`` — the gather/scatter fallback.
+    ``paged_bytes_per_step``: metadata leaves in full (bits/vnorm or page
+    min/max — tens of times smaller than K/V) plus only the backend's
+    ``selected_rows`` K/V rows; equals the full-view cost for backends
+    that are not paged-capable.
+    """
+    backend = bk.get_backend(cfg.attention_backend)
+    spec = backend.cache_spec(cfg)
+    sv = cfg.serving
+    b, n = sv.max_batch, sv.max_context
+    kvh = cfg.num_kv_heads
+    cdt = jnp.dtype(cfg.compute_dtype)
+
+    def leaf_bytes(s):
+        width = int(np.prod(s.suffix, dtype=np.int64)) if s.suffix else 1
+        return b * kvh * s.rows(n) * width * jnp.dtype(
+            s.leaf_dtype(cdt)).itemsize
+
+    full = sum(leaf_bytes(s) for s in spec.values())
+    kv_bytes = leaf_bytes(spec["k"]) + leaf_bytes(spec["v"])
+    rows = backend.selected_rows(cfg, n)
+    paged = (full - kv_bytes) + 2 * b * kvh * rows * cfg.head_dim * \
+        cdt.itemsize
+    layers = sum(1 for s in cfg.layer_specs
+                 if s.kind == "attn" and s.attn_type == "global")
+    return {
+        "full_view_bytes_per_step": int(full) * layers,
+        "paged_bytes_per_step":
+            int(paged if backend.supports_paged else full) * layers,
+        "selected_rows": int(rows),
     }

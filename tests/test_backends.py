@@ -1,0 +1,230 @@
+"""DecodeBackend registry + KVView contract: contiguous-vs-paged parity
+for every registered backend, O(top_k) K/V traffic on the paged SOCKET
+path, and the Pallas kernel plumbing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import attention as attn
+from repro.models import backends as bk
+from repro.models import param as pm
+
+ALL_BACKENDS = ["socket", "hard_lsh", "quest", "dense"]
+NB = 4            # blocks per request in the parity fixtures
+
+
+def _cfg(backend):
+    return get_config("stablelm-12b").smoke().replace(
+        attention_backend=backend)
+
+
+def _setup(backend, seed=0):
+    """One attention layer's params + a filled contiguous cache and an
+    identical-content paged pool (shuffled physical blocks)."""
+    cfg = _cfg(backend)
+    be = bk.get_backend(backend)
+    rng = np.random.default_rng(seed)
+    params = pm.unbox(attn.init_attention(cfg, jax.random.PRNGKey(seed)))
+    kv = params["wk"].shape[1]
+    b, hd = 2, cfg.head_dim
+    bs = cfg.serving.block_size
+    capacity = NB * bs
+
+    keys = jnp.asarray(rng.normal(size=(b, kv, capacity, hd)), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(b, kv, capacity, hd)), jnp.float32)
+    cache = be.init_cache(cfg, b, kv, capacity, jnp.float32)
+    cache = be.prefill_build(cfg, params, cache, keys, vals)
+
+    # paged pool with the same logical content behind shuffled block ids
+    num_blocks = 1 + b * NB                      # block 0 = trash
+    pool = be.init_cache(cfg, num_blocks, kv, bs, jnp.float32)
+    bt = 1 + rng.permutation(b * NB).reshape(b, NB).astype(np.int32)
+    pages = {}
+    for name, leaf in cache.items():
+        rows_pb = pool[name].shape[2]
+        p = np.asarray(pool[name]).copy()
+        for i in range(b):
+            for j in range(NB):
+                p[bt[i, j]] = np.asarray(
+                    leaf[i, :, j * rows_pb:(j + 1) * rows_pb])
+        pages[name] = jnp.asarray(p)
+
+    spec = be.cache_spec(cfg)
+    cview = bk.ContiguousView(dict(cache), spec)
+    pview = bk.PagedView(pages, spec, jnp.asarray(bt), block_size=bs)
+    q = jnp.asarray(rng.normal(size=(b, kv, cfg.gqa_groups, 1, hd)),
+                    jnp.float32)
+    return cfg, be, params, cview, pview, q
+
+
+def test_registry_contents():
+    assert set(ALL_BACKENDS) <= set(bk.registered_backends())
+    for name in ("socket", "hard_lsh", "quest"):
+        assert bk.get_backend(name).supports_paged, name
+    assert not bk.get_backend("dense").supports_paged
+    with pytest.raises(ValueError, match="unknown attention backend"):
+        bk.get_backend("flashinfer")
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_attend_contiguous_paged_parity(backend):
+    """attend through a PagedView must equal the ContiguousView bitwise at
+    mixed ragged lengths (same logical content, shuffled physical pages)."""
+    cfg, be, params, cview, pview, q = _setup(backend)
+    lengths = jnp.asarray([13, 29], jnp.int32)
+    out_c = be.attend(cfg, params, q, cview, length=lengths, scale=0.125)
+    out_p = be.attend(cfg, params, q, pview, length=lengths, scale=0.125)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_p))
+
+
+@pytest.mark.parametrize("backend", ALL_BACKENDS)
+def test_append_contiguous_paged_parity(backend):
+    """append at ragged per-request positions must leave both views with
+    identical logical leaf contents."""
+    cfg, be, params, cview, pview, q = _setup(backend, seed=1)
+    rng = np.random.default_rng(7)
+    b, kv = 2, params["wk"].shape[1]
+    kc = jnp.asarray(rng.normal(size=(b, kv, 1, cfg.head_dim)), jnp.float32)
+    vc = jnp.asarray(rng.normal(size=(b, kv, 1, cfg.head_dim)), jnp.float32)
+    pos = jnp.asarray([13, 29], jnp.int32)
+    be.append(cfg, params, cview, kc, vc, pos)
+    be.append(cfg, params, pview, kc, vc, pos)
+    for name in cview.arrays:
+        np.testing.assert_array_equal(
+            np.asarray(cview.leaf(name)), np.asarray(pview.leaf(name)),
+            err_msg=f"{backend}:{name}")
+
+
+def test_paged_socket_gathers_only_topk_kv_rows():
+    """The paged SOCKET attend must materialize only the small metadata
+    leaves; K/V are touched at exactly the static top-k rows."""
+    from repro.core import socket as sk
+
+    cfg, be, params, _, pview, q = _setup("socket")
+    bk.gather_trace_reset()
+    be.attend(cfg, params, q, pview,
+              length=jnp.asarray([13, 29], jnp.int32), scale=0.125)
+    trace = bk.gather_trace()
+    full_leaves = {name for kind, name, _ in trace if kind == "leaf"}
+    assert full_leaves <= {"bits", "vnorm"}, trace
+    kq = sk.topk_budget(bk.socket_config_of(cfg), pview.n_tokens)
+    row_gathers = [t for t in trace if t[0] == "rows"]
+    assert {name for _, name, _ in row_gathers} == {"k", "v"}
+    for _, name, shape in row_gathers:
+        assert shape[-2] == kq, (name, shape, kq)
+
+
+@pytest.mark.parametrize("selection", ["kvhead", "pooled"])
+def test_socket_kernel_plumbing_matches_xla_path(selection):
+    """use_score_kernel / use_flash_decode route attend through the Pallas
+    kernels (interpret mode off-TPU) with matching results."""
+    cfg, be, params, cview, pview, q = _setup("socket")
+    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                 selection=selection))
+    out_ref = be.attend(cfg, params, q, cview,
+                        length=jnp.int32(29), scale=0.125)
+    cfg_k = cfg.replace(socket=dataclasses.replace(
+        cfg.socket, use_score_kernel=True, use_flash_decode=True))
+    for view in (cview, pview):
+        out_k = be.attend(cfg_k, params, q, view,
+                          length=jnp.int32(29), scale=0.125)
+        np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_ref),
+                                   atol=2e-5)
+
+
+def test_socket_kernel_rejects_int8_bits():
+    """The scoring kernel unpacks uint32 words — int8 sign storage must
+    fail fast rather than score garbage."""
+    cfg, be, params, _, _, q = _setup("socket")
+    cfg8 = cfg.replace(socket=dataclasses.replace(
+        cfg.socket, bits_storage="int8", use_score_kernel=True))
+    be8 = bk.get_backend("socket")
+    cache = be8.init_cache(cfg8, 2, params["wk"].shape[1], 32, jnp.float32)
+    view = bk.ContiguousView(cache, be8.cache_spec(cfg8))
+    with pytest.raises(NotImplementedError, match="int8"):
+        be8.attend(cfg8, params, q, view, length=jnp.int32(16), scale=0.125)
+
+
+def test_quest_append_resets_stats_on_reused_page():
+    """A decode-growth block may be a reused page still carrying the
+    previous owner's min/max (BlockPool never scrubs device memory): the
+    first token written into a page must RESET the stats, not merge."""
+    cfg, be, params, cview, pview, q = _setup("quest", seed=2)
+    ps = cfg.quest.page_size
+    bs = cfg.serving.block_size
+    # poison every stats page with huge stale bounds
+    poison = {"kmin": jnp.full_like(pview.arrays["kmin"], -1e4),
+              "kmax": jnp.full_like(pview.arrays["kmax"], 1e4)}
+    pview.arrays.update(poison)
+    kv, hd = params["wk"].shape[1], cfg.head_dim
+    kc = jnp.ones((2, kv, 1, hd), jnp.float32) * 0.5
+    pos = jnp.asarray([0, bs], jnp.int32)            # page-opening writes
+    be.append(cfg, params, pview, kc, kc, pos)
+    for i, p in enumerate([0, bs]):
+        row = np.asarray(pview.leaf("kmin"))[i, :, p // ps]
+        np.testing.assert_array_equal(row, 0.5)      # reset, not min(-1e4,·)
+        row = np.asarray(pview.leaf("kmax"))[i, :, p // ps]
+        np.testing.assert_array_equal(row, 0.5)
+    # mid-page writes still merge
+    be.append(cfg, params, pview, kc * 3, kc * 3, pos + 1)
+    np.testing.assert_array_equal(
+        np.asarray(pview.leaf("kmax"))[0, :, 0], 1.5)
+    np.testing.assert_array_equal(
+        np.asarray(pview.leaf("kmin"))[0, :, 0], 0.5)
+
+
+@pytest.mark.parametrize("selection", ["kvhead", "pooled"])
+def test_socket_backend_matches_reference_socket_attend(selection):
+    """The backend's attend composition must stay pinned to the reference
+    ``core.socket.socket_attend`` oracle (used by the context-parallel
+    tests and accuracy benchmarks)."""
+    import dataclasses
+
+    from repro.core import socket as sk
+
+    cfg, be, params, cview, _, q = _setup("socket")
+    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                 selection=selection))
+    out_b = be.attend(cfg, params, q, cview, length=jnp.int32(29),
+                      scale=0.125)
+    out_ref = sk.socket_attend(
+        bk.socket_config_of(cfg), params["hash_w"], q, cview.arrays["k"],
+        cview.arrays["v"],
+        sk.SocketCache(bits=cview.arrays["bits"],
+                       vnorm=cview.arrays["vnorm"]),
+        length=jnp.int32(29), scale=0.125)
+    np.testing.assert_allclose(np.asarray(out_b), np.asarray(out_ref),
+                               atol=1e-6)
+
+
+def test_quest_page_size_must_divide_block_size():
+    cfg = _cfg("quest")
+    bad = cfg.replace(quest=dataclasses.replace(cfg.quest, page_size=3))
+    with pytest.raises(ValueError, match="divide serving block_size"):
+        bk.get_backend("quest").cache_spec(bad)
+
+
+def test_cache_spec_drives_cache_and_axes():
+    """init_attention_cache / cache_logical_axes are derived from the
+    backend spec — leaf set, page granularity and dtypes must line up."""
+    cfg = _cfg("quest")
+    cache = attn.init_attention_cache(cfg, batch=2, capacity=32, attn_type="global")
+    ps = cfg.quest.page_size
+    assert set(cache) == {"k", "v", "kmin", "kmax"}
+    assert cache["kmin"].shape[2] == 32 // ps
+    assert bool(jnp.all(jnp.isinf(cache["kmin"])))
+    axes = attn.cache_logical_axes(cfg, "global")
+    assert axes["kmin"] == ("cache_batch", "cache_heads", "cache_seq", None)
+
+    cfg_s = _cfg("socket")
+    cache_s = attn.init_attention_cache(cfg_s, batch=2, capacity=32,
+                                        attn_type="global")
+    assert set(cache_s) == {"k", "v", "bits", "vnorm"}
+    assert cache_s["bits"].dtype == jnp.uint32
+    assert attn.cache_logical_axes(cfg_s, "global")["vnorm"] == (
+        "cache_batch", "cache_heads", "cache_seq")

@@ -46,12 +46,19 @@ def test_quest_page_bounds(rng):
     cfg = quest.QuestConfig(page_size=16)
     st = quest.build(cfg, rng, keys, values)
     ps = quest.score_pages(st, q)
-    assert int(jnp.argmax(ps)) == 37 // 16
-    # upper bound property: page bound >= any member's true score
+    n_pages = ps.shape[0]
+    # upper-bound property: every page bound >= any member's true score.
+    # (argmax over *bounds* need not hit the planted page — a page of
+    # diverse keys can carry a looser, larger bound; that granularity gap
+    # is exactly what the paper contrasts SOCKET against.)
     true = keys @ q
-    for page in range(4):
+    for page in range(n_pages):
         members = true[page * 16:(page + 1) * 16]
         assert float(ps[page]) >= float(members.max()) - 1e-4
+    # retrieval: the planted page must still rank well ahead of the bulk,
+    # so a modest page budget keeps the true neighbour attendable
+    rank = int(jnp.sum(ps > ps[37 // 16]))
+    assert rank < n_pages // 4, rank
 
 
 def test_pqcache_scores_and_determinism(rng):

@@ -149,10 +149,12 @@ def _smoke_cfg(backend):
         attention_backend=backend)
 
 
-@pytest.mark.parametrize("backend", ["socket", "dense"])
+@pytest.mark.parametrize("backend", ["socket", "dense", "hard_lsh",
+                                     "quest"])
 def test_continuous_matches_static_same_length(backend):
     """Same-length requests through the paged ragged engine reproduce the
-    static lockstep engine token-for-token (same params, same prompts)."""
+    static lockstep engine token-for-token (same params, same prompts) —
+    for every paged-capable backend plus the dense gather fallback."""
     import jax
     from repro.launch.serve import run_serve
     from repro.serving.engine import ContinuousBatchingEngine
@@ -177,14 +179,16 @@ def test_continuous_matches_static_same_length(backend):
             f"request {i}: {r.generated} != {static_toks[i].tolist()}")
 
 
-def test_continuous_mixed_lengths_match_per_request_static():
+@pytest.mark.parametrize("backend", ["socket", "hard_lsh", "quest"])
+def test_continuous_mixed_lengths_match_per_request_static(backend):
     """Ragged batch of different prompt lengths: every request must decode
-    exactly as if it were served alone by the static engine."""
+    exactly as if it were served alone by the static engine (all
+    paged-capable backends)."""
     import jax
     from repro.launch.serve import run_serve
     from repro.serving.engine import ContinuousBatchingEngine
 
-    cfg = _smoke_cfg("socket")
+    cfg = _smoke_cfg(backend)
     steps = 6
     rng = np.random.default_rng(1)
     plens = [8, 24]
@@ -242,11 +246,43 @@ def test_continuous_engine_preemption_end_to_end():
 
 
 def test_engine_rejects_unsupported_configs():
+    import dataclasses
+
     from repro.configs import get_config
     from repro.serving.engine import ContinuousBatchingEngine
 
     with pytest.raises(NotImplementedError):   # sliding-window layers
         ContinuousBatchingEngine(get_config("gemma3-27b").smoke())
-    with pytest.raises(NotImplementedError):   # quest metadata not paged
-        ContinuousBatchingEngine(
-            _smoke_cfg("quest"))
+    with pytest.raises(ValueError):            # unregistered backend name
+        ContinuousBatchingEngine(_smoke_cfg("flashinfer"))
+    cfg = _smoke_cfg("quest")                  # page/block geometry clash
+    with pytest.raises(ValueError):
+        ContinuousBatchingEngine(cfg.replace(
+            quest=dataclasses.replace(cfg.quest, page_size=3)))
+
+
+def test_paged_engine_never_materializes_kv_views():
+    """With a paged-capable backend the engine must not gather contiguous
+    K/V views: per decode step only the metadata leaves are materialized
+    and K/V rows are gathered at the static top-k count."""
+    import jax
+    from repro.core import socket as sk
+    from repro.models import backends as bk
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke_cfg("socket")
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    assert engine.backend.supports_paged
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=12).tolist(),
+                    max_new_tokens=4, arrival=0.0) for _ in range(2)]
+    bk.gather_trace_reset()
+    engine.run(reqs, realtime=False)
+    trace = bk.gather_trace()
+    assert trace, "paged path not exercised"
+    full_leaves = {name for kind, name, _ in trace if kind == "leaf"}
+    assert full_leaves <= {"bits", "vnorm"}, full_leaves
+    kq = sk.topk_budget(bk.socket_config_of(cfg), cfg.serving.max_context)
+    for kind, name, shape in trace:
+        if kind == "rows":
+            assert name in ("k", "v") and shape[-2] == kq, (name, shape)
