@@ -5,34 +5,46 @@ arrivals, mixed prompt lengths, paged KV + SOCKET bit-cache.  Reports
 decode throughput, TTFT and p50/p99 per-token latency per backend, plus
 the static-batch baseline for the same token volume, plus the per-step
 gathered-bytes accounting (full contiguous views vs the paged top-k
-gather) that the DecodeBackend/KVView redesign exists to win.
+gather vs the fused paged kernel's zero-materialization pass) that the
+DecodeBackend/KVView redesign exists to win.
 
-    PYTHONPATH=src python -m benchmarks.bench_serving --smoke
+The pseudo-backend ``socket_fused`` is SOCKET with
+``cfg.socket.use_paged_kernel``: the whole score → select → attend
+pipeline runs as one Pallas pass over the block table, so its
+``gathered_kb_per_step`` reports ≈ 0 vs the unfused paged path's
+O(top_k) rows (and the dense path's full views).
+
+    PYTHONPATH=src python -m benchmarks.bench_serving --smoke [--json F]
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 
-import jax
+
+def _cfg_for(backend: str, smoke: bool):
+    from repro.configs import get_config
+    from repro.launch.serve import apply_backend_arg
+
+    cfg = get_config("stablelm-12b")
+    if smoke:
+        cfg = cfg.smoke()
+    return apply_backend_arg(cfg, backend)
 
 
 def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
-        backends=("socket", "dense")):
+        backends=("socket", "socket_fused", "dense")):
     """Benchmark-harness entry point (see benchmarks/run.py).
 
     Defaults are the --smoke operating point: tiny model, 8 requests,
     finishes in well under a minute on one CPU core.
     """
-    from repro.configs import get_config
     from repro.launch.serve import run_continuous, run_serve
 
     rows = []
     for backend in backends:
-        cfg = get_config("stablelm-12b")
-        if smoke:
-            cfg = cfg.smoke()
-        cfg = cfg.replace(attention_backend=backend)
+        cfg = _cfg_for(backend, smoke)
         sv = cfg.serving
         ceiling = min(max(sv.prefill_buckets), sv.max_context)
         top = ceiling - max_new
@@ -51,7 +63,8 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         assert all(r.state == "finished" for r in reqs)
         # memory-traffic accounting: bytes a decode step would move by
         # materializing full contiguous cache views vs what the paged
-        # backend actually gathers (metadata + top-k K/V rows)
+        # backend actually gathers (metadata + top-k K/V rows; ~0 when
+        # the fused paged kernel consumes the pool in place)
         from repro.serving.paged import gather_footprint
         fp = gather_footprint(cfg)
         rows.append((f"serve_continuous_{backend}", {
@@ -65,9 +78,14 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
             "gathered_kb_full_view": fp["full_view_bytes_per_step"] / 1024,
             "gathered_kb_per_step": fp["paged_bytes_per_step"] / 1024,
             "selected_kv_rows": fp["selected_rows"],
+            "fused_paged_kernel": fp["fused_paged_kernel"],
         }))
 
         # static lockstep baseline: same #sequences at the mean length
+        # (the fused kernel only exists on the paged path — its static
+        # run would duplicate plain socket's)
+        if backend == "socket_fused":
+            continue
         mean_len = int(sum(lens) / len(lens))
         _, prefill_s, decode_s = run_serve(
             cfg, batch=min(num_requests, sv.max_batch),
@@ -89,11 +107,17 @@ def main():
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--json", type=str, default=None,
+                    help="also write results to this JSON file (CI artifact)")
     args = ap.parse_args()
-    for name, metrics in run(smoke=args.smoke,
-                             num_requests=args.num_requests,
-                             max_new=args.max_new_tokens):
+    rows = run(smoke=args.smoke, num_requests=args.num_requests,
+               max_new=args.max_new_tokens)
+    for name, metrics in rows:
         print(name, metrics)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: metrics for name, metrics in rows}, f,
+                      indent=2, sort_keys=True)
 
 
 if __name__ == "__main__":

@@ -55,6 +55,12 @@ class SocketSettings:
     # semantics, interpreter speed) — the XLA fallback is the CPU default.
     use_score_kernel: bool = False
     use_flash_decode: bool = False
+    # Route PagedView decode (the serving engine) through the fused
+    # kernels/paged_attention pass: score + select + attend in one sweep
+    # over the block table, zero XLA gathers on the K/V pool.  Contiguous
+    # callers keep the socket_score + flash_decode pair.  Requires packed
+    # bits and kvhead/pooled selection (fails fast otherwise).
+    use_paged_kernel: bool = False
 
 
 @dataclasses.dataclass(frozen=True)

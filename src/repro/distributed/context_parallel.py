@@ -30,10 +30,10 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import socket
+from repro.distributed.sharding import shard_map
 
 __all__ = ["context_parallel_socket_attend", "merge_partials"]
 

@@ -24,8 +24,9 @@ from typing import Callable, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.distributed.sharding import shard_map
 
 __all__ = ["gpipe_forward"]
 

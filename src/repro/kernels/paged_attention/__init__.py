@@ -1,0 +1,4 @@
+from repro.kernels.paged_attention.ops import paged_socket_attend
+from repro.kernels.paged_attention.ref import paged_socket_attend_ref
+
+__all__ = ["paged_socket_attend", "paged_socket_attend_ref"]

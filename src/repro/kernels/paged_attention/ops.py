@@ -1,0 +1,82 @@
+"""Jitted public wrapper for the fused SOCKET paged-attention kernel.
+
+Accepts the serving engine's natural layouts (5-D decode query, paged
+pool leaves, per-request block table / length / budget vectors) and
+launches :func:`paged_attention_pallas`; on non-TPU backends the kernel
+runs in interpret mode (bit-exact semantics) — set ``interpret=False``
+on real TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.paged_attention import (
+    paged_attention_pallas)
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_tables", "num_planes", "tau", "scale", "sink_tokens",
+    "window_tokens", "interpret", "with_selection"))
+def _attend_flat(q, k_pages, v_pages, bits_pages, vnorm_pages, u, bt,
+                 length, budget, *, num_tables, num_planes, tau, scale,
+                 sink_tokens, window_tokens, interpret, with_selection):
+    return paged_attention_pallas(
+        q, k_pages, v_pages, bits_pages, vnorm_pages, u, bt, length, budget,
+        num_tables=num_tables, num_planes=num_planes, tau=tau, scale=scale,
+        sink_tokens=sink_tokens, window_tokens=window_tokens,
+        interpret=interpret, with_selection=with_selection)
+
+
+def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                        bits_pages: jax.Array, vnorm_pages: jax.Array,
+                        u: jax.Array, block_table: jax.Array, *,
+                        length, budget, num_tables: int, num_planes: int,
+                        tau: float, scale: float, sink_tokens: int,
+                        window_tokens: int,
+                        interpret: Optional[bool] = None,
+                        with_selection: bool = False):
+    """Fused score→select→attend over the paged pool for one decode step.
+
+    Shapes:
+      q            (B, KVH, G, 1, hd) or (B, KVH, G, hd)
+      k/v_pages    (NB, KVH, bs, hd)
+      bits_pages   uint32 (NB, KVH, bs, W)
+      vnorm_pages  (NB, KVH, bs)
+      u            f32 (B, KVH, GS, L, P)  (GS=1 for pooled selection)
+      block_table  int32 (B, nb)
+      length       int32 scalar or (B,)
+      budget       int32 scalar or (B,)  (dynamic top-k budget, <= cap)
+
+    Returns attention output in q's layout (f32), plus the int32
+    ``(B, KVH, nb, bs)`` selection mask when ``with_selection``.
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    orig5 = q.ndim == 5
+    if orig5:
+        b, kvh, g, t, hd = q.shape
+        assert t == 1
+        q = q.reshape(b, kvh, g, hd)
+    b = q.shape[0]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
+    out = _attend_flat(
+        q, k_pages, v_pages, bits_pages, vnorm_pages, u, block_table,
+        length, budget, num_tables=num_tables, num_planes=num_planes,
+        tau=float(tau), scale=float(scale), sink_tokens=int(sink_tokens),
+        window_tokens=int(window_tokens), interpret=interpret,
+        with_selection=with_selection)
+    if with_selection:
+        out, sel = out
+        sel = sel.reshape(*sel.shape[:2], -1).astype(bool)  # (B,KVH,N)
+    if orig5:
+        out = out[:, :, :, None]                            # (B,KVH,G,1,hd)
+    return (out, sel) if with_selection else out

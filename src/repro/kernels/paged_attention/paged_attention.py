@@ -1,0 +1,285 @@
+"""Pallas TPU kernel: fused SOCKET paged decode attention.
+
+One decode step for the serving engine's paged pool: per (request, KV
+head) the kernel streams that request's pages **once through VMEM** via
+the block table (scalar-prefetch index maps — the same mechanism as
+jax's reference ``paged_attention`` kernel) and performs the whole
+SOCKET decode pipeline without materializing scores, indices, or
+gathered K/V in HBM:
+
+1. **Score pass** (grid phase 0): for each page, unpack the packed hash
+   bits in-register, evaluate the factorized soft-collision score
+   (identical math to ``kernels/socket_score``), weight by the value
+   norms, overlay the forced sink/recency-window ``+FLT_MAX`` and the
+   invalid-slot ``-1e30``, and append the per-token effective score to a
+   VMEM scratch ring ``eff (nb, block_size)``.  Only the bits/vnorm
+   leaves move — at deployment settings ~64x less HBM traffic than K/V.
+2. **Select** (phase 1, first page): a 32-step radix descent over the
+   sortable-uint32 view of ``eff`` finds the exact ``budget``-th largest
+   value (the per-request dynamic top-k budget, ``k_r = clip(ceil(len_r
+   / sparsity), min_k, k_cap)``) — a *threshold*, not an index list, so
+   nothing round-trips to the host and no index tensor is written.
+   Tie counts are resolved in index order to replicate
+   ``jax.lax.top_k``'s stable lowest-index-first semantics bit for bit.
+3. **Attend pass** (phase 1): rescan the VMEM score ring page by page,
+   reconstruct each page's selection mask from the threshold (+ a
+   running tie counter in SMEM), and fold the selected rows of the K/V
+   pages into a flash-style online softmax (fp32 running ``m, l, acc``
+   exactly as ``kernels/flash_decode``), emitting ``acc / l`` on the
+   final page.
+
+Selection semantics are the full ``core.socket.value_aware_topk``
+contract: sink + recency-window forcing, per-request ragged budgets
+under a static cap, trash-page-0 / not-yet-written slots masked by the
+per-request length.  The selected *set* is exactly the reference's
+(property-tested in ``tests/test_kernels.py``); the attention output
+matches the score→top-k→flash_decode composition to accumulation-order
+rounding (the fused kernel folds rows in logical order, the unfused
+path in selection-rank order).
+
+Grid = (B, KVH, 2, nb) with the page axis innermost (sequential on
+TPU); phase 0 is the score pass, phase 1 the attend pass.  Index maps
+pin the K/V page index to ``bt[b, 0]`` during the score phase (and the
+bits/vnorm index during the attend phase), so Pallas's revisiting
+pipeline fetches each page's K/V exactly once.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+FLT_MAX = float(np.finfo(np.float32).max)
+
+
+def _sort_key(eff: jax.Array) -> jax.Array:
+    """Order-preserving f32 -> uint32 map (radix-select key space)."""
+    u = jax.lax.bitcast_convert_type(eff, jnp.uint32)
+    neg = (u >> jnp.uint32(31)) == jnp.uint32(1)
+    return u ^ jnp.where(neg, jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+
+
+def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
+                  q_ref, bits_ref, vnorm_ref, u_ref, logz_ref, k_ref, v_ref,
+                  *rest, num_planes: int, l_pad: int, tau: float,
+                  scale: float, sink: int, window: int, block_size: int,
+                  num_seq_blocks: int, with_selection: bool):
+    if with_selection:
+        out_ref, sel_ref = rest[0], rest[1]
+        eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[2:]
+    else:
+        out_ref = rest[0]
+        eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[1:]
+
+    b = pl.program_id(0)
+    phase = pl.program_id(2)
+    i = pl.program_id(3)
+    length = len_ref[b]
+
+    # ---- phase 0: score this page into the VMEM ring --------------------
+    @pl.when(phase == 0)
+    def _score():
+        words = bits_ref[0, 0]                    # (bs, W) uint32
+        bs, w = words.shape
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+        bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+        signs = bits.reshape(bs, w * 32).astype(jnp.float32) * 2.0 - 1.0
+        signs = signs.reshape(bs, l_pad, num_planes)
+
+        u = u_ref[0, 0]                           # (GS, l_pad, P) f32
+        logz = logz_ref[0, 0]                     # (GS, l_pad)
+        # factorized score, same reduction order as the XLA reference:
+        # exp(logits - logZ) summed over tables first, then the group
+        logits = jnp.einsum("nlp,glp->gnl", signs, u) / tau
+        z = jnp.exp(logits - logz[:, None, :])    # (GS, bs, l_pad)
+        scores = jnp.sum(jnp.sum(z, axis=-1), axis=0)           # (bs,)
+        eff = scores * vnorm_ref[0, 0].astype(jnp.float32)
+
+        pos = (jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0).reshape(bs)
+               + i * block_size)
+        forced = (pos < sink) | (pos >= length - window)
+        eff = jnp.where(forced, jnp.float32(FLT_MAX), eff)
+        eff = jnp.where(pos < length, eff, jnp.float32(NEG_INF))
+        eff_scr[i] = eff
+        if with_selection:
+            sel_ref[0, 0, 0] = jnp.zeros((sel_ref.shape[-1],), jnp.int32)
+
+    # ---- phase 1, first page: radix-select the budget threshold ---------
+    @pl.when((phase == 1) & (i == 0))
+    def _select():
+        keys = _sort_key(eff_scr[...])            # (nb, bs)
+        bud = bud_ref[b]
+
+        def body(t, prefix):
+            shift = jnp.uint32(31) - t.astype(jnp.uint32)
+            cand = prefix | (jnp.uint32(1) << shift)
+            cnt = jnp.sum((keys >= cand).astype(jnp.int32))
+            return jnp.where(cnt >= bud, cand, prefix)
+
+        # largest T with count(keys >= T) >= budget == the budget-th
+        # largest key (attained), built MSB-first
+        thr = jax.lax.fori_loop(0, 32, body, jnp.uint32(0))
+        thr_scr[0] = thr
+        ties_scr[0] = bud - jnp.sum((keys > thr).astype(jnp.int32))
+        cnt_scr[0] = 0
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- phase 1: masked online-softmax over this K/V page --------------
+    @pl.when(phase == 1)
+    def _attend():
+        eff = eff_scr[i]                          # (bs,)
+        bs = eff.shape[0]
+        keys = _sort_key(eff)
+        thr = thr_scr[0]
+        gt = keys > thr
+        eq = keys == thr
+        # stable tie-break by index: position j takes a threshold tie iff
+        # (# earlier ties) < ties_needed.  Exclusive prefix count via a
+        # strict lower-triangular matmul (no cumsum primitive on Mosaic).
+        r = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+        before = (r < c).astype(jnp.float32)
+        prior = jax.lax.dot_general(eq.astype(jnp.float32).reshape(1, bs),
+                                    before, (((1,), (0,)), ((), ())))
+        tie_rank = cnt_scr[0] + prior.reshape(bs).astype(jnp.int32)
+        sel = gt | (eq & (tie_rank < ties_scr[0]))
+        sel = sel & (eff > jnp.float32(NEG_INF / 2))
+        cnt_scr[0] = cnt_scr[0] + jnp.sum(eq.astype(jnp.int32))
+        if with_selection:
+            sel_ref[0, 0, 0] = sel.astype(jnp.int32)
+
+        q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        s = jnp.where(sel[None, :], s, NEG_INF)   # (G, bs)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(sel[None, :], p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+        @pl.when(i == num_seq_blocks - 1)
+        def _done():
+            out_ref[0, 0] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)[:, None]
+                             ).astype(out_ref.dtype)
+
+
+def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, bits_pages: jax.Array,
+                           vnorm_pages: jax.Array, u: jax.Array,
+                           block_table: jax.Array, length: jax.Array,
+                           budget: jax.Array, *, num_tables: int,
+                           num_planes: int, tau: float, scale: float,
+                           sink_tokens: int, window_tokens: int,
+                           interpret: bool = True,
+                           with_selection: bool = False):
+    """Launch the fused kernel.
+
+    Args:
+      q:           (B, KVH, G, hd) query heads for this KV head group.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      bits_pages:  uint32 (NB, KVH, bs, W) packed sign bits.
+      vnorm_pages: (NB, KVH, bs) value norms (any float dtype).
+      u:           f32 (B, KVH, GS, L, P) query soft-hash (GS=1 pooled).
+      block_table: int32 (B, nb) physical block ids (trash-padded).
+      length:      int32 (B,) live context length per request.
+      budget:      int32 (B,) dynamic top-k budget per request.
+
+    Returns:
+      f32 (B, KVH, G, hd) attention output; with ``with_selection`` also
+      an int32 (B, KVH, nb, bs) selection mask (test/debug only — it is
+      exactly the HBM materialization the production path avoids).
+    """
+    b, kvh, g, hd = q.shape
+    nblocks, _, bs, w = bits_pages.shape
+    nb = block_table.shape[1]
+    _, _, gs, l, p = u.shape
+    if l != num_tables or p != num_planes:
+        raise ValueError("u shape mismatch")
+    if (w * 32) % num_planes:
+        raise ValueError(
+            f"packed width {w*32} bits not a multiple of P={num_planes}")
+    if k_pages.shape[2] != bs or v_pages.shape[2] != bs \
+            or vnorm_pages.shape[2] != bs:
+        raise ValueError("page pools disagree on block_size")
+    l_pad = (w * 32) // num_planes
+
+    from repro.core import socket as sk
+    logz = sk.log_normalizer(u.astype(jnp.float32), tau)   # (B,KVH,GS,L)
+    pad_l = l_pad - l
+    u_pad = jnp.pad(u.astype(jnp.float32),
+                    ((0, 0), (0, 0), (0, 0), (0, pad_l), (0, 0)))
+    logz_pad = jnp.pad(logz, ((0, 0), (0, 0), (0, 0), (0, pad_l)),
+                       constant_values=jnp.float32(1e30))
+
+    kernel = functools.partial(
+        _fused_kernel, num_planes=num_planes, l_pad=l_pad, tau=float(tau),
+        scale=float(scale), sink=int(sink_tokens), window=int(window_tokens),
+        block_size=bs, num_seq_blocks=nb, with_selection=with_selection)
+
+    # K/V pages are pinned to bt[b, 0] during the score phase (and
+    # bits/vnorm during the attend phase) so the revisiting pipeline
+    # fetches each leaf once per page, not once per phase.
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda b, h, ph, i, *s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, w),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * (1 - ph)],
+                                                      h, 0, 0)),
+        pl.BlockSpec((1, 1, bs),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * (1 - ph)],
+                                                      h, 0)),
+        pl.BlockSpec((1, 1, gs, l_pad, num_planes),
+                     lambda b, h, ph, i, *s: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, 1, gs, l_pad),
+                     lambda b, h, ph, i, *s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, 1, g, hd),
+                              lambda b, h, ph, i, *s: (b, h, 0, 0))]
+    if with_selection:
+        out_shape.append(jax.ShapeDtypeStruct((b, kvh, nb, bs), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1, 1, bs),
+                                      lambda b, h, ph, i, *s: (b, h, i, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, 2, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((nb, bs), jnp.float32),    # eff score ring
+            pltpu.VMEM((g,), jnp.float32),        # m
+            pltpu.VMEM((g,), jnp.float32),        # l
+            pltpu.VMEM((g, hd), jnp.float32),     # acc
+            pltpu.SMEM((1,), jnp.uint32),         # threshold key
+            pltpu.SMEM((1,), jnp.int32),          # ties still to take
+            pltpu.SMEM((1,), jnp.int32),          # ties consumed so far
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), length.astype(jnp.int32),
+      budget.astype(jnp.int32), q, bits_pages, vnorm_pages, u_pad, logz_pad,
+      k_pages, v_pages)
+    return tuple(out) if with_selection else out[0]

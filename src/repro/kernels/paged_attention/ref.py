@@ -1,0 +1,83 @@
+"""Pure-jnp oracle for the fused paged-attention kernel.
+
+Materializes the logical per-request views the fused kernel refuses to
+build (test-only!), then runs the unfused reference composition the
+kernel replaces: factorized soft-collision scoring
+(``socket_score_ref``) → ``value_aware_topk`` (sink/window forcing,
+ragged lengths, dynamic budgets) → masked softmax attention over the
+selected rows (``flash_decode_ref``).
+
+Returns both the attention output and the selected-token mask so tests
+can pin the kernel's *selection* exactly while holding the output to a
+float tolerance (the kernel folds rows in logical order, the reference
+in selection-rank order — same math, different rounding).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import socket as sk
+from repro.kernels.flash_decode.ref import flash_decode_ref
+from repro.kernels.socket_score.ref import socket_score_ref
+
+
+def _logical(pages: jax.Array, bt: jax.Array) -> jax.Array:
+    """(NB, KVH, bs, *rest), (B, nb) -> (B, KVH, nb*bs, *rest)."""
+    from repro.models.backends.base import gather_block_leaf
+    return gather_block_leaf(pages, bt)
+
+
+def paged_socket_attend_ref(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, bits_pages: jax.Array,
+                            vnorm_pages: jax.Array, u: jax.Array,
+                            block_table: jax.Array, *, length, budget,
+                            num_tables: int, num_planes: int, tau: float,
+                            scale: float, sink_tokens: int,
+                            window_tokens: int,
+                            top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for :func:`ops.paged_socket_attend`.
+
+    Same shapes as the kernel wrapper plus ``top_k`` — the static
+    selection cap (any value >= max(budget); the backend uses
+    ``core.socket.topk_budget``).
+
+    Returns ``(out f32 (B, KVH, G, hd), selected bool (B, KVH, N))``.
+    """
+    if q.ndim == 5:
+        q = q[:, :, :, 0]
+    b, kvh, g, hd = q.shape
+    bits = _logical(bits_pages, block_table)          # (B,KVH,N,W)
+    vnorm = _logical(vnorm_pages, block_table).astype(jnp.float32)
+    kc = _logical(k_pages, block_table)
+    vc = _logical(v_pages, block_table)
+    n = bits.shape[2]
+
+    gs = u.shape[2]
+    scores = socket_score_ref(
+        bits.reshape(b * kvh, n, -1), u.reshape(b * kvh, gs, *u.shape[3:]),
+        None, num_tables=num_tables, num_planes=num_planes, tau=tau)
+    scores = scores.reshape(b, kvh, n)
+
+    cfg = sk.SocketConfig(num_planes=num_planes, num_tables=num_tables,
+                          tau=tau, sink_tokens=sink_tokens,
+                          window_tokens=window_tokens)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
+    idx, mask = sk.value_aware_topk(cfg, scores, vnorm, k=top_k,
+                                    length=length, n_total=n, budget=budget)
+
+    k_sel = jnp.take_along_axis(kc, idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(vc, idx[..., None], axis=2)
+    out = flash_decode_ref(q.reshape(b * kvh, g, hd),
+                           k_sel.reshape(b * kvh, top_k, hd),
+                           v_sel.reshape(b * kvh, top_k, hd),
+                           mask.reshape(b * kvh, top_k), scale=scale)
+
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(kvh)[None, :, None]
+    selected = jnp.zeros((b, kvh, n), bool).at[bidx, hidx, idx].max(mask)
+    return out.reshape(b, kvh, g, hd), selected

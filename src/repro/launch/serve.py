@@ -31,6 +31,23 @@ from repro.models import param as pm
 from repro.models import transformer as tfm
 from repro.runtime.steps import make_prefill_step, make_serve_step
 
+# serving-surface backend names: the real DecodeBackend registry plus the
+# socket_fused pseudo-backend (socket + cfg.socket.use_paged_kernel — the
+# fused Pallas paged-attention pass, PagedView/continuous-engine only)
+SERVING_BACKENDS = ("socket", "socket_fused", "dense", "quest", "hard_lsh")
+
+
+def apply_backend_arg(cfg, backend: str):
+    """Resolve a serving-surface backend name onto the config.  Shared by
+    this CLI and ``benchmarks.bench_serving`` so the pseudo-backend
+    mapping lives in exactly one place."""
+    if backend == "socket_fused":
+        import dataclasses
+        return cfg.replace(
+            attention_backend="socket",
+            socket=dataclasses.replace(cfg.socket, use_paged_kernel=True))
+    return cfg.replace(attention_backend=backend)
+
 
 def run_serve(cfg, batch: int, prompt_len: int, decode_steps: int,
               seed: int = 0, prompt=None):
@@ -127,7 +144,10 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=256)
     ap.add_argument("--decode-steps", type=int, default=64)
     ap.add_argument("--backend", default="socket",
-                    choices=["socket", "dense", "quest", "hard_lsh"])
+                    choices=list(SERVING_BACKENDS),
+                    help="decode backend; socket_fused routes the "
+                         "continuous engine through the fused Pallas "
+                         "paged-attention kernel")
     # continuous-engine knobs
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=20.0,
@@ -136,10 +156,15 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.backend == "socket_fused" and args.engine != "continuous":
+        ap.error("--backend socket_fused requires --engine continuous: "
+                 "the fused kernel serves the paged decode path only "
+                 "(the static engine would silently run plain socket)")
+
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
-    cfg = cfg.replace(attention_backend=args.backend)
+    cfg = apply_backend_arg(cfg, args.backend)
 
     if args.engine == "continuous":
         sv = cfg.serving

@@ -17,11 +17,13 @@ from typing import Dict, Tuple
 
 from repro.models.backends.base import (ContiguousView, DecodeBackend,
                                         KVView, LeafSpec, PagedView,
-                                        gather_trace, gather_trace_reset)
+                                        gather_block_leaf, gather_trace,
+                                        gather_trace_reset, record_fused)
 
 __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "LeafSpec", "register", "get_backend", "registered_backends",
-           "gather_trace", "gather_trace_reset", "socket_config_of"]
+           "gather_block_leaf", "gather_trace", "gather_trace_reset",
+           "record_fused", "socket_config_of"]
 
 _REGISTRY: Dict[str, DecodeBackend] = {}
 

@@ -41,7 +41,23 @@ import numpy as np
 
 __all__ = ["LeafSpec", "KVView", "ContiguousView", "PagedView",
            "DecodeBackend", "kv_leaf_specs", "write_prefill_kv",
-           "subset_attention", "gather_trace", "gather_trace_reset"]
+           "subset_attention", "gather_trace", "gather_trace_reset",
+           "record_fused", "gather_block_leaf"]
+
+
+def gather_block_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
+    """Materialize a paged leaf's logical view through a block table:
+    ``(NB, KVH, rows_pb, *rest), (B, nb) -> (B, KVH, nb*rows_pb, *rest)``.
+
+    The one implementation of the pool layout's logical flattening —
+    shared by :meth:`PagedView.leaf`, the serving engine's dense
+    fallback (``serving.paged.gather_views``), and the fused paged
+    kernel's test oracle."""
+    b, nb = bt.shape
+    g = pages[bt]                          # (B, nb, KVH, rows_pb, *rest)
+    g = jnp.moveaxis(g, 2, 1)              # (B, KVH, nb, rows_pb, *rest)
+    return g.reshape(b, pages.shape[1], nb * pages.shape[2],
+                     *pages.shape[3:])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -89,6 +105,14 @@ def gather_trace_reset() -> None:
 
 def gather_trace():
     return list(_GATHER_TRACE)
+
+
+def record_fused(name: str, shape) -> None:
+    """Log a fused-kernel dispatch (kind ``"fused"``): the attend consumed
+    the pool + block table in place — zero leaf materializations, zero
+    K/V row gathers.  Lets the zero-gather tests distinguish "the fused
+    path ran" from "the paged path was never exercised"."""
+    _GATHER_TRACE.append(("fused", name, tuple(shape)))
 
 
 # --------------------------------------------------------------------- views
@@ -216,13 +240,7 @@ class PagedView(KVView):
         return self.block_table.shape[1] * self.block_size
 
     def leaf(self, name: str) -> jax.Array:
-        pages = self.arrays[name]
-        bt = self.block_table
-        b, nb = bt.shape
-        g = pages[bt]                      # (B, nb, KVH, rows_pb, *suffix)
-        g = jnp.moveaxis(g, 2, 1)          # (B, KVH, nb, rows_pb, *suffix)
-        out = g.reshape(b, pages.shape[1], nb * pages.shape[2],
-                        *pages.shape[3:])
+        out = gather_block_leaf(self.arrays[name], self.block_table)
         _GATHER_TRACE.append(("leaf", name, out.shape))
         return out
 
@@ -339,3 +357,9 @@ class DecodeBackend:
         memory-traffic accounting in :func:`repro.serving.paged
         .gather_footprint`)."""
         return n
+
+    def fused_paged(self, cfg) -> bool:
+        """True when this backend's PagedView attend runs as one fused
+        kernel over the pool — zero XLA gathers, zero materialized
+        views, so the gather-footprint accounting reports ≈ 0."""
+        return False

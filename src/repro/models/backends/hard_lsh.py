@@ -34,6 +34,12 @@ class HardLSHBackend(SocketBackend):
     name = "hard_lsh"
     supports_paged = True
 
+    def fused_paged(self, cfg):
+        # inherits SOCKET's cache layout but overrides attend() without a
+        # fused dispatch — cfg.socket.use_paged_kernel must not make the
+        # gather-footprint accounting claim a fused path that never runs
+        return False
+
     def attend(self, cfg, params, q, view, *, length, scale):
         scfg = socket_config_of(cfg)
         n = view.n_tokens

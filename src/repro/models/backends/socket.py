@@ -11,6 +11,14 @@ Paged-capable: scoring reads only the bits/vnorm leaves (~64x smaller
 than K/V at deployment settings), and K/V are touched only at the
 ``top_k ∪ sink ∪ window`` rows the selection returns — the serving engine
 never materializes contiguous K/V views for this backend.
+
+With ``cfg.socket.use_paged_kernel`` the whole PagedView pipeline runs
+as ONE fused Pallas pass (``kernels/paged_attention``): the pool leaves
+and block table go into the kernel verbatim, which streams pages once —
+scoring bits in-register, radix-selecting the per-request budget
+threshold, and folding the selected K/V rows into an online softmax —
+so even the ``O(top_k)`` XLA row gathers disappear.  Contiguous callers
+keep the socket_score + flash_decode pair.
 """
 
 from __future__ import annotations
@@ -83,16 +91,21 @@ class SocketBackend(base.DecodeBackend):
         return sk.dynamic_topk_budget(scfg, length,
                                       sk.topk_budget(scfg, n))
 
+    @staticmethod
+    def _soft_hash(scfg, params, q):
+        """Query soft-hash for the selection mode: pooled hashes the
+        group-mean query once per KV head ((B,KVH,L,P) — G x less scoring
+        work/memory, the TPU operating point of DESIGN.md §2), else each
+        q head ((B,KVH,G,L,P))."""
+        if scfg.selection == "pooled":
+            return sk.soft_hash_query(params["hash_w"],
+                                      jnp.mean(q[..., 0, :], axis=2))
+        return sk.soft_hash_query(params["hash_w"], q[..., 0, :])
+
     def _scores(self, cfg, params, q, view: KVView):
         """(soft-hash u, collision scores) for the selection mode."""
         scfg = socket_config_of(cfg)
-        if scfg.selection == "pooled":
-            # one soft-hash per KV head from the group-mean query — G x
-            # less scoring work/memory (TPU operating point, DESIGN.md §2)
-            u = sk.soft_hash_query(params["hash_w"],
-                                   jnp.mean(q[..., 0, :], axis=2))
-        else:
-            u = sk.soft_hash_query(params["hash_w"], q[..., 0, :])
+        u = self._soft_hash(scfg, params, q)
         bits = view.leaf("bits")
         if cfg.socket.use_score_kernel:
             if scfg.selection not in ("kvhead", "pooled"):
@@ -119,12 +132,47 @@ class SocketBackend(base.DecodeBackend):
                 scores = jnp.sum(scores, axis=2)
         return scores
 
+    def _attend_fused(self, cfg, params, q, view, *, length, scale, budget):
+        """Fused paged path: one Pallas pass over the block table."""
+        scfg = socket_config_of(cfg)
+        if scfg.bits_storage != "packed":
+            raise NotImplementedError(
+                "the fused paged kernel streams packed uint32 hash words; "
+                "bits_storage='int8' must use the unfused paged path")
+        if scfg.selection not in ("kvhead", "pooled"):
+            raise NotImplementedError(
+                "the fused paged kernel group-sums scores (kvhead/pooled "
+                "selection); per-q-head selection has no fused path")
+        if view.block_size % 8:
+            raise NotImplementedError(
+                f"fused paged kernel needs block_size % 8 == 0 (f32 "
+                f"sublane tiling), got {view.block_size}")
+        u = self._soft_hash(scfg, params, q)
+        if scfg.selection == "pooled":
+            u = u[:, :, None]                       # (B,KVH,1,L,P)
+        kq = sk.topk_budget(scfg, view.n_tokens)
+        if budget is None:
+            budget = jnp.full((q.shape[0],), kq, jnp.int32)
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.paged_socket_attend(
+            q, view.arrays["k"], view.arrays["v"], view.arrays["bits"],
+            view.arrays["vnorm"], u, view.block_table, length=length,
+            budget=budget, num_tables=scfg.num_tables,
+            num_planes=scfg.num_planes, tau=scfg.tau, scale=scale,
+            sink_tokens=scfg.sink_tokens, window_tokens=scfg.window_tokens)
+        base.record_fused("paged_attention", out.shape)
+        return out.astype(q.dtype)
+
     def attend(self, cfg, params, q, view: KVView, *, length, scale):
         scfg = socket_config_of(cfg)
         if scfg.selection not in ("kvhead", "pooled", "qhead"):
             raise ValueError(scfg.selection)
         n = view.n_tokens
         budget = self._budget(cfg, length, n)
+
+        if cfg.socket.use_paged_kernel and isinstance(view, base.PagedView):
+            return self._attend_fused(cfg, params, q, view, length=length,
+                                      scale=scale, budget=budget)
 
         mesh = None
         if isinstance(view, ContiguousView) and cfg.decode_cp_axes:
@@ -181,3 +229,6 @@ class SocketBackend(base.DecodeBackend):
     # ---- accounting -----------------------------------------------------
     def selected_rows(self, cfg, n):
         return sk.topk_budget(socket_config_of(cfg), n)
+
+    def fused_paged(self, cfg):
+        return bool(cfg.socket.use_paged_kernel)

@@ -224,8 +224,9 @@ def _apply_moe_alltoall(cfg: ModelConfig, params: Dict, x: jax.Array,
     global order-crossing scatter (measured 32 GB f32 per layer on jamba
     prefill_32k; see EXPERIMENTS.md §Perf).
     """
-    from jax import shard_map
     from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.sharding import shard_map
 
     b, t, d = x.shape
     e, k = cfg.num_experts, cfg.num_experts_per_tok

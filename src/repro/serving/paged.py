@@ -61,11 +61,7 @@ def _leaf_name(path) -> str:
 
 def _gather_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
     """(NB, KVH, rows_pb, *rest), (B, nb) -> (B, KVH, nb*rows_pb, *rest)."""
-    b, nb = bt.shape
-    g = pages[bt]                            # (B, nb, KVH, rows_pb, *rest)
-    g = jnp.moveaxis(g, 2, 1)                # (B, KVH, nb, rows_pb, *rest)
-    return g.reshape(b, pages.shape[1], nb * pages.shape[2],
-                     *pages.shape[3:])
+    return bk.gather_block_leaf(pages, bt)
 
 
 def _scatter_leaf(pages: jax.Array, view: jax.Array, blk: jax.Array,
@@ -161,7 +157,12 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     ``paged_bytes_per_step``: metadata leaves in full (bits/vnorm or page
     min/max — tens of times smaller than K/V) plus only the backend's
     ``selected_rows`` K/V rows; equals the full-view cost for backends
-    that are not paged-capable.
+    that are not paged-capable.  With the fused paged kernel
+    (``cfg.socket.use_paged_kernel``) even those gathers disappear —
+    the kernel consumes the pool + block table in place, so the
+    per-step *materialized* bytes are ≈ 0 (``fused_paged_kernel`` flags
+    the regime; HBM still streams pages, but through VMEM once, with
+    no intermediate buffers written back).
     """
     backend = bk.get_backend(cfg.attention_backend)
     spec = backend.cache_spec(cfg)
@@ -180,6 +181,9 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     rows = backend.selected_rows(cfg, n)
     paged = (full - kv_bytes) + 2 * b * kvh * rows * cfg.head_dim * \
         cdt.itemsize
+    fused = backend.supports_paged and backend.fused_paged(cfg)
+    if fused:
+        paged = 0
     layers = sum(1 for s in cfg.layer_specs
                  if s.kind == "attn" and s.attn_type == "global")
     return {
@@ -187,4 +191,5 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
         "paged_bytes_per_step":
             int(paged if backend.supports_paged else full) * layers,
         "selected_rows": int(rows),
+        "fused_paged_kernel": bool(fused),
     }

@@ -11,6 +11,20 @@ import pytest
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 
+# Hypothesis profiles, pinned per environment: the CI kernels job selects
+# "ci" (derandomized, more examples) via HYPOTHESIS_PROFILE; local runs
+# default to the quick randomized "dev" profile.  Registered here so every
+# property test in the suite shares one policy.
+try:
+    from hypothesis import settings as _hsettings
+
+    _hsettings.register_profile("dev", max_examples=25, deadline=None)
+    _hsettings.register_profile("ci", derandomize=True, max_examples=150,
+                                deadline=None)
+    _hsettings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "dev"))
+except ModuleNotFoundError:          # optional dep (tests/hypothesis_compat)
+    pass
+
 
 @pytest.fixture
 def rng():

@@ -1,0 +1,120 @@
+"""Differential test harness for the Pallas kernels.
+
+Every kernel package under ``src/repro/kernels`` ships an ``ops.py``
+wrapper and a pure-jnp ``ref.py`` oracle.  This harness pins each op to
+its oracle through one shared mechanism:
+
+* A :class:`KernelOp` declares the op's **parity policy once** —
+  ``bitwise`` for exact integer/boolean artifacts (e.g. the paged
+  kernel's selected set) or ``allclose`` with per-dtype tolerances for
+  float outputs — instead of scattering tolerances across tests.
+* A :class:`KernelCase` is one point in the op's dtype ×
+  ragged-length × grid-shape sweep; the op's ``build`` function turns
+  it into ``(label, kernel_out, oracle_out[, policy_override])``
+  comparison tuples (an op may emit several artifacts per case, each
+  with its own policy — the fused paged kernel compares its float
+  attention output under tolerance *and* its selection bitwise).
+* :func:`run_differential` executes one (op, case) pair;
+  ``tests/test_kernels.py`` parametrizes a single test function over
+  :func:`all_cases` of every registered op.
+
+All kernels run in interpret mode off-TPU (identical semantics, the
+same code paths that lower to TPU), so the sweeps are hardware-honest
+on the CPU CI runners.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParityPolicy", "KernelCase", "KernelOp", "all_cases",
+           "run_differential", "BITWISE"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParityPolicy:
+    """How close a kernel output must sit to its oracle.
+
+    ``mode`` is ``"bitwise"`` (``assert_array_equal``) or ``"allclose"``
+    (``atol``/``rtol``; ``bf16_atol`` widens the absolute tolerance when
+    the case's compute dtype is bfloat16).
+    """
+
+    mode: str = "allclose"
+    atol: float = 0.0
+    rtol: float = 0.0
+    bf16_atol: Optional[float] = None
+
+    def for_dtype(self, dtype) -> "ParityPolicy":
+        if (self.mode == "allclose" and self.bf16_atol is not None
+                and jnp.dtype(dtype) == jnp.bfloat16):
+            return dataclasses.replace(self, atol=self.bf16_atol)
+        return self
+
+    def assert_match(self, out, ref, label: str) -> None:
+        out = np.asarray(out)
+        ref = np.asarray(ref)
+        if self.mode == "bitwise":
+            np.testing.assert_array_equal(out, ref, err_msg=label)
+        else:
+            np.testing.assert_allclose(out.astype(np.float64),
+                                       ref.astype(np.float64),
+                                       atol=self.atol, rtol=self.rtol,
+                                       err_msg=label)
+
+
+BITWISE = ParityPolicy(mode="bitwise")
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelCase:
+    """One sweep point: a label plus the op-specific case knobs."""
+
+    label: str
+    params: Tuple[Tuple[str, object], ...]
+
+    @staticmethod
+    def make(label: str, **params) -> "KernelCase":
+        return KernelCase(label, tuple(sorted(params.items())))
+
+    @property
+    def kwargs(self) -> dict:
+        return dict(self.params)
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelOp:
+    """One kernel op: its case sweep, build function, and parity policy.
+
+    ``build(case)`` returns an iterable of comparison tuples
+    ``(artifact_label, kernel_out, oracle_out)`` or
+    ``(artifact_label, kernel_out, oracle_out, policy_override)``.
+    """
+
+    name: str
+    build: Callable[[KernelCase], Sequence]
+    policy: ParityPolicy
+    cases: Tuple[KernelCase, ...]
+
+
+def all_cases(ops: Sequence[KernelOp]):
+    """(op, case) pairs + pytest ids for one flat parametrization."""
+    pairs = [(op, case) for op in ops for case in op.cases]
+    ids = [f"{op.name}-{case.label}" for op, case in pairs]
+    return pairs, ids
+
+
+def run_differential(op: KernelOp, case: KernelCase) -> None:
+    """Run one case of one op against its oracle under the op's policy."""
+    comparisons = op.build(case)
+    assert comparisons, f"{op.name}:{case.label} produced no comparisons"
+    dtype = case.kwargs.get("dtype", jnp.float32)
+    for cmp in comparisons:
+        label, out, ref = cmp[0], cmp[1], cmp[2]
+        policy = cmp[3] if len(cmp) > 3 and cmp[3] is not None else op.policy
+        policy.for_dtype(dtype).assert_match(
+            out, ref, f"{op.name}:{case.label}:{label}")

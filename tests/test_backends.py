@@ -228,3 +228,112 @@ def test_cache_spec_drives_cache_and_axes():
     assert cache_s["bits"].dtype == jnp.uint32
     assert attn.cache_logical_axes(cfg_s, "global")["vnorm"] == (
         "cache_batch", "cache_heads", "cache_seq")
+
+
+def _count_pool_gathers(fn, *args, num_blocks):
+    """# of XLA gather eqns (recursively) whose operand is a pool leaf."""
+    jaxpr = jax.make_jaxpr(fn)(*args)
+
+    def walk(jx):
+        hits = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "gather":
+                op = eqn.invars[0].aval
+                if op.ndim >= 3 and op.shape[0] == num_blocks:
+                    hits += 1
+            for sub in jax.core.jaxprs_in_params(eqn.params):
+                hits += walk(sub)
+        return hits
+    return walk(jaxpr.jaxpr)
+
+
+def test_fused_paged_attend_has_zero_pool_gathers():
+    """The fused kernel consumes the pool in place: the attend jaxpr must
+    contain ZERO gather primitives on pool-shaped operands, where the
+    unfused paged path needs them for every leaf view / top-k row fetch."""
+    cfg, be, params, _, pview, q = _setup("socket")
+    num_blocks = pview.arrays["k"].shape[0]
+    lengths = jnp.asarray([13, 29], jnp.int32)
+
+    def attend(cfg):
+        def fn(q, pages, bt):
+            view = bk.PagedView(pages, be.cache_spec(cfg), bt,
+                                block_size=cfg.serving.block_size)
+            return be.attend(cfg, params, q, view, length=lengths,
+                             scale=0.125)
+        return fn
+
+    unfused = _count_pool_gathers(attend(cfg), q, pview.arrays,
+                                  pview.block_table, num_blocks=num_blocks)
+    assert unfused >= 2, "unfused paged path should gather K and V rows"
+
+    cfg_f = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                   use_paged_kernel=True))
+    fused = _count_pool_gathers(attend(cfg_f), q, pview.arrays,
+                                pview.block_table, num_blocks=num_blocks)
+    assert fused == 0, f"fused path launched {fused} pool gathers"
+
+
+@pytest.mark.parametrize("selection", ["kvhead", "pooled"])
+def test_fused_paged_kernel_matches_unfused_paged_path(selection):
+    """use_paged_kernel routes PagedView attends through the fused Pallas
+    kernel with matching results (ragged and scalar lengths); contiguous
+    views keep the existing path bit-for-bit."""
+    cfg, be, params, cview, pview, q = _setup("socket")
+    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                 selection=selection))
+    cfg_f = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                   use_paged_kernel=True))
+    for length in (jnp.asarray([13, 29], jnp.int32), jnp.int32(29)):
+        out_ref = be.attend(cfg, params, q, pview, length=length,
+                            scale=0.125)
+        out_f = be.attend(cfg_f, params, q, pview, length=length,
+                          scale=0.125)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_ref),
+                                   atol=2e-5)
+    # the flag must not disturb contiguous callers at all
+    out_c = be.attend(cfg, params, q, cview, length=jnp.int32(29),
+                      scale=0.125)
+    out_cf = be.attend(cfg_f, params, q, cview, length=jnp.int32(29),
+                       scale=0.125)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_cf))
+
+
+def test_fused_paged_kernel_rejects_unsupported_combos():
+    """int8 bit storage, per-q-head selection and non-sublane block sizes
+    have no fused path — they must fail fast, not score garbage."""
+    cfg, be, params, _, pview, q = _setup("socket")
+    lengths = jnp.asarray([13, 29], jnp.int32)
+    base_s = dataclasses.replace(cfg.socket, use_paged_kernel=True)
+
+    cfg8 = cfg.replace(socket=dataclasses.replace(base_s,
+                                                  bits_storage="int8"))
+    with pytest.raises(NotImplementedError, match="int8"):
+        be.attend(cfg8, params, q, pview, length=lengths, scale=0.125)
+
+    cfgq = cfg.replace(socket=dataclasses.replace(base_s,
+                                                  selection="qhead"))
+    with pytest.raises(NotImplementedError, match="per-q-head"):
+        be.attend(cfgq, params, q, pview, length=lengths, scale=0.125)
+
+    cfg_bs = cfg.replace(socket=base_s)
+    bad_view = bk.PagedView(pview.arrays, be.cache_spec(cfg_bs),
+                            pview.block_table, block_size=12)
+    with pytest.raises(NotImplementedError, match="block_size"):
+        be.attend(cfg_bs, params, q, bad_view, length=lengths, scale=0.125)
+
+
+def test_hard_lsh_ignores_fused_flag_in_accounting():
+    """hard_lsh inherits SOCKET's cache layout but has no fused attend:
+    cfg.socket.use_paged_kernel must not make fused_paged()/the
+    gather-footprint accounting claim a zero-gather path that never runs."""
+    from repro.serving.paged import gather_footprint
+
+    cfg = _cfg("hard_lsh")
+    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                 use_paged_kernel=True))
+    assert not bk.get_backend("hard_lsh").fused_paged(cfg)
+    assert bk.get_backend("socket").fused_paged(cfg)
+    fp = gather_footprint(cfg)
+    assert not fp["fused_paged_kernel"]
+    assert fp["paged_bytes_per_step"] > 0

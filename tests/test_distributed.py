@@ -46,9 +46,9 @@ def test_lsc_is_identity_without_mesh():
 def test_compressed_psum_exact_and_error_feedback():
     run_subprocess_devices("""
 import jax, jax.numpy as jnp, numpy as np
-from jax import shard_map
 from jax.sharding import PartitionSpec as P
 from repro.distributed.compression import compressed_psum
+from repro.distributed.sharding import shard_map
 
 mesh = jax.make_mesh((8,), ("data",))
 f = shard_map(lambda g, e: compressed_psum({"w": g}, {"w": e}, "data"),

@@ -1,77 +1,306 @@
-"""Per-kernel allclose sweeps vs the pure-jnp ref.py oracles
-(interpret=True on CPU; identical code paths lower to TPU)."""
+"""Kernel differential tests, driven by ``kernel_harness``.
+
+Every Pallas op (socket_score, flash_decode, flash_prefill, and the
+fused paged_attention kernel) is pinned to its ``ref.py`` oracle through
+one parametrized differential test; the bitwise-or-tolerance policy is
+declared once per op in the registry below, not per test.  Property
+tests (Hypothesis + fixed-seed) pin the fused kernel's *selected set*
+exactly to the reference ``value_aware_topk`` semantics.
+
+All tests run the kernels in interpret mode on CPU (identical code
+paths lower to TPU) and carry the ``kernels`` marker so CI can split
+them from the fast tier-1 job.
+"""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from hypothesis_compat import given, settings, st
+from kernel_harness import (BITWISE, KernelCase, KernelOp, ParityPolicy,
+                            all_cases, run_differential)
 
 from repro.core import hashing, socket
 from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
+from repro.kernels.paged_attention import (paged_socket_attend,
+                                           paged_socket_attend_ref)
 from repro.kernels.socket_score import socket_score, socket_score_ref
 
+pytestmark = pytest.mark.kernels
 
-@pytest.mark.parametrize("p,l,n,g,bh", [
-    (10, 60, 1024, 4, 2),   # paper operating point
-    (8, 60, 512, 1, 2),     # LongBench setting
-    (16, 40, 2048, 8, 1),   # wide-plane variant
-    (10, 37, 512, 2, 2),    # unaligned table count
-    (6, 12, 256, 2, 3),     # smoke-scale
-])
-def test_socket_score_kernel_sweep(p, l, n, g, bh):
-    d = 64
-    rng = jax.random.PRNGKey(p * l + n)
+
+# --------------------------------------------------------------- builders
+
+def _build_socket_score(case):
+    p, l, n, g, bh, d, block_n, weighted = (
+        case.kwargs[k] for k in
+        ("p", "l", "n", "g", "bh", "d", "block_n", "weighted"))
+    rng = jax.random.PRNGKey(p * l + n + block_n)
     kk, kq, kw, kv = jax.random.split(rng, 4)
     w = hashing.make_hash_params(kw, d, p, l)
     keys = jax.random.normal(kk, (bh, n, d))
     q = jax.random.normal(kq, (bh, g, d))
     bits = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
     u = socket.soft_hash_query(w, q)
-    vnorm = jax.random.uniform(kv, (bh, n)) + 0.5
-    out = socket_score(bits, u, vnorm, num_tables=l, num_planes=p, tau=0.4)
+    vnorm = (jax.random.uniform(kv, (bh, n)) + 0.5) if weighted else None
+    out = socket_score(bits, u, vnorm, num_tables=l, num_planes=p, tau=0.4,
+                       block_n=block_n)
     ref = socket_score_ref(bits, u, vnorm, num_tables=l, num_planes=p,
                            tau=0.4)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
-                               atol=1e-6)
+    return [("scores", out, ref)]
 
 
-@pytest.mark.parametrize("block_n", [128, 256, 512])
-def test_socket_score_block_shapes(block_n):
-    p, l, n, g, bh, d = 10, 60, 1024, 2, 1, 32
-    rng = jax.random.PRNGKey(block_n)
-    w = hashing.make_hash_params(rng, d, p, l)
-    keys = jax.random.normal(jax.random.fold_in(rng, 1), (bh, n, d))
-    q = jax.random.normal(jax.random.fold_in(rng, 2), (bh, g, d))
-    bits = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
-    u = socket.soft_hash_query(w, q)
-    out = socket_score(bits, u, None, num_tables=l, num_planes=p, tau=0.4,
-                       block_n=block_n)
-    ref = socket_score_ref(bits, u, None, num_tables=l, num_planes=p,
-                           tau=0.4)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4,
-                               atol=1e-6)
-
-
-@pytest.mark.parametrize("bh,g,k,hd,dtype", [
-    (4, 4, 1024, 128, jnp.float32),
-    (2, 1, 512, 64, jnp.bfloat16),
-    (3, 8, 768, 128, jnp.float32),
-    (2, 2, 100, 32, jnp.float32),    # K not a block multiple (padding)
-    (1, 6, 640, 256, jnp.bfloat16),
-])
-def test_flash_decode_sweep(bh, g, k, hd, dtype):
-    rng = jax.random.PRNGKey(k + hd)
+def _build_flash_decode(case):
+    bh, g, k, hd, dtype, block_k = (
+        case.kwargs[x] for x in ("bh", "g", "k", "hd", "dtype", "block_k"))
+    rng = jax.random.PRNGKey(k + hd + block_k)
     k1, k2, k3, k4 = jax.random.split(rng, 4)
     q = jax.random.normal(k1, (bh, g, hd), dtype)
     kk = jax.random.normal(k2, (bh, k, hd), dtype)
     vv = jax.random.normal(k3, (bh, k, hd), dtype)
     mask = jax.random.bernoulli(k4, 0.7, (bh, k)).at[:, 0].set(True)
-    out = flash_decode(q, kk, vv, mask, scale=1 / np.sqrt(hd), block_k=256)
+    out = flash_decode(q, kk, vv, mask, scale=1 / np.sqrt(hd),
+                       block_k=block_k)
     ref = flash_decode_ref(q, kk, vv, mask, scale=1 / np.sqrt(hd))
-    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+    return [("attn", out, ref)]
 
+
+def _build_flash_prefill(case):
+    bh, s, hd, window, dtype = (
+        case.kwargs[x] for x in ("bh", "s", "hd", "window", "dtype"))
+    rng = jax.random.PRNGKey(s + hd + window)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    q = jax.random.normal(k1, (bh, s, hd), dtype)
+    k = jax.random.normal(k2, (bh, s, hd), dtype)
+    v = jax.random.normal(k3, (bh, s, hd), dtype)
+    out = flash_prefill(q, k, v, scale=1 / np.sqrt(hd), window=window,
+                        block_q=128, block_k=128)
+    ref = flash_prefill_ref(q, k, v, scale=1 / np.sqrt(hd), window=window)
+    return [("attn", out, ref)]
+
+
+def _paged_fixture(seed, b, kvh, g, gs, nb, bs, hd, p, l, sink, window,
+                   lengths, dtype=jnp.float32, dup=False, tau=0.4):
+    """Paged-pool inputs with shuffled physical blocks (block 0 = trash)."""
+    rng = np.random.default_rng(seed)
+    n, d = nb * bs, 32
+    w = hashing.make_hash_params(jax.random.PRNGKey(seed), d, p, l)
+    keys = rng.normal(size=(b, kvh, n, d)).astype(np.float32)
+    if dup:
+        # exact duplicate key content -> exact score ties at selection
+        keys[:, :, 1::2] = keys[:, :, 0::2]
+    vals = rng.normal(size=(b, kvh, n, d)).astype(np.float32)
+    bits = hashing.pack_signs(hashing.hash_keys_signs(w, jnp.asarray(keys)))
+    vnorm = jnp.linalg.norm(jnp.asarray(vals), axis=-1).astype(jnp.bfloat16)
+    kc = jnp.asarray(rng.normal(size=(b, kvh, n, hd)), dtype)
+    vc = jnp.asarray(rng.normal(size=(b, kvh, n, hd)), dtype)
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    u = socket.soft_hash_query(
+        w, jnp.asarray(rng.normal(size=(b, kvh, gs, d)), jnp.float32))
+
+    bt = 1 + rng.permutation(b * nb).reshape(b, nb).astype(np.int32)
+
+    def pageify(leaf):
+        arr = np.asarray(leaf)
+        pool = np.zeros((1 + b * nb, kvh, bs) + arr.shape[3:], arr.dtype)
+        for i in range(b):
+            for j in range(nb):
+                pool[bt[i, j]] = arr[i, :, j * bs:(j + 1) * bs]
+        return jnp.asarray(pool)
+
+    scfg = socket.SocketConfig(num_planes=p, num_tables=l, tau=tau,
+                               sink_tokens=sink, window_tokens=window,
+                               min_k=4, sparsity=4.0)
+    kq = socket.topk_budget(scfg, n)
+    length = jnp.asarray(lengths, jnp.int32)
+    budget = socket.dynamic_topk_budget(scfg, length, kq)
+    kw = dict(length=length, budget=budget, num_tables=l, num_planes=p,
+              tau=tau, scale=1 / np.sqrt(hd), sink_tokens=sink,
+              window_tokens=window)
+    return (q, pageify(kc), pageify(vc), pageify(bits), pageify(vnorm), u,
+            jnp.asarray(bt)), kw, kq
+
+
+def _build_paged_attention(case):
+    args, kw, kq = _paged_fixture(**case.kwargs)
+    out, sel = paged_socket_attend(*args, with_selection=True, **kw)
+    ref, sel_ref = paged_socket_attend_ref(*args, top_k=kq, **kw)
+    return [("attn", out, ref), ("selection", sel, sel_ref, BITWISE)]
+
+
+# --------------------------------------------------- op registry + sweeps
+
+def _c(label, **kw):
+    return KernelCase.make(label, **kw)
+
+
+def _score_case(label, p, l, n, g, bh, d=64, block_n=512, weighted=True):
+    return _c(label, p=p, l=l, n=n, g=g, bh=bh, d=d, block_n=block_n,
+              weighted=weighted)
+
+
+def _fd_case(label, bh, g, k, hd, dtype=jnp.float32, block_k=256):
+    return _c(label, bh=bh, g=g, k=k, hd=hd, dtype=dtype, block_k=block_k)
+
+
+def _fp_case(label, bh, s, hd, window, dtype=jnp.float32):
+    return _c(label, bh=bh, s=s, hd=hd, window=window, dtype=dtype)
+
+
+def _pa_case(label, **kw):
+    base = dict(seed=0, b=2, kvh=2, g=2, gs=2, nb=4, bs=8, hd=16, p=6,
+                l=12, sink=4, window=4, lengths=(13, 29))
+    base.update(kw)
+    return _c(label, **base)
+
+
+KERNEL_OPS = (
+    KernelOp(
+        name="socket_score",
+        build=_build_socket_score,
+        policy=ParityPolicy(atol=1e-6, rtol=1e-4),
+        cases=(
+            _score_case("paper-point", 10, 60, 1024, 4, 2),
+            _score_case("longbench", 8, 60, 512, 1, 2),
+            _score_case("wide-planes", 16, 40, 2048, 8, 1),
+            _score_case("unaligned-tables", 10, 37, 512, 2, 2),
+            _score_case("smoke-scale", 6, 12, 256, 2, 3),
+            _score_case("block-128", 10, 60, 1024, 2, 1, d=32,
+                        block_n=128, weighted=False),
+            _score_case("block-256", 10, 60, 1024, 2, 1, d=32,
+                        block_n=256, weighted=False),
+            _score_case("ragged-n", 10, 60, 384, 2, 1, block_n=512),
+        ),
+    ),
+    KernelOp(
+        name="flash_decode",
+        build=_build_flash_decode,
+        policy=ParityPolicy(atol=1e-5, bf16_atol=2e-2),
+        cases=(
+            _fd_case("f32-1024", 4, 4, 1024, 128),
+            _fd_case("bf16-512", 2, 1, 512, 64, dtype=jnp.bfloat16),
+            _fd_case("f32-768", 3, 8, 768, 128),
+            _fd_case("single-short-block", 2, 2, 100, 32),
+            _fd_case("bf16-640", 1, 6, 640, 256, dtype=jnp.bfloat16),
+            # non-divisible context lengths: ragged tail blocks exercise
+            # the pad-and-mask path across *multiple* K blocks
+            _fd_case("tail-300@128", 2, 4, 300, 64, block_k=128),
+            _fd_case("tail-100@64", 2, 2, 100, 32, block_k=64),
+            _fd_case("bf16-tail-129@64", 1, 6, 129, 64,
+                     dtype=jnp.bfloat16, block_k=64),
+            _fd_case("len-lt-block", 1, 2, 7, 32, block_k=64),
+            _fd_case("tail-515@256", 3, 1, 515, 128),
+        ),
+    ),
+    KernelOp(
+        name="flash_prefill",
+        build=_build_flash_prefill,
+        policy=ParityPolicy(atol=1e-5, bf16_atol=3e-2),
+        cases=(
+            _fp_case("s512", 2, 512, 64, 0),
+            _fp_case("s1024", 2, 1024, 128, 0),
+            _fp_case("window-128", 2, 512, 64, 128),
+            _fp_case("bf16-window", 1, 256, 128, 64, dtype=jnp.bfloat16),
+            _fp_case("non-pow2-seq", 1, 384, 32, 0),
+        ),
+    ),
+    KernelOp(
+        name="paged_attention",
+        build=_build_paged_attention,
+        # attention output under tolerance (logical-order vs rank-order
+        # accumulation); the selected set is compared BITWISE per case
+        policy=ParityPolicy(atol=2e-5, bf16_atol=2e-2),
+        cases=(
+            _pa_case("ragged"),
+            _pa_case("pooled-short-ctx", seed=1, gs=1, nb=3, g=4,
+                     lengths=(24, 5)),
+            _pa_case("single-seq", seed=2, b=1, g=1, gs=1, nb=2, bs=16,
+                     hd=32, p=8, l=10, sink=2, window=2, lengths=(32,)),
+            _pa_case("exact-score-ties", seed=3, b=3, lengths=(1, 17, 32),
+                     dup=True),
+            _pa_case("unaligned-tables", seed=4, p=10, l=37,
+                     lengths=(30, 31)),
+            _pa_case("bf16-kv", seed=5, dtype=jnp.bfloat16,
+                     lengths=(32, 9)),
+            _pa_case("budget-floor", seed=6, sink=8, window=8,
+                     lengths=(7, 3)),
+        ),
+    ),
+)
+
+_PAIRS, _IDS = all_cases(KERNEL_OPS)
+
+
+@pytest.mark.parametrize("op,case", _PAIRS, ids=_IDS)
+def test_kernel_matches_oracle(op, case):
+    """Differential sweep: every kernel op == its ref.py oracle under the
+    op's declared parity policy."""
+    run_differential(op, case)
+
+
+# ----------------------------------------------- fused selection property
+
+def _selection_case(seed, b, nb, lengths, gs, sink, window, dup=False):
+    """Kernel selection vs the reference value_aware_topk selection."""
+    kvh, g = 2, 2
+    args, kw, kq = _paged_fixture(
+        seed=seed, b=b, kvh=kvh, g=g, gs=gs, nb=nb, bs=8, hd=16, p=6, l=12,
+        sink=sink, window=window, lengths=lengths, dup=dup)
+    _, sel = paged_socket_attend(*args, with_selection=True, **kw)
+    _, sel_ref = paged_socket_attend_ref(*args, top_k=kq, **kw)
+    return np.asarray(sel), np.asarray(sel_ref), kw
+
+
+@pytest.mark.parametrize("seed,b,nb,lengths,gs,sink,window,dup", [
+    (10, 2, 4, (13, 29), 2, 4, 4, False),     # ragged mid-context
+    (11, 2, 3, (24, 5), 1, 4, 4, False),      # pooled + ctx < sink+window
+    (12, 3, 4, (1, 17, 32), 2, 4, 4, True),   # exact score ties
+    (13, 1, 2, (16,), 1, 8, 8, False),        # everything forced
+    (14, 2, 4, (32, 31), 2, 0, 4, False),     # no sinks, window only
+])
+def test_fused_selection_matches_reference(seed, b, nb, lengths, gs, sink,
+                                           window, dup):
+    """The fused kernel's selected set must equal the reference
+    ``socket_attend`` selection (value_aware_topk) exactly: sink+window
+    forcing, ragged lengths, budget floors, holes in the block table."""
+    sel, sel_ref, kw = _selection_case(seed, b, nb, lengths, gs, sink,
+                                       window, dup)
+    np.testing.assert_array_equal(sel, sel_ref)
+    # sanity on the semantics themselves, not just parity
+    for i, ln in enumerate(lengths):
+        assert not sel[i, :, ln:].any(), "selected past the live length"
+        forced = min(ln, sink + window)
+        per_head = sel[i].sum(axis=-1)
+        assert (per_head >= min(forced, int(kw["budget"][i]))).all(), \
+            "budget floor must keep the forced sink+window set selected"
+
+
+@given(data=st.data())
+@settings(deadline=None)   # example count / derandomization come from the
+def test_fused_selection_property(data):   # profile pinned in conftest.py
+    """Hypothesis sweep of the same contract over random geometries:
+    random block tables with holes (shuffled physical pages), ragged
+    lengths including contexts shorter than sink+window (the PR-1
+    budget-floor regression case)."""
+    seed = data.draw(st.integers(0, 2**16), label="seed")
+    b = data.draw(st.integers(1, 3), label="batch")
+    nb = data.draw(st.integers(1, 4), label="blocks_per_seq")
+    gs = data.draw(st.sampled_from([1, 2]), label="score_groups")
+    sink = data.draw(st.integers(0, 8), label="sink")
+    window = data.draw(st.integers(0, 8), label="window")
+    n = nb * 8
+    lengths = tuple(
+        data.draw(st.integers(1, n), label=f"len{i}") for i in range(b))
+    dup = data.draw(st.booleans(), label="duplicate_keys")
+    sel, sel_ref, _ = _selection_case(seed, b, nb, lengths, gs, sink,
+                                      window, dup)
+    np.testing.assert_array_equal(sel, sel_ref)
+
+
+# ------------------------------------------------------- special regressions
 
 def test_flash_decode_all_masked_rows_are_finite():
     """A fully-masked (empty-selection) row must not produce NaNs."""
@@ -83,24 +312,21 @@ def test_flash_decode_all_masked_rows_are_finite():
     assert bool(jnp.all(jnp.isfinite(out)))
 
 
-@pytest.mark.parametrize("bh,s,hd,window,dtype", [
-    (2, 512, 64, 0, jnp.float32),
-    (2, 1024, 128, 0, jnp.float32),
-    (2, 512, 64, 128, jnp.float32),      # sliding window
-    (1, 256, 128, 64, jnp.bfloat16),
-    (1, 384, 32, 0, jnp.float32),        # non-pow2 seq
-])
-def test_flash_prefill_sweep(bh, s, hd, window, dtype):
-    rng = jax.random.PRNGKey(s + hd + window)
-    k1, k2, k3 = jax.random.split(rng, 3)
-    q = jax.random.normal(k1, (bh, s, hd), dtype)
-    k = jax.random.normal(k2, (bh, s, hd), dtype)
-    v = jax.random.normal(k3, (bh, s, hd), dtype)
-    out = flash_prefill(q, k, v, scale=1 / np.sqrt(hd), window=window,
-                        block_q=128, block_k=128)
-    ref = flash_prefill_ref(q, k, v, scale=1 / np.sqrt(hd), window=window)
-    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=tol)
+def test_paged_attention_rejects_bad_packing():
+    """The fused kernel must fail fast when the packed width cannot be
+    viewed as whole tables of P planes (hashing.num_words pads to make
+    this divisible — a hand-rolled 3-word layout with P=7 cannot be)."""
+    nb, bs, hd, p, l = 2, 8, 16, 7, 10       # 3 words = 96 bits, 96 % 7 != 0
+    q = jnp.zeros((1, 1, 1, hd))
+    kv = jnp.zeros((3, 1, bs, hd))
+    bits = jnp.zeros((3, 1, bs, 3), jnp.uint32)
+    vn = jnp.zeros((3, 1, bs))
+    u = jnp.zeros((1, 1, 1, l, p))
+    bt = jnp.asarray([[1, 2]], jnp.int32)
+    with pytest.raises(ValueError, match="not a multiple"):
+        paged_socket_attend(q, kv, kv, bits, vn, u, bt, length=9, budget=4,
+                            num_tables=l, num_planes=p, tau=0.4, scale=0.25,
+                            sink_tokens=2, window_tokens=2)
 
 
 def test_flash_prefill_matches_model_attention(rng):

@@ -286,3 +286,55 @@ def test_paged_engine_never_materializes_kv_views():
     for kind, name, shape in trace:
         if kind == "rows":
             assert name in ("k", "v") and shape[-2] == kq, (name, shape)
+
+
+def test_fused_paged_engine_launches_zero_kv_gathers():
+    """With ``cfg.socket.use_paged_kernel`` the decode step must not
+    materialize *any* logical leaf view and must gather *zero* K/V rows
+    — the O(top_k) XLA gathers of the unfused paged path drop to none;
+    the fused kernel consumes the pool + block table in place (only the
+    "fused" dispatch marker may appear in the trace)."""
+    import dataclasses
+
+    import jax
+    from repro.models import backends as bk
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke_cfg("socket")
+    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
+                                                 use_paged_kernel=True))
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=12).tolist(),
+                    max_new_tokens=4, arrival=0.0) for _ in range(2)]
+    bk.gather_trace_reset()
+    engine.run(reqs, realtime=False)
+    trace = bk.gather_trace()
+    assert trace, "decode step never traced"
+    kinds = {kind for kind, _, _ in trace}
+    assert kinds == {"fused"}, trace
+    assert any(name == "paged_attention" for _, name, _ in trace)
+
+
+def test_fused_engine_tokens_match_unfused_paged_engine():
+    """The fused kernel is a drop-in routing change: the continuous
+    engine must produce the same greedy tokens with and without it."""
+    import dataclasses
+
+    import jax
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, 250, size=n).tolist() for n in (9, 17, 23)]
+
+    def run(fused):
+        cfg = _smoke_cfg("socket")
+        cfg = cfg.replace(socket=dataclasses.replace(
+            cfg.socket, use_paged_kernel=fused))
+        engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+        reqs = [Request(prompt=list(p), max_new_tokens=5, arrival=0.0)
+                for p in prompts]
+        engine.run(reqs, realtime=False)
+        return [r.generated for r in reqs]
+
+    assert run(True) == run(False)
