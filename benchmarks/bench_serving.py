@@ -14,6 +14,11 @@ pipeline runs as one Pallas pass over the block table, so its
 ``gathered_kb_per_step`` reports ≈ 0 vs the unfused paged path's
 O(top_k) rows (and the dense path's full views).
 
+Hybrid rows (``hybrid_gemma3`` / ``hybrid_jamba``) serve the
+heterogeneous per-layer cache-plan configs — 5:1 local:global and
+attn:mamba — where window layers report *bounded* gathered bytes
+(``window_kb_per_step``) and mamba layers ~0.
+
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke [--json F]
 """
 
@@ -22,19 +27,38 @@ from __future__ import annotations
 import argparse
 import json
 
+HYBRID_ARCHS = {"hybrid_gemma3": "gemma3-27b", "hybrid_jamba":
+                "jamba-v0.1-52b"}
 
-def _cfg_for(backend: str, smoke: bool):
+
+def _cfg_for(backend: str, smoke: bool, arch: str = "stablelm-12b"):
     from repro.configs import get_config
     from repro.launch.serve import apply_backend_arg
 
-    cfg = get_config("stablelm-12b")
+    cfg = get_config(arch)
     if smoke:
         cfg = cfg.smoke()
     return apply_backend_arg(cfg, backend)
 
 
+def _footprint_metrics(cfg):
+    """Per-step gathered-bytes accounting, per layer kind."""
+    from repro.serving.paged import gather_footprint
+
+    fp = gather_footprint(cfg)
+    return {
+        "gathered_kb_full_view": fp["full_view_bytes_per_step"] / 1024,
+        "gathered_kb_per_step": fp["paged_bytes_per_step"] / 1024,
+        "window_kb_per_step": fp["window_bytes_per_step"] / 1024,
+        "state_kb_per_step": fp["state_bytes_per_step"] / 1024,
+        "selected_kv_rows": fp["selected_rows"],
+        "fused_paged_kernel": fp["fused_paged_kernel"],
+    }
+
+
 def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
-        backends=("socket", "socket_fused", "dense")):
+        backends=("socket", "socket_fused", "dense"),
+        hybrids=tuple(HYBRID_ARCHS)):
     """Benchmark-harness entry point (see benchmarks/run.py).
 
     Defaults are the --smoke operating point: tiny model, 8 requests,
@@ -65,8 +89,6 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         # materializing full contiguous cache views vs what the paged
         # backend actually gathers (metadata + top-k K/V rows; ~0 when
         # the fused paged kernel consumes the pool in place)
-        from repro.serving.paged import gather_footprint
-        fp = gather_footprint(cfg)
         rows.append((f"serve_continuous_{backend}", {
             "tput_tok_s": float(m.throughput_tok_s),
             "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
@@ -75,10 +97,7 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
             "preemptions": m.preemptions,
             "decode_iters": m.decode_iters,
             "requests": num_requests,
-            "gathered_kb_full_view": fp["full_view_bytes_per_step"] / 1024,
-            "gathered_kb_per_step": fp["paged_bytes_per_step"] / 1024,
-            "selected_kv_rows": fp["selected_rows"],
-            "fused_paged_kernel": fp["fused_paged_kernel"],
+            **_footprint_metrics(cfg),
         }))
 
         # static lockstep baseline: same #sequences at the mean length
@@ -97,6 +116,36 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
             "prefill_ms": float(prefill_s * 1e3),
             "decode_ms": float(decode_s * 1e3),
             "batch": b,
+        }))
+
+    # heterogeneous cache-plan rows: gemma3's 5:1 local:global and
+    # jamba's attn:mamba patterns on the continuous engine (window
+    # layers ring-paged, mamba layers per-slot state, global layers
+    # socket-paged); fewer requests — they are deeper stacks.
+    for name in hybrids:
+        cfg = _cfg_for("socket", smoke, arch=HYBRID_ARCHS[name])
+        sv = cfg.serving
+        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        top = ceiling - max_new
+        if top < 1:
+            raise ValueError(
+                f"max_new={max_new} leaves no prompt room under the "
+                f"{name} serving context ceiling ({ceiling})")
+        lens = sorted({max(1, top // 2), top})
+        n = min(4, num_requests)
+        reqs, m = run_continuous(cfg, n, rate_rps=50.0, prompt_lens=lens,
+                                 max_new_tokens=max_new, seed=0,
+                                 warmup=True)
+        assert all(r.state == "finished" for r in reqs)
+        rows.append((f"serve_continuous_{name}", {
+            "tput_tok_s": float(m.throughput_tok_s),
+            "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
+            "tok_ms_p50": float(m.token_latency_s_p50 * 1e3),
+            "tok_ms_p99": float(m.token_latency_s_p99 * 1e3),
+            "preemptions": m.preemptions,
+            "decode_iters": m.decode_iters,
+            "requests": n,
+            **_footprint_metrics(cfg),
         }))
     return rows
 

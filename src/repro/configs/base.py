@@ -17,8 +17,8 @@ import dataclasses
 import math
 from typing import Optional, Tuple
 
-__all__ = ["LayerSpec", "ModelConfig", "SocketSettings", "QuestSettings",
-           "ServingSettings"]
+__all__ = ["LayerSpec", "LayerCachePlan", "ModelConfig", "SocketSettings",
+           "QuestSettings", "ServingSettings"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -28,6 +28,31 @@ class LayerSpec:
     kind: str = "attn"          # "attn" | "mamba"
     attn_type: str = "global"   # "global" | "local"  (local = sliding window)
     mlp: str = "dense"          # "dense" | "moe" | "none"
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCachePlan:
+    """How the continuous engine caches ONE layer (derived per LayerSpec).
+
+    ``kind``:
+
+    * ``"paged"`` — global attention: the decode backend's cache leaves
+      live in pool pages, the request block table is consumed linearly
+      (block demand grows with context).
+    * ``"ring"`` — sliding-window attention: K/V pages with the first
+      ``ring_blocks`` block-table entries reused as a circular page list,
+      so old pages are recycled in place and per-slot block demand is
+      bounded by ``ceil(window / block_size)``.
+    * ``"state"`` — Mamba/SSD: conv tail + recurrent state held as fixed
+      per-decode-slot leaves; consumes no pool blocks at all.
+
+    The device-side handlers live in :mod:`repro.models.backends`
+    (``layer_cache_handler``); the host-side block accounting in
+    :class:`repro.serving.scheduler.Scheduler` derives from the same plan.
+    """
+
+    kind: str
+    ring_blocks: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -196,6 +221,30 @@ class ModelConfig:
     @property
     def ssm_heads(self) -> int:
         return self.d_inner // self.ssm_head_dim
+
+    # ------------------------------------------------------ cache planning
+    def ring_geometry(self) -> Tuple[int, int]:
+        """(blocks, rows) of the paged sliding-window ring: the circular
+        page list covers the window (``ceil(window / block_size)`` pool
+        blocks, clamped to the per-request block table)."""
+        sv = self.serving
+        blocks = min(-(-self.sliding_window // sv.block_size),
+                     sv.max_blocks_per_seq)
+        return blocks, blocks * sv.block_size
+
+    def plan_for(self, spec: LayerSpec) -> LayerCachePlan:
+        """Resolve one layer's cache plan (see :class:`LayerCachePlan`)."""
+        if spec.kind != "attn":
+            return LayerCachePlan(kind="state")
+        if spec.attn_type == "local":
+            return LayerCachePlan(kind="ring",
+                                  ring_blocks=self.ring_geometry()[0])
+        return LayerCachePlan(kind="paged")
+
+    def cache_plan(self) -> Tuple[LayerCachePlan, ...]:
+        """Per-layer heterogeneous cache plan (one entry per
+        ``layer_specs``) for the paged continuous-batching engine."""
+        return tuple(self.plan_for(s) for s in self.layer_specs)
 
     @property
     def uses_attention(self) -> bool:

@@ -118,14 +118,20 @@ def make_poisson_requests(cfg, num_requests: int, rate_rps: float,
 
 def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
                    max_new_tokens: int, seed: int = 0, realtime=True,
-                   warmup=False):
+                   warmup=False, temperature: float = 0.0,
+                   top_p: float = 1.0):
     """Continuous-batching serve; returns (requests, ServeMetrics).
 
     ``warmup=True`` pre-compiles the decode step and every prefill bucket
     so the reported TTFT/latency reflect steady-state serving, not jit.
+    ``temperature > 0`` samples inside the jitted decode step
+    (temperature + nucleus top-p, per-slot seeded PRNG); the default is
+    greedy, bit-exact vs the static engine.
     """
     from repro.serving.engine import ContinuousBatchingEngine
-    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed))
+    engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed),
+                                      temperature=temperature, top_p=top_p,
+                                      sample_seed=seed)
     if warmup:
         engine.warmup()
     reqs = make_poisson_requests(cfg, num_requests, rate_rps, prompt_lens,
@@ -154,12 +160,22 @@ def main():
                     help="Poisson arrival rate (requests/s)")
     ap.add_argument("--max-new-tokens", type=int, default=None)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature; 0 = greedy (default)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (with --temperature > 0)")
     args = ap.parse_args()
 
     if args.backend == "socket_fused" and args.engine != "continuous":
         ap.error("--backend socket_fused requires --engine continuous: "
                  "the fused kernel serves the paged decode path only "
                  "(the static engine would silently run plain socket)")
+    if args.temperature > 0 and args.engine != "continuous":
+        ap.error("--temperature requires --engine continuous: sampling "
+                 "lives in the continuous engine's jitted decode step "
+                 "(the static engine would silently decode greedily)")
+    if not 0.0 < args.top_p <= 1.0:
+        ap.error(f"--top-p must be in (0, 1], got {args.top_p}")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -181,12 +197,16 @@ def main():
         lens = sorted({max(1, top // 4), max(1, top // 2),
                        max(1, (3 * top) // 4), top})
         reqs, m = run_continuous(cfg, args.num_requests, args.rate, lens,
-                                 max_new, seed=args.seed)
+                                 max_new, seed=args.seed,
+                                 temperature=args.temperature,
+                                 top_p=args.top_p)
         print(json.dumps({
             "arch": cfg.name, "backend": args.backend,
             "engine": "continuous",
             "prompt_lens": lens,
             "max_new_tokens": max_new,
+            "temperature": args.temperature,
+            "top_p": args.top_p,
             "finished": sum(r.state == "finished" for r in reqs),
             **m.to_json(),
         }, indent=2))

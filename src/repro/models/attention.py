@@ -44,8 +44,12 @@ sparsity budgets from the vector case.
 
 Local (sliding-window) layers decode from a ring buffer of ``window``
 slots — for gemma3's 5:1 pattern this keeps the long_500k cache bounded
-by the window on 52 of 62 layers (DESIGN.md §5).  Ring buffers are
-per-slot state, not backend-routed (paging them is a ROADMAP item).
+by the window on 52 of 62 layers (DESIGN.md §5).  On the continuous
+engine the ring lives in pool pages (cache-plan kind ``"ring"``): pass
+``block_tables`` and the layer reads/writes through a
+:class:`~repro.models.backends.RingView`, whose circular page list
+bounds per-slot block demand at ``ceil(window / block_size)`` — same
+attention math, recycled pages (``cfg.ring_geometry()``).
 """
 
 from __future__ import annotations
@@ -241,17 +245,22 @@ def attention_train(cfg: ModelConfig, params: Dict, x: jax.Array,
 
 def init_attention_cache(cfg: ModelConfig, batch: int, capacity: int,
                          attn_type: str, dtype=None,
-                         long_context: bool = False) -> Dict:
+                         long_context: bool = False,
+                         ring_capacity: Optional[int] = None) -> Dict:
     """Allocate one layer's decode cache (zeros); returns the pytree.
 
     ``long_context`` switches the sequence axis to context-parallel
     sharding (annotated logically; physical placement set by the launcher).
+    ``ring_capacity`` overrides the local-layer ring length (the paged
+    engine needs page-aligned rings, ``ring_blocks * block_size``, instead
+    of the static path's ``min(capacity, window)``).
     """
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     _, kv = _eff_heads(cfg)
     hd = cfg.head_dim
     if attn_type == "local":
-        cap = min(capacity, cfg.sliding_window)
+        cap = ring_capacity if ring_capacity is not None else \
+            min(capacity, cfg.sliding_window)
         return {
             "k": jnp.zeros((batch, kv, cap, hd), dtype),
             "v": jnp.zeros((batch, kv, cap, hd), dtype),
@@ -274,29 +283,41 @@ def cache_logical_axes(cfg: ModelConfig, attn_type: str,
 
 def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
                       positions: jax.Array, attn_type: str,
-                      capacity: int) -> Tuple[jax.Array, Dict]:
+                      capacity: int, last_index=None,
+                      paged: bool = False) -> Tuple[jax.Array, Dict]:
     """Forward over the prompt + build this layer's decode cache.
 
     Output matches :func:`attention_train`; cache covers positions [0, T).
+
+    ``last_index``: optional ``(B,)`` per-row last *real* positions for
+    bucket-padded prompts — the local ring then keeps the window ending
+    at ``last_index`` instead of the (padding-garbage) bucket end.
+    ``paged``: build the local ring at the serving engine's page-aligned
+    capacity (``cfg.ring_geometry()``) so it scatters 1:1 into pool pages.
     """
     b, t, _ = x.shape
     y = attention_train(cfg, params, x, positions, attn_type)
     q, k, v = _project_qkv(cfg, params, x, positions)  # recompute, cheap
     kc = jnp.swapaxes(k, 1, 2)   # (B,KV,T,hd)
     vc = jnp.swapaxes(v, 1, 2)
+    if attn_type == "local":
+        cap = cfg.ring_geometry()[1] if paged else \
+            min(capacity, cfg.sliding_window)
+        li = jnp.full((b,), t - 1, jnp.int32) if last_index is None else \
+            jnp.asarray(last_index, jnp.int32)
+        # ring slot s holds the newest kept position p ≡ s (mod cap); the
+        # same formula the decode step uses to reconstruct slot positions
+        sl = jnp.arange(cap, dtype=jnp.int32)
+        ring_pos = li[:, None] - ((li[:, None] - sl[None]) % cap)  # (B,cap)
+        valid = (ring_pos >= 0)[:, None, :, None]
+        idx = jnp.clip(ring_pos, 0, t - 1)[:, None, :, None]
+        cache = {
+            "k": jnp.where(valid, jnp.take_along_axis(kc, idx, axis=2), 0),
+            "v": jnp.where(valid, jnp.take_along_axis(vc, idx, axis=2), 0),
+        }
+        return y, cache
     cache = init_attention_cache(cfg, b, capacity, attn_type,
                                  dtype=kc.dtype)
-    if attn_type == "local":
-        cap = cache["k"].shape[2]
-        # last `cap` tokens into ring slots (position p -> slot p % cap)
-        take = jnp.arange(cap)
-        src = jnp.maximum(t - cap, 0) + take          # positions kept
-        slot = src % cap
-        cache["k"] = cache["k"].at[:, :, slot].set(
-            jnp.take(kc, src, axis=2))
-        cache["v"] = cache["v"].at[:, :, slot].set(
-            jnp.take(vc, src, axis=2))
-        return y, cache
     backend = backends.get_backend(cfg.attention_backend)
     return y, backend.prefill_build(cfg, params, cache, kc, vc)
 
@@ -338,38 +359,56 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
     # qg: (B, KV, G, 1, hd)
 
     if attn_type == "local":
-        cap = cache["k"].shape[2]
-        slot = pos % cap
-        cache = dict(cache)
-        if ragged:
-            bidx = jnp.arange(b)
-            cache["k"] = cache["k"].at[bidx, :, slot].set(
-                k_new[:, 0].astype(cache["k"].dtype))
-            cache["v"] = cache["v"].at[bidx, :, slot].set(
-                v_new[:, 0].astype(cache["v"].dtype))
+        if block_tables is not None:
+            # paged ring: the block table's first ring_blocks entries are
+            # a circular page list (plan kind "ring"); the bounded ring
+            # view (window-sized) then runs the same attention math.
+            rb, cap = cfg.ring_geometry()
+            view = backends.RingView(
+                {"k": cache["k"], "v": cache["v"]},
+                backends.kv_leaf_specs(cfg), block_tables,
+                cfg.serving.block_size, rb, cfg.sliding_window)
+            view.write_token("k", pos, k_new[:, 0])
+            view.write_token("v", pos, v_new[:, 0])
+            cache = dict(cache)
+            cache.update(view.arrays)
+            ring_k, ring_v = view.leaf("k"), view.leaf("v")
         else:
-            cache["k"] = jax.lax.dynamic_update_slice(
-                cache["k"],
-                jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
-                (0, 0, slot, 0))
-            cache["v"] = jax.lax.dynamic_update_slice(
-                cache["v"],
-                jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
-                (0, 0, slot, 0))
-        # ring-slot absolute positions; invalid slots masked out
+            cap = cache["k"].shape[2]
+            slot = pos % cap
+            cache = dict(cache)
+            if ragged:
+                bidx = jnp.arange(b)
+                cache["k"] = cache["k"].at[bidx, :, slot].set(
+                    k_new[:, 0].astype(cache["k"].dtype))
+                cache["v"] = cache["v"].at[bidx, :, slot].set(
+                    v_new[:, 0].astype(cache["v"].dtype))
+            else:
+                cache["k"] = jax.lax.dynamic_update_slice(
+                    cache["k"],
+                    jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
+                    (0, 0, slot, 0))
+                cache["v"] = jax.lax.dynamic_update_slice(
+                    cache["v"],
+                    jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
+                    (0, 0, slot, 0))
+            ring_k, ring_v = cache["k"], cache["v"]
+        # ring-slot absolute positions; invalid slots masked out.  The
+        # window bound is a no-op when cap <= window (static path) but
+        # trims page-aligned rings that hold slightly more than a window.
         sl = jnp.arange(cap, dtype=jnp.int32)
         pos_b = pos[:, None] if ragged else pos     # (B,1) | scalar
         ring_pos = pos_b - ((pos_b - sl) % cap)      # (B,cap) | (cap,)
-        valid = ring_pos >= 0
+        valid = (ring_pos >= 0) & (pos_b - ring_pos < cfg.sliding_window)
         if not ragged:
             valid = valid[None]
         logits = jnp.einsum("bkgtd,bknd->bkgtn", qg.astype(jnp.float32),
-                            cache["k"].astype(jnp.float32)) * scale
+                            ring_k.astype(jnp.float32)) * scale
         logits = softcap(logits, cfg.attn_logit_softcap)
         logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
         w = jax.nn.softmax(logits, axis=-1)
         ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
-                         cache["v"].astype(jnp.float32))
+                         ring_v.astype(jnp.float32))
     else:
         backend = backends.get_backend(cfg.attention_backend)
         spec = backend.cache_spec(cfg)

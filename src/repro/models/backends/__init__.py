@@ -16,12 +16,18 @@ from __future__ import annotations
 from typing import Dict, Tuple
 
 from repro.models.backends.base import (ContiguousView, DecodeBackend,
-                                        KVView, LeafSpec, PagedView,
-                                        gather_block_leaf, gather_trace,
-                                        gather_trace_reset, record_fused)
+                                        KVView, LayerCacheHandler,
+                                        LayerCacheSpec, LeafSpec,
+                                        PagedKVCacheHandler, PagedView,
+                                        RingView, gather_block_leaf,
+                                        gather_trace, gather_trace_reset,
+                                        kv_leaf_specs, record_fused)
 
 __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
-           "LeafSpec", "register", "get_backend", "registered_backends",
+           "RingView", "LeafSpec", "LayerCacheSpec", "LayerCacheHandler",
+           "PagedKVCacheHandler", "RingCacheHandler", "StateCacheHandler",
+           "layer_cache_handler", "layer_cache_spec", "kv_leaf_specs",
+           "register", "get_backend", "registered_backends",
            "gather_block_leaf", "gather_trace", "gather_trace_reset",
            "record_fused", "socket_config_of"]
 
@@ -57,3 +63,25 @@ from repro.models.backends.socket import SocketBackend, socket_config_of
 for _cls in (SocketBackend, HardLSHBackend, QuestBackend, DenseBackend):
     register(_cls)
 del _cls
+
+# ---- per-layer cache plan resolution --------------------------------------
+from repro.models.backends.ring import RingCacheHandler
+from repro.models.backends.state import StateCacheHandler
+
+
+def layer_cache_handler(cfg, spec) -> LayerCacheHandler:
+    """Resolve one :class:`~repro.configs.base.LayerSpec` to its pool-side
+    cache handler — the device half of the per-layer heterogeneous cache
+    plan (``cfg.cache_plan()``): global attention layers get the decode
+    backend's paged-KV layout, sliding-window layers a bounded circular
+    page ring, Mamba layers fixed per-slot state rows."""
+    if spec.kind != "attn":
+        return StateCacheHandler()
+    if spec.attn_type == "local":
+        return RingCacheHandler()
+    return PagedKVCacheHandler(get_backend(cfg.attention_backend))
+
+
+def layer_cache_spec(cfg, spec) -> LayerCacheSpec:
+    """Resolved declarative cache layout for one layer."""
+    return layer_cache_handler(cfg, spec).spec(cfg)

@@ -39,10 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["LeafSpec", "KVView", "ContiguousView", "PagedView",
-           "DecodeBackend", "kv_leaf_specs", "write_prefill_kv",
+__all__ = ["LeafSpec", "LayerCacheSpec", "KVView", "ContiguousView",
+           "PagedView", "RingView", "DecodeBackend", "LayerCacheHandler",
+           "PagedKVCacheHandler", "kv_leaf_specs", "write_prefill_kv",
            "subset_attention", "gather_trace", "gather_trace_reset",
-           "record_fused", "gather_block_leaf"]
+           "record_fused", "gather_block_leaf", "write_block_prefill",
+           "ring_write_page"]
 
 
 def gather_block_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
@@ -87,6 +89,24 @@ def kv_leaf_specs(cfg) -> Dict[str, LeafSpec]:
     """The K/V leaves every backend stores."""
     hd = cfg.head_dim
     return {"k": LeafSpec(suffix=(hd,)), "v": LeafSpec(suffix=(hd,))}
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCacheSpec:
+    """One layer's resolved cache layout on the serving engine's pool.
+
+    * ``kind == "paged"`` — leaves live in pool pages addressed linearly
+      through the request block table (global-attention backends).
+    * ``kind == "ring"`` — K/V pages addressed circularly through the
+      first ``ring_blocks`` block-table entries (sliding-window layers).
+    * ``kind == "state"`` — fixed per-decode-slot leaves (batch axis =
+      slots), no block table at all (Mamba conv tail + SSD state);
+      ``leaves`` is empty — shapes come from the Mamba cache builder.
+    """
+
+    kind: str
+    leaves: Dict[str, LeafSpec]
+    ring_blocks: int = 0
 
 
 # --------------------------------------------------------------------- trace
@@ -275,6 +295,104 @@ class PagedView(KVView):
             fn(pages[blk, :, row]).astype(pages.dtype))
 
 
+def ring_write_page(pages: jax.Array, blk: jax.Array, pos: jax.Array,
+                    value: jax.Array, *, block_size: int, ring_blocks: int,
+                    window: int) -> jax.Array:
+    """Write token ``pos``'s ``value`` (B, KVH, *suffix) into its circular
+    page ``blk`` (B,) at row ``pos % block_size``, **scrubbing rows that
+    cannot hold in-window tokens at page-opening writes** (row 0):
+
+    * first pass over the ring (``pos < ring capacity``): the page is a
+      freshly allocated pool block still carrying its previous owner's
+      data, and no row past the one written can be valid yet (they map
+      to negative positions) — zero it all;
+    * later passes: rows ``[1, capacity - window]`` hold positions that
+      fell out of the window the moment this page reopened — zero that
+      dead band, keep the still-live window rows (``capacity - window <
+      block_size`` always, since ``capacity = ceil(window / block_size)
+      * block_size``).
+
+    Ring validity masking already excludes every scrubbed row from
+    attention; the scrub exists so pool contents are a pure function of
+    the live requests — recycled blocks are never zeroed on device
+    otherwise.  Active slots hold disjoint blocks; only trash-page
+    writes alias (their content is never read unmasked)."""
+    b = blk.shape[0]
+    cap = ring_blocks * block_size
+    row = pos % block_size
+    page = pages[blk]                      # (B, KVH, block_size, *suffix)
+    r = jnp.arange(block_size)
+    scrub = (row == 0)[:, None] & (r[None] >= 1) & (
+        (r[None] <= cap - window) | (pos < cap)[:, None])   # (B, bs)
+    scrub = scrub.reshape(b, 1, block_size, *([1] * (page.ndim - 3)))
+    page = jnp.where(scrub, jnp.zeros((), page.dtype), page)
+    page = page.at[jnp.arange(b), :, row].set(value.astype(page.dtype))
+    return pages.at[blk].set(page)
+
+
+class RingView(PagedView):
+    """Sliding-window ring over pool pages: the first ``ring_blocks``
+    block-table entries form a circular page list — logical token ``t``
+    lives at entry ``(t // block_size) % ring_blocks``, row
+    ``t % block_size`` (so flat ring slot ``t % (ring_blocks *
+    block_size)``).  Old pages are recycled in place; per-slot block
+    demand never exceeds ``ring_blocks``.
+
+    ``leaf()`` materializes the *bounded* ring view (``ring_blocks *
+    block_size`` rows — window-sized, never context-sized), recorded in
+    the gather trace under kind ``"ring"`` so the zero-materialization
+    assertions for paged K/V stay meaningful.  ``window`` drives the
+    page-opening scrub of :func:`ring_write_page`.
+    """
+
+    def __init__(self, arrays, spec, block_table: jax.Array,
+                 block_size: int, ring_blocks: int, window: int):
+        super().__init__(arrays, spec, block_table, block_size)
+        self.ring_blocks = ring_blocks
+        self.window = window
+
+    @property
+    def n_tokens(self) -> int:
+        return self.ring_blocks * self.block_size
+
+    def leaf(self, name: str) -> jax.Array:
+        out = gather_block_leaf(self.arrays[name],
+                                self.block_table[:, :self.ring_blocks])
+        _GATHER_TRACE.append(("ring", name, out.shape))
+        return out
+
+    def _addr(self, name: str, pos: jax.Array):
+        assert self.spec[name].granularity == 1, name
+        pages = self.arrays[name]
+        pos = self._pos_vec(pos, self.block_table.shape[0])
+        bidx = jnp.arange(self.block_table.shape[0])
+        blk = self.block_table[
+            bidx, (pos // self.block_size) % self.ring_blocks]
+        return pages, blk, pos % self.block_size
+
+    def gather_rows(self, name: str, idx: jax.Array) -> jax.Array:
+        pages = self.arrays[name]
+        bt = self.block_table
+        b, kvh = bt.shape[0], pages.shape[1]
+        bidx = jnp.arange(b).reshape(b, *([1] * (idx.ndim - 1)))
+        hidx = jnp.arange(kvh).reshape(1, kvh, *([1] * (idx.ndim - 2)))
+        blk = bt[bidx, (idx // self.block_size) % self.ring_blocks]
+        out = pages[blk, hidx, idx % self.block_size]
+        _GATHER_TRACE.append(("ring", name, out.shape))
+        return out
+
+    def write_token(self, name, pos, value) -> None:
+        assert self.spec[name].granularity == 1, name
+        pages = self.arrays[name]
+        pos = self._pos_vec(pos, self.block_table.shape[0])
+        bidx = jnp.arange(self.block_table.shape[0])
+        blk = self.block_table[
+            bidx, (pos // self.block_size) % self.ring_blocks]
+        self.arrays[name] = ring_write_page(
+            pages, blk, pos, value, block_size=self.block_size,
+            ring_blocks=self.ring_blocks, window=self.window)
+
+
 # ------------------------------------------------------------------ backend
 
 def write_prefill_kv(cache: Dict[str, jax.Array], kc: jax.Array,
@@ -363,3 +481,96 @@ class DecodeBackend:
         kernel over the pool — zero XLA gathers, zero materialized
         views, so the gather-footprint accounting reports ≈ 0."""
         return False
+
+
+# --------------------------------------------------------- cache handlers
+
+def write_block_prefill(pages: jax.Array, leaf: jax.Array,
+                        bt_row: jax.Array) -> jax.Array:
+    """Scatter a batch=1 prefill cache leaf ``(1, KVH, rows, *rest)`` into
+    pool pages addressed by ``bt_row`` (block ids, trash-padded; only the
+    first ``rows / rows_per_block`` entries are consumed)."""
+    kvh, rows = leaf.shape[1], leaf.shape[2]
+    rows_pb = pages.shape[2]
+    nb = rows // rows_pb
+    blocks = leaf[0].reshape(kvh, nb, rows_pb, *leaf.shape[3:])
+    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, rows_pb, *rest)
+    return pages.at[bt_row[:nb]].set(blocks.astype(pages.dtype))
+
+
+class LayerCacheHandler:
+    """Pool-side operations for ONE layer of the per-layer cache plan.
+
+    The serving engine's pool helpers (:mod:`repro.serving.paged`) resolve
+    each layer to a handler (``layer_cache_handler``) and dispatch through
+    this interface; grouped (scan-stacked) layers are lifted over the
+    group axis with ``jax.vmap`` by the caller.  All methods operate on
+    one layer's leaf dict (name -> array).
+
+    * ``spec``          — declarative :class:`LayerCacheSpec`.
+    * ``write_prefill`` — scatter a fresh batch=1 prefill cache into the
+                          pool (pages via ``bt_row`` or slot row ``slot``).
+    * ``gather``        — materialize the contiguous per-slot views the
+                          unmodified (non-paged) decode path consumes.
+    * ``scatter``       — write the row(s) a decode step updated in those
+                          views back into the pool.
+    """
+
+    kind: str = ""
+
+    def spec(self, cfg) -> LayerCacheSpec:
+        raise NotImplementedError
+
+    def write_prefill(self, cfg, pages: Dict[str, jax.Array],
+                      cache: Dict[str, jax.Array], bt_row: jax.Array,
+                      slot: jax.Array) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def gather(self, cfg, pages: Dict[str, jax.Array],
+               bt: jax.Array) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+    def scatter(self, cfg, pages: Dict[str, jax.Array],
+                views: Dict[str, jax.Array], bt: jax.Array,
+                pos: jax.Array) -> Dict[str, jax.Array]:
+        raise NotImplementedError
+
+
+class PagedKVCacheHandler(LayerCacheHandler):
+    """Global-attention layers: the decode backend's ``cache_spec`` leaves
+    in pool pages, block table consumed linearly (unchanged layout)."""
+
+    kind = "paged"
+
+    def __init__(self, backend: DecodeBackend):
+        self.backend = backend
+
+    def spec(self, cfg) -> LayerCacheSpec:
+        return LayerCacheSpec(kind="paged",
+                              leaves=self.backend.cache_spec(cfg))
+
+    def write_prefill(self, cfg, pages, cache, bt_row, slot):
+        del slot
+        return {name: write_block_prefill(pages[name], cache[name], bt_row)
+                for name in pages}
+
+    def gather(self, cfg, pages, bt):
+        return {name: gather_block_leaf(p, bt) for name, p in pages.items()}
+
+    def scatter(self, cfg, pages, views, bt, pos):
+        """Write the row each slot updated at token index ``pos[b]`` (view
+        row ``pos // gran``) into physical page ``bt[b, pos //
+        block_size]``.  Inactive slots point at the trash block; duplicate
+        trash writes are benign."""
+        bs = cfg.serving.block_size
+        spec = self.backend.cache_spec(cfg)
+        b = bt.shape[0]
+        bidx = jnp.arange(b)
+        blk = bt[bidx, pos // bs]
+        out = {}
+        for name, p in pages.items():
+            gran = spec[name].granularity
+            row = views[name][bidx, :, pos // gran]   # (B, KVH, *rest)
+            out[name] = p.at[blk, :, (pos % bs) // gran].set(
+                row.astype(p.dtype))
+        return out

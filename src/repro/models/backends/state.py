@@ -1,0 +1,50 @@
+"""O(1)-state cache handler for Mamba/SSD layers.
+
+Mamba layers decode from a fixed-size recurrent state (conv tail + SSD
+state) — there is nothing sequence-shaped to page, so on the continuous
+engine their "cache" is one row per decode slot (batch axis =
+``serving.max_batch``) and they consume **zero** pool blocks.  The
+jitted ragged decode step updates all slot rows every iteration (inactive
+slots integrate trash-token garbage, like masked attention slots write
+the trash page); correctness comes from prefill fully overwriting a
+slot's state at admission — which also scrubs the previous occupant's
+state, the state analogue of ring-page scrub-on-open.
+
+Preemption-resume is exact by recomputation: re-prefilling the original
+prompt reproduces the SSD state at the prompt's last token bit-for-bit
+(same jitted chunked-SSD function, same inputs; bucket padding is
+excluded from the state via ``last_index`` dt-masking in
+:func:`repro.models.mamba.mamba_train`), and the recorded tokens then
+replay through the same decode step that produced them.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.models.backends import base
+
+__all__ = ["StateCacheHandler"]
+
+
+class StateCacheHandler(base.LayerCacheHandler):
+    kind = "state"
+
+    def spec(self, cfg) -> base.LayerCacheSpec:
+        # leaves empty: state shapes come from mamba.init_mamba_cache
+        # (they are not (batch, KVH, rows, ...)-shaped LeafSpec leaves).
+        return base.LayerCacheSpec(kind="state", leaves={})
+
+    def write_prefill(self, cfg, pages, cache, bt_row, slot):
+        del bt_row
+        return {name: pages[name].at[slot].set(
+            cache[name][0].astype(pages[name].dtype)) for name in pages}
+
+    def gather(self, cfg, pages, bt):
+        del bt                               # no block table at all
+        return dict(pages)
+
+    def scatter(self, cfg, pages, views, bt, pos):
+        del bt, pos                          # decode updated slots in full
+        return {name: views[name].astype(pages[name].dtype)
+                for name in pages}

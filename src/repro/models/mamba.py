@@ -159,8 +159,19 @@ def _ssd_chunked(cfg: ModelConfig, xh: jax.Array, dt: jax.Array,
 
 
 def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
-                h0=None, conv0=None, return_state: bool = False):
-    """Full-sequence Mamba-2 block.  x: (B, S, d_model)."""
+                h0=None, conv0=None, return_state: bool = False,
+                last_index=None):
+    """Full-sequence Mamba-2 block.  x: (B, S, d_model).
+
+    ``last_index``: optional ``(B,)`` int32 of per-row last *real*
+    positions (the serving engine pads prompts to a static bucket).
+    Positions past it get ``dt = 0`` — decay ``exp(0·a) = 1`` and zero
+    input, so they are exact identity steps and the returned ``ssm``
+    state is the state at ``last_index``, bit-for-bit (the same trick
+    the chunked SSD uses internally for chunk padding); the conv tail is
+    likewise taken ending at ``last_index``.  Outputs at real positions
+    are causal and unaffected.
+    """
     b, s, d = x.shape
     di, nh, st, conv_dim = _dims(cfg)
     cdt = jnp.dtype(cfg.compute_dtype)
@@ -173,6 +184,10 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
                          params["dt_bias"].astype(jnp.float32))
+    if last_index is not None:
+        li = jnp.asarray(last_index, jnp.int32)
+        keep = jnp.arange(s, dtype=jnp.int32)[None, :] <= li[:, None]
+        dt = dt * keep[..., None]
     a_coef = -jnp.exp(params["A_log"].astype(jnp.float32))
 
     xh = xc.reshape(b, s, nh, cfg.ssm_head_dim).astype(jnp.float32)
@@ -189,10 +204,16 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
          params["norm_scale"].astype(jnp.float32)).astype(cdt)
     out = y @ params["out_proj"].astype(cdt)
     if return_state:
-        conv_tail = conv_in[:, -(cfg.ssm_conv_width - 1):]
-        if s < cfg.ssm_conv_width - 1:
-            conv_tail = jnp.pad(
-                conv_in, ((0, 0), (cfg.ssm_conv_width - 1 - s, 0), (0, 0)))
+        kw = cfg.ssm_conv_width - 1
+        if last_index is None:
+            conv_tail = conv_in[:, -kw:]
+            if s < kw:
+                conv_tail = jnp.pad(conv_in, ((0, 0), (kw - s, 0), (0, 0)))
+        else:
+            idx = li[:, None] - kw + 1 + jnp.arange(kw, dtype=jnp.int32)
+            tail = jnp.take_along_axis(conv_in, jnp.maximum(idx, 0)[..., None],
+                                       axis=1)
+            conv_tail = jnp.where((idx >= 0)[..., None], tail, 0)
         return out.astype(x.dtype), {"ssm": h_final,
                                      "conv": conv_tail.astype(cdt)}
     return out.astype(x.dtype)

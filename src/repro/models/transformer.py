@@ -71,14 +71,16 @@ def _block_train(cfg: ModelConfig, params: Dict, spec: LayerSpec,
 
 
 def _block_prefill(cfg: ModelConfig, params: Dict, spec: LayerSpec,
-                   x: jax.Array, positions: jax.Array, capacity: int):
+                   x: jax.Array, positions: jax.Array, capacity: int,
+                   last_index=None, paged: bool = False):
     h = rmsnorm(params["norm_mix"], x)
     if spec.kind == "attn":
         h, cache = attn.attention_prefill(cfg, params["attn"], h, positions,
-                                          spec.attn_type, capacity)
+                                          spec.attn_type, capacity,
+                                          last_index=last_index, paged=paged)
     else:
         h, cache = mb.mamba_train(cfg, params["mamba"], h,
-                                  return_state=True)
+                                  return_state=True, last_index=last_index)
     x = x + h
     if spec.mlp == "dense":
         x = x + apply_mlp(cfg, params["mlp"], rmsnorm(params["norm_mlp"], x))
@@ -110,11 +112,20 @@ def _block_decode(cfg: ModelConfig, params: Dict, spec: LayerSpec,
 
 
 def _block_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
-                 capacity: int, long_context: bool):
+                 capacity: int, long_context: bool, pool=None):
+    """``pool`` (a ``ServingSettings``) switches to paged-pool layout:
+    local-attention leaves become full ``block_size``-row pages (the ring
+    handler addresses them circularly; no window truncation) and Mamba
+    state is one row per decode slot instead of per block."""
     if spec.kind == "attn":
+        ring_cap = pool.block_size if (
+            pool is not None and spec.attn_type == "local") else None
         return attn.init_attention_cache(cfg, batch, capacity,
                                          spec.attn_type,
-                                         long_context=long_context)
+                                         long_context=long_context,
+                                         ring_capacity=ring_cap)
+    if pool is not None:
+        return mb.init_mamba_cache(cfg, pool.max_batch)
     return mb.init_mamba_cache(cfg, batch)
 
 
@@ -259,11 +270,16 @@ def loss_and_metrics(cfg: ModelConfig, params, batch: Dict,
 # ----------------------------------------------------------------- serving
 
 def init_decode_caches(cfg: ModelConfig, batch: int, capacity: int,
-                       long_context: bool = False):
-    """Cache pytree: {"groups": stacked-per-group, "remainder": {...}}."""
+                       long_context: bool = False, pool=None):
+    """Cache pytree: {"groups": stacked-per-group, "remainder": {...}}.
+
+    ``pool``: optional ``ServingSettings`` — build the serving engine's
+    paged pool instead (``batch = num_blocks``, ``capacity = block_size``;
+    see :func:`_block_cache` for the per-kind layout differences).
+    """
     def one_group():
         return {f"slot_{i}": _block_cache(cfg, spec, batch, capacity,
-                                          long_context)
+                                          long_context, pool)
                 for i, spec in enumerate(cfg.pattern)}
 
     groups = jax.tree_util.tree_map(
@@ -272,7 +288,7 @@ def init_decode_caches(cfg: ModelConfig, batch: int, capacity: int,
         if cfg.num_groups > 1 else jax.tree_util.tree_map(
             lambda x: x[None], one_group())
     rem = {f"slot_{i}": _block_cache(cfg, spec, batch, capacity,
-                                     long_context)
+                                     long_context, pool)
            for i, spec in enumerate(cfg.remainder)}
     return {"groups": groups, "remainder": rem}
 
@@ -289,13 +305,18 @@ def decode_cache_axes(cfg: ModelConfig, long_context: bool = False):
 
 
 def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
-            last_index=None):
+            last_index=None, paged: bool = False):
     """Process the prompt, returning (last-token logits, caches).
 
     ``last_index``: optional ``(B,)`` int32 of per-request last *real*
     prompt positions.  The serving engine pads prompts up to a static
     bucket length; without it the returned logits would belong to the
-    padding garbage rather than each prompt's true final token.
+    padding garbage rather than each prompt's true final token — and the
+    sliding-window rings / Mamba states would absorb the padding (both
+    are built *at* ``last_index`` when it is given).
+
+    ``paged``: build caches in the serving engine's pool geometry where
+    it differs from the static one (page-aligned local rings).
     """
     x = _input_embed(cfg, params, batch)
     b, s, _ = x.shape
@@ -305,7 +326,8 @@ def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
         caches = {}
         for i, spec in enumerate(cfg.pattern):
             x, caches[f"slot_{i}"] = _block_prefill(
-                cfg, gparams[f"slot_{i}"], spec, x, positions, capacity)
+                cfg, gparams[f"slot_{i}"], spec, x, positions, capacity,
+                last_index, paged)
         return x, caches
 
     x, group_caches = jax.lax.scan(group_body, x, params["groups"])
@@ -314,7 +336,7 @@ def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
     for i, spec in enumerate(cfg.remainder):
         x, rem_caches[f"slot_{i}"] = _block_prefill(
             cfg, params["remainder"][f"slot_{i}"], spec, x, positions,
-            capacity)
+            capacity, last_index, paged)
 
     if last_index is None:
         x = x[:, -1:]

@@ -77,14 +77,18 @@ def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
 
 
 def make_prefill_step(cfg: ModelConfig, capacity: int,
-                      bucketed: bool = False) -> Callable:
+                      bucketed: bool = False,
+                      paged: bool = False) -> Callable:
     """``bucketed=True`` adds a ``last_index`` argument: the continuous
     engine pads prompts to a static bucket, so the last *real* token's
-    position must be passed explicitly (see :func:`tfm.prefill`)."""
+    position must be passed explicitly (see :func:`tfm.prefill`) — it
+    also pins sliding-window rings and Mamba states to the prompt's true
+    end.  ``paged=True`` builds caches in pool geometry (page-aligned
+    rings)."""
     if bucketed:
         def prefill_bucketed(params, batch, last_index):
             return tfm.prefill(cfg, params, batch, capacity=capacity,
-                               last_index=last_index)
+                               last_index=last_index, paged=paged)
         return prefill_bucketed
 
     def prefill_step(params, batch):

@@ -44,7 +44,9 @@ class BlockPool:
 
     def alloc(self, n: int) -> Optional[List[int]]:
         """Allocate ``n`` blocks, or return None (state unchanged) if the
-        pool cannot satisfy the request — all-or-nothing."""
+        pool cannot satisfy the request — all-or-nothing.  ``n == 0``
+        succeeds with an empty list (SSM-only requests hold no blocks;
+        see the scheduler's per-kind accounting)."""
         if n < 0:
             raise ValueError(n)
         if n > len(self._free):

@@ -2,23 +2,33 @@
 
 Each iteration interleaves **prefill** (admit up to
 ``serving.max_prefill_per_iter`` waiting requests, one jitted
-bucket-padded forward each, KV written straight into the paged pool) with
-one **ragged decode step** over all running slots, a single jit-compiled
-function with a per-slot ``pos`` vector (masked slots point at the trash
-page).  Static shapes throughout — one decode compile total, one prefill
-compile per bucket.
+bucket-padded forward each, caches written straight into the paged pool)
+with one **ragged decode step** over all running slots, a single
+jit-compiled function with a per-slot ``pos`` vector (masked slots point
+at the trash page).  Static shapes throughout — one decode compile
+total, one prefill compile per bucket.
+
+Layers are cached per the **per-layer cache plan** (``cfg.cache_plan()``):
+global-attention layers hold backend-paged KV (+ SOCKET bits / Quest
+stats) addressed linearly by the block table; sliding-window layers a
+bounded circular page ring; Mamba layers O(1) per-slot state holding no
+blocks at all.  Heterogeneous layouts (gemma3's 5:1 local:global,
+jamba's attn:mamba hybrid, pure-SSM mamba2) all serve continuously.
 
 For **paged-capable** backends (``DecodeBackend.supports_paged``: socket,
-hard_lsh, quest) the decode step hands the page pool + block tables
-straight to the model: appends write to pages in place and attention
-reads only the small metadata leaves plus the selected ``O(top_k)`` K/V
-rows (``PagedView``) — no contiguous cache view is ever materialized.
-Backends that need the whole context every step (dense) fall back to the
-gather/scatter round trip (``paged.gather_views`` / ``scatter_token``).
+hard_lsh, quest) — or models without global-attention layers — the
+decode step hands the page pool + block tables straight to the model:
+appends write to pages in place and global attention reads only the
+small metadata leaves plus the selected ``O(top_k)`` K/V rows — no
+contiguous K/V view is ever materialized.  Otherwise (dense) the engine
+falls back to the gather/scatter round trip (``paged.gather_views`` /
+``scatter_token``), which is still window-bounded for ring layers and
+free for state layers.
 
-Greedy sampling; ``input_mode == "tokens"``, all-attention all-global
-layouts only (sliding-window rings and SSM state are per-slot, not paged
-— ROADMAP open item).
+Sampling is greedy by default (bit-exact vs the static engine);
+``temperature > 0`` switches the jitted step to temperature + top-p
+sampling with one seeded PRNG stream per decode slot
+(:mod:`repro.serving.sampling`).  ``input_mode == "tokens"`` only.
 """
 
 from __future__ import annotations
@@ -36,7 +46,7 @@ from repro.models import backends as bk
 from repro.models import param as pm
 from repro.models import transformer as tfm
 from repro.runtime.steps import make_prefill_step, make_serve_step
-from repro.serving import paged
+from repro.serving import paged, sampling
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
 from repro.serving.scheduler import Request, Scheduler
 
@@ -68,10 +78,12 @@ def _percentile(xs: List[float], q: float) -> float:
 
 
 class ContinuousBatchingEngine:
-    """Paged-KV continuous batching over one model replica."""
+    """Paged-cache continuous batching over one model replica."""
 
     def __init__(self, cfg: ModelConfig, params=None,
-                 rng: Optional[jax.Array] = None):
+                 rng: Optional[jax.Array] = None, *,
+                 temperature: float = 0.0, top_p: float = 1.0,
+                 sample_seed: int = 0):
         self._validate(cfg)
         self.cfg = cfg
         self.serving = cfg.serving
@@ -81,12 +93,24 @@ class ContinuousBatchingEngine:
             params = pm.unbox(tfm.init_model(cfg, rng))
         self.params = params
         self.backend = bk.get_backend(cfg.attention_backend)
+        plan = cfg.cache_plan()
+        has_paged = any(p.kind == "paged" for p in plan)
+        ring_blocks = max((p.ring_blocks for p in plan
+                           if p.kind == "ring"), default=0)
+        # page-native decode: paged-capable backend, or no global layer
+        # consumes the backend at all (ring/state layers are page-native
+        # by construction)
+        self._paged_native = self.backend.supports_paged or not has_paged
+        self.temperature = float(temperature)
+        self.top_p = float(top_p)
+        self._keys = sampling.slot_keys(sample_seed, self.serving.max_batch)
         self.pages = paged.init_paged_caches(cfg, self.serving)
         self.pool = BlockPool(self.serving.num_blocks)
         self.scheduler = Scheduler(
             self.pool, max_batch=self.serving.max_batch,
             max_blocks_per_seq=self.serving.max_blocks_per_seq,
-            block_size=self.serving.block_size)
+            block_size=self.serving.block_size,
+            has_paged_layers=has_paged, ring_blocks=ring_blocks)
         self._decode_fn = self._build_decode()
         self._prefill_fns: Dict[int, callable] = {}
 
@@ -95,53 +119,69 @@ class ContinuousBatchingEngine:
         if cfg.input_mode != "tokens":
             raise NotImplementedError(
                 "continuous engine serves token models only")
-        for spec in cfg.layer_specs:
-            if spec.kind != "attn" or spec.attn_type != "global":
-                raise NotImplementedError(
-                    "continuous engine requires all-global attention "
-                    f"layers (got kind={spec.kind!r} "
-                    f"attn_type={spec.attn_type!r})")
-        # resolves the backend (ValueError on unknown names) and validates
-        # its cache layout against the serving geometry (e.g. quest's
-        # page_size must divide block_size)
-        bk.get_backend(cfg.attention_backend).cache_spec(cfg)
+        if any(s.kind == "attn" and s.attn_type == "global"
+               for s in cfg.layer_specs):
+            # resolves the backend (ValueError on unknown names) and
+            # validates its cache layout against the serving geometry
+            # (e.g. quest's page_size must divide block_size)
+            bk.get_backend(cfg.attention_backend).cache_spec(cfg)
         if cfg.decode_cp_axes:
             raise NotImplementedError(
                 "ragged decode + context-parallel SOCKET is a ROADMAP item")
 
     # --------------------------------------------------------------- jit
+    def _pick(self, logits: jax.Array, keys: jax.Array):
+        """Next-token choice from one step's ``(B, 1, V)`` logits."""
+        last = logits[:, -1]
+        if self.temperature > 0:
+            return sampling.sample_tokens(
+                last, keys, temperature=self.temperature, top_p=self.top_p,
+                vocab_size=self.cfg.vocab_size)
+        return jnp.argmax(last, axis=-1), keys
+
     def _build_decode(self):
         serve = make_serve_step(self.cfg)
-        bs = self.serving.block_size
+        cfg = self.cfg
 
-        if self.backend.supports_paged:
+        if self._paged_native:
             # page-native path: the pool + block tables go straight into
-            # the model; no K/V view is ever materialized.
-            def step(params, pages, tokens, bt, pos):
+            # the model; no contiguous K/V view is ever materialized.
+            def step(params, pages, keys, tokens, bt, pos):
                 logits, pages = serve(params, pages, tokens, pos, bt)
-                return jnp.argmax(logits[:, -1], axis=-1), pages
+                tok, keys = self._pick(logits, keys)
+                return tok, keys, pages
         else:
-            gran = {name: s.granularity for name, s in
-                    self.backend.cache_spec(self.cfg).items()}
-
-            def step(params, pages, tokens, bt, pos):
-                views = paged.gather_views(pages, bt)
+            def step(params, pages, keys, tokens, bt, pos):
+                views = paged.gather_views(cfg, pages, bt)
                 logits, views = serve(params, views, tokens, pos)
-                pages = paged.scatter_token(pages, views, bt, pos, bs,
-                                            granularity=gran)
-                return jnp.argmax(logits[:, -1], axis=-1), pages
+                pages = paged.scatter_token(cfg, pages, views, bt, pos)
+                tok, keys = self._pick(logits, keys)
+                return tok, keys, pages
 
         return jax.jit(step, donate_argnums=(1,))
 
+    def _bt_row_len(self, bucket: int) -> int:
+        """Prefill block-table row length: the bucket's blocks, but at
+        least the circular window pages (a short prompt's ring still
+        spans ``ring_blocks`` table entries; unallocated ones are
+        trash)."""
+        return max(bucket // self.serving.block_size,
+                   self.scheduler.ring_blocks)
+
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_fns:
-            prefill = make_prefill_step(self.cfg, bucket, bucketed=True)
+            prefill = make_prefill_step(self.cfg, bucket, bucketed=True,
+                                        paged=True)
 
-            def step(params, pages, tokens, last_index, bt_row):
+            def step(params, pages, keys, tokens, last_index, bt_row,
+                     slot):
                 logits, caches = prefill(params, {"tokens": tokens},
                                          last_index)
-                pages = paged.write_prefill(pages, caches, bt_row)
-                return jnp.argmax(logits[:, -1], axis=-1), pages
+                pages = paged.write_prefill(self.cfg, pages, caches,
+                                            bt_row, slot)
+                tok, key = self._pick(logits, keys[slot][None])
+                keys = keys.at[slot].set(key[0])
+                return tok, keys, pages
 
             self._prefill_fns[bucket] = jax.jit(step, donate_argnums=(1,))
         return self._prefill_fns[bucket]
@@ -149,21 +189,22 @@ class ContinuousBatchingEngine:
     def warmup(self) -> None:
         """Trigger every jit compile (decode step + all prefill buckets)
         against the trash page, so a subsequent run's TTFT and latency
-        percentiles measure serving, not compilation."""
+        percentiles measure serving, not compilation.  Sampling keys are
+        not consumed (warmup randomness is discarded)."""
         sv = self.serving
         tokens = jnp.zeros((sv.max_batch, 1), jnp.int32)
         bt = jnp.full((sv.max_batch, sv.max_blocks_per_seq), TRASH_BLOCK,
                       jnp.int32)
         pos = jnp.zeros((sv.max_batch,), jnp.int32)
-        _, self.pages = self._decode_fn(self.params, self.pages, tokens,
-                                        bt, pos)
+        _, _, self.pages = self._decode_fn(self.params, self.pages,
+                                           self._keys, tokens, bt, pos)
         for bucket in sv.prefill_buckets:
-            bt_row = jnp.full((bucket // sv.block_size,), TRASH_BLOCK,
+            bt_row = jnp.full((self._bt_row_len(bucket),), TRASH_BLOCK,
                               jnp.int32)
-            _, self.pages = self._prefill_fn(bucket)(
-                self.params, self.pages,
+            _, _, self.pages = self._prefill_fn(bucket)(
+                self.params, self.pages, self._keys,
                 jnp.zeros((1, bucket), jnp.int32),
-                jnp.zeros((1,), jnp.int32), bt_row)
+                jnp.zeros((1,), jnp.int32), bt_row, jnp.int32(0))
 
     def _bucket_for(self, n: int) -> int:
         for b in sorted(self.serving.prefill_buckets):
@@ -219,17 +260,17 @@ class ContinuousBatchingEngine:
                 tokens[r.slot, 0] = r.input_token(r.pos)
                 bt[r.slot, :len(r.blocks)] = r.blocks
                 pos[r.slot] = r.pos
-            next_tok, self.pages = self._decode_fn(
-                self.params, self.pages, jnp.asarray(tokens),
+            next_tok, self._keys, self.pages = self._decode_fn(
+                self.params, self.pages, self._keys, jnp.asarray(tokens),
                 jnp.asarray(bt), jnp.asarray(pos))
             next_tok = np.asarray(next_tok)
             it_s = time.perf_counter() - t_it
             decode_iters += 1
             for r in runnable:
                 # post-preemption replay: steps whose output token is
-                # already recorded only rebuild KV — the recomputation is
-                # identical, so the produced token is discarded, not
-                # re-sampled (token-exact resume).
+                # already recorded only rebuild the cache — the
+                # recomputation is identical, so the produced token is
+                # discarded, not re-sampled (token-exact resume).
                 replaying = r.pos - len(r.prompt) + 1 < len(r.generated)
                 if not replaying:
                     r.generated.append(int(next_tok[r.slot]))
@@ -246,19 +287,20 @@ class ContinuousBatchingEngine:
         bucket = self._bucket_for(len(prompt))
         tokens = np.zeros((1, bucket), np.int32)
         tokens[0, :len(prompt)] = prompt
-        bt_row = np.full((bucket // self.serving.block_size,), TRASH_BLOCK,
+        bt_row = np.full((self._bt_row_len(bucket),), TRASH_BLOCK,
                          np.int32)
         bt_row[:len(req.blocks)] = req.blocks
-        first_tok, self.pages = self._prefill_fn(bucket)(
-            self.params, self.pages, jnp.asarray(tokens),
+        first_tok, self._keys, self.pages = self._prefill_fn(bucket)(
+            self.params, self.pages, self._keys, jnp.asarray(tokens),
             jnp.asarray([len(prompt) - 1], jnp.int32),
-            jnp.asarray(bt_row))
+            jnp.asarray(bt_row), jnp.int32(req.slot))
         if not req.generated:
             req.generated.append(int(np.asarray(first_tok)[0]))
         # resumed after preemption: the prefill only rebuilt the prompt's
-        # KV; recorded tokens now replay through the decode path (the
-        # backend that originally produced them), so generation is
-        # token-exact regardless of pool pressure.
+        # caches (KV pages / window ring / SSM state — bit-exact
+        # recomputation); recorded tokens now replay through the decode
+        # path (the backend that originally produced them), so generation
+        # is token-exact regardless of pool pressure.
 
     def _metrics(self, requests: List[Request], wall: float,
                  decode_iters: int) -> ServeMetrics:

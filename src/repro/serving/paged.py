@@ -1,37 +1,46 @@
-"""Device-side paged cache pool: KV pages + backend metadata pages.
+"""Device-side paged cache pool, organised by the per-layer cache plan.
 
-Layout: every layer-cache leaf of the standard decode cache (see
-:func:`repro.models.transformer.init_decode_caches`) is re-homed with the
-batch axis replaced by the **physical block axis** and the capacity axis by
-the **block size** (divided by the leaf's sequence granularity — Quest's
-page-granular min/max rows pack ``block_size / page_size`` rows per
-block)::
+Each layer of the stack resolves to one cache handler
+(:func:`repro.models.backends.layer_cache_handler`, mirroring
+``cfg.cache_plan()``):
 
-    k / v   : (num_blocks, KVH, block_size, hd)
-    bits    : (num_blocks, KVH, block_size, W)     (SOCKET packed hash bits)
-    vnorm   : (num_blocks, KVH, block_size)        (SOCKET value norms)
-    kmin/max: (num_blocks, KVH, block_size/ps, hd) (Quest page stats)
+* **paged** (global attention) — every leaf of the backend's
+  ``cache_spec`` re-homed with the batch axis replaced by the physical
+  block axis and the capacity axis by the block size (divided by the
+  leaf's sequence granularity)::
 
-Grouped (scan-stacked) layers carry a leading group axis; all per-leaf
-helpers are plain rank-polymorphic functions lifted over that axis with
-``jax.vmap``.  One block id addresses the same page in every layer, so the
-host allocator (:mod:`repro.serving.block_pool`) hands out one id list per
-request for the whole stack.
+      k / v   : (num_blocks, KVH, block_size, hd)
+      bits    : (num_blocks, KVH, block_size, W)   (SOCKET hash bits)
+      vnorm   : (num_blocks, KVH, block_size)      (SOCKET value norms)
+      kmin/max: (num_blocks, KVH, block_size/ps, hd) (Quest page stats)
 
-**Paged-capable backends** (``DecodeBackend.supports_paged``) consume this
-pool directly through :class:`repro.models.backends.PagedView` — the
-engine passes the pool + block tables into ``decode_step`` and no
-contiguous view is ever materialized for K/V.  For the remaining backends
+* **ring** (sliding-window attention) — K/V pages of the same geometry,
+  but addressed circularly through the first ``ring_blocks`` block-table
+  entries, so per-slot block demand is bounded by the window.
+
+* **state** (Mamba/SSD) — conv tail + recurrent state as one row per
+  decode slot (``(max_batch, ...)``), no block table at all.
+
+Grouped (scan-stacked) layers carry a leading group axis; handler calls
+are lifted over it with ``jax.vmap``.  One block id addresses the same
+page in every paged/ring layer, so the host allocator
+(:mod:`repro.serving.block_pool`) hands out one id list per request for
+the whole stack — ring layers simply recycle the list's head.
+
+**Paged-capable backends** (``DecodeBackend.supports_paged``) consume
+the pool directly through ``PagedView``/``RingView`` — the engine passes
+the pool + block tables into ``decode_step`` and no contiguous K/V view
+is ever materialized for global layers (ring views are window-bounded by
+construction; state needs no view at all).  For the remaining backends
 (dense) the engine falls back to the gather/scatter round trip below:
-materialize each slot's ``(B, KVH, max_context, ...)`` view, run the
-unmodified decode, scatter the one new token back.  That XLA-portable
-path is memory-traffic-bound at long context — :func:`gather_footprint`
-quantifies the difference.
+materialize each slot's contiguous views, run the unmodified decode,
+write the updated rows back.  :func:`gather_footprint` quantifies the
+per-step traffic of both regimes, per layer kind.
 """
 
 from __future__ import annotations
 
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -46,150 +55,141 @@ __all__ = ["init_paged_caches", "gather_views", "scatter_token",
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
-    """Zero-initialized paged pool, reusing the model's cache builder with
-    batch=num_blocks and capacity=block_size."""
+    """Zero-initialized pool, reusing the model's cache builder with
+    batch=num_blocks and capacity=block_size (per-kind layout overrides
+    via ``pool=serving`` — see :func:`tfm.init_decode_caches`)."""
     serving.validate()
     return tfm.init_decode_caches(cfg, batch=serving.num_blocks,
-                                  capacity=serving.block_size)
+                                  capacity=serving.block_size,
+                                  pool=serving)
 
 
-def _leaf_name(path) -> str:
-    return path[-1].key
+def _map_slots(cfg: ModelConfig, fn, *trees):
+    """Apply ``fn(handler, *subtrees)`` per layer slot, vmapped over the
+    group axis for the scan-stacked pattern slots."""
+    def over(specs, grouped, *subtrees):
+        out = {}
+        for i, spec in enumerate(specs):
+            h = bk.layer_cache_handler(cfg, spec)
+            subs = [t[f"slot_{i}"] for t in subtrees]
+            out[f"slot_{i}"] = jax.vmap(lambda *xs, _h=h: fn(_h, *xs))(
+                *subs) if grouped else fn(h, *subs)
+        return out
+    return {
+        "groups": over(cfg.pattern, True,
+                       *[t["groups"] for t in trees]),
+        "remainder": over(cfg.remainder, False,
+                          *[t["remainder"] for t in trees]),
+    }
 
 
-# ------------------------------------------------------------------ leaves
-
-def _gather_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
-    """(NB, KVH, rows_pb, *rest), (B, nb) -> (B, KVH, nb*rows_pb, *rest)."""
-    return bk.gather_block_leaf(pages, bt)
-
-
-def _scatter_leaf(pages: jax.Array, view: jax.Array, blk: jax.Array,
-                  pos: jax.Array, block_size: int, gran: int) -> jax.Array:
-    """Write the row each slot updated at token index ``pos[b]`` (view row
-    ``pos // gran``) into physical page ``blk[b]`` row ``(pos %
-    block_size) // gran``.  Inactive slots carry ``blk == TRASH_BLOCK``;
-    duplicate trash writes are benign."""
-    b = view.shape[0]
-    row = view[jnp.arange(b), :, pos // gran]    # (B, KVH, *rest)
-    off = (pos % block_size) // gran
-    return pages.at[blk, :, off].set(row.astype(pages.dtype))
-
-
-def _write_prefill_leaf(pages: jax.Array, leaf: jax.Array,
-                        bt_row: jax.Array) -> jax.Array:
-    """Scatter a batch=1 prefill cache leaf (1, KVH, rows, *rest) into
-    pages addressed by ``bt_row`` ((bucket/bs,) block ids, trash-padded)."""
-    kvh, rows = leaf.shape[1], leaf.shape[2]
-    rows_pb = pages.shape[2]
-    nb = rows // rows_pb
-    blocks = leaf[0].reshape(kvh, nb, rows_pb, *leaf.shape[3:])
-    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, rows_pb, *rest)
-    return pages.at[bt_row].set(blocks.astype(pages.dtype))
-
-
-# ------------------------------------------------------------------- tree
-
-def gather_views(pages, bt: jax.Array):
-    """Materialize the ragged batch's contiguous cache views.
+def gather_views(cfg: ModelConfig, pages, bt: jax.Array):
+    """Materialize the ragged batch's contiguous cache views (the dense
+    fallback path): full logical views for paged layers, window-bounded
+    rings for ring layers, the per-slot state rows as-is for state
+    layers.
 
     bt: (B, max_blocks_per_seq) int32 physical block ids (trash-padded).
-    Returns a cache pytree shaped exactly like
-    ``init_decode_caches(cfg, B, max_context)``.
     """
-    grouped = jax.vmap(_gather_leaf, in_axes=(0, None))
-    return {
-        "groups": jax.tree_util.tree_map(
-            lambda p: grouped(p, bt), pages["groups"]),
-        "remainder": jax.tree_util.tree_map(
-            lambda p: _gather_leaf(p, bt), pages["remainder"]),
-    }
+    return _map_slots(cfg, lambda h, p: h.gather(cfg, p, bt), pages)
 
 
-def scatter_token(pages, views, bt: jax.Array, pos: jax.Array,
-                  block_size: int,
-                  granularity: Optional[Dict[str, int]] = None):
-    """Write each slot's newly updated row back from the contiguous view
-    into its page; returns the updated pool pytree.
-
-    ``granularity``: optional leaf-name -> tokens-per-row map (from the
-    backend's ``cache_spec``) for page-granular metadata leaves; token-
-    granular leaves may be omitted.
-    """
-    gran = granularity or {}
-    b = bt.shape[0]
-    blk = bt[jnp.arange(b), pos // block_size]   # (B,) physical blocks
-
-    def scatter(path, p, v):
-        g = gran.get(_leaf_name(path), 1)
-        fn = lambda pp, vv: _scatter_leaf(pp, vv, blk, pos, block_size, g)
-        if path[0].key == "groups":
-            return jax.vmap(fn)(p, v)
-        return fn(p, v)
-
-    return jax.tree_util.tree_map_with_path(scatter, pages, views)
+def scatter_token(cfg: ModelConfig, pages, views, bt: jax.Array,
+                  pos: jax.Array):
+    """Write what a decode step updated in the contiguous views back into
+    the pool: the one new row for paged layers, the one ring row (with
+    page-opening scrub) for ring layers, the whole per-slot state for
+    state layers."""
+    return _map_slots(
+        cfg, lambda h, p, v: h.scatter(cfg, p, v, bt, pos), pages, views)
 
 
-def write_prefill(pages, caches, bt_row: jax.Array):
+def write_prefill(cfg: ModelConfig, pages, caches, bt_row: jax.Array,
+                  slot: jax.Array):
     """Scatter a freshly prefilled (batch=1, capacity=bucket) cache pytree
-    into the pool.  ``bt_row``: (bucket/block_size,) block ids — entries
-    past the request's real block count point at the trash page."""
-    grouped = jax.vmap(
-        lambda p, c: _write_prefill_leaf(p, c, bt_row), in_axes=(0, 0))
-    return {
-        "groups": jax.tree_util.tree_map(
-            grouped, pages["groups"], caches["groups"]),
-        "remainder": jax.tree_util.tree_map(
-            lambda p, c: _write_prefill_leaf(p, c, bt_row),
-            pages["remainder"], caches["remainder"]),
-    }
+    into the pool.  ``bt_row``: block ids sized ``max(bucket /
+    block_size, ring_blocks)`` — entries past the request's real block
+    count point at the trash page.  ``slot``: the request's decode slot
+    (receives the Mamba state rows)."""
+    return _map_slots(
+        cfg, lambda h, p, c: h.write_prefill(cfg, p, c, bt_row, slot),
+        pages, caches)
 
 
 # -------------------------------------------------------------- accounting
 
 def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     """Per-decode-step gathered bytes for the whole stack, full-view vs
-    paged (the tentpole's memory-traffic win, reported by
+    paged, broken down by layer kind (reported by
     ``benchmarks/bench_serving.py``).
 
-    ``full_view_bytes_per_step``: every cache leaf materialized at
-    ``(max_batch, KVH, max_context, ...)`` — the gather/scatter fallback.
-    ``paged_bytes_per_step``: metadata leaves in full (bits/vnorm or page
-    min/max — tens of times smaller than K/V) plus only the backend's
-    ``selected_rows`` K/V rows; equals the full-view cost for backends
-    that are not paged-capable.  With the fused paged kernel
-    (``cfg.socket.use_paged_kernel``) even those gathers disappear —
-    the kernel consumes the pool + block table in place, so the
-    per-step *materialized* bytes are ≈ 0 (``fused_paged_kernel`` flags
-    the regime; HBM still streams pages, but through VMEM once, with
-    no intermediate buffers written back).
+    ``full_view_bytes_per_step``: every global-attention cache leaf
+    materialized at ``(max_batch, KVH, max_context, ...)`` plus
+    context-length K/V views for the window layers — what a plan-less
+    pager would move.  ``paged_bytes_per_step``: global layers move
+    metadata leaves plus the backend's ``selected_rows`` K/V rows (≈ 0
+    with the fused paged kernel), window layers their *bounded* ring
+    views (``window_bytes_per_step``), Mamba layers ≈ 0
+    (``state_bytes_per_step`` reports the per-slot state size that moves
+    through registers regardless — no gather, no growth with context).
     """
-    backend = bk.get_backend(cfg.attention_backend)
-    spec = backend.cache_spec(cfg)
     sv = cfg.serving
     b, n = sv.max_batch, sv.max_context
     kvh = cfg.num_kv_heads
     cdt = jnp.dtype(cfg.compute_dtype)
+    counts = {"paged": 0, "ring": 0, "state": 0}
+    for spec in cfg.layer_specs:
+        counts[cfg.plan_for(spec).kind] += 1
 
-    def leaf_bytes(s):
-        width = int(np.prod(s.suffix, dtype=np.int64)) if s.suffix else 1
-        return b * kvh * s.rows(n) * width * jnp.dtype(
-            s.leaf_dtype(cdt)).itemsize
+    full = paged = window = 0
+    selected = 0
+    fused = False
+    if counts["paged"]:
+        backend = bk.get_backend(cfg.attention_backend)
+        spec = backend.cache_spec(cfg)
 
-    full = sum(leaf_bytes(s) for s in spec.values())
-    kv_bytes = leaf_bytes(spec["k"]) + leaf_bytes(spec["v"])
-    rows = backend.selected_rows(cfg, n)
-    paged = (full - kv_bytes) + 2 * b * kvh * rows * cfg.head_dim * \
-        cdt.itemsize
-    fused = backend.supports_paged and backend.fused_paged(cfg)
-    if fused:
-        paged = 0
-    layers = sum(1 for s in cfg.layer_specs
-                 if s.kind == "attn" and s.attn_type == "global")
+        def leaf_bytes(s):
+            width = int(np.prod(s.suffix, dtype=np.int64)) if s.suffix \
+                else 1
+            return b * kvh * s.rows(n) * width * jnp.dtype(
+                s.leaf_dtype(cdt)).itemsize
+
+        full_l = sum(leaf_bytes(s) for s in spec.values())
+        kv_bytes = leaf_bytes(spec["k"]) + leaf_bytes(spec["v"])
+        selected = backend.selected_rows(cfg, n)
+        paged_l = (full_l - kv_bytes) + 2 * b * kvh * selected * \
+            cfg.head_dim * cdt.itemsize
+        fused = backend.supports_paged and backend.fused_paged(cfg)
+        if fused:
+            paged_l = 0
+        if not backend.supports_paged:
+            paged_l = full_l
+        full += full_l * counts["paged"]
+        paged += paged_l * counts["paged"]
+    if counts["ring"]:
+        ring_rows = cfg.ring_geometry()[1]
+        ring_l = 2 * b * kvh * ring_rows * cfg.head_dim * cdt.itemsize
+        full_l = 2 * b * kvh * n * cfg.head_dim * cdt.itemsize
+        window = ring_l * counts["ring"]
+        full += full_l * counts["ring"]
+        paged += window
+    state = 0
+    if counts["state"]:
+        di, hd, st = cfg.d_inner, cfg.ssm_head_dim, cfg.ssm_state
+        nh = cfg.ssm_heads
+        conv_dim = di + 2 * st
+        state_l = b * (nh * hd * st * 4 +
+                       (cfg.ssm_conv_width - 1) * conv_dim * cdt.itemsize)
+        state = state_l * counts["state"]
+
     return {
-        "full_view_bytes_per_step": int(full) * layers,
-        "paged_bytes_per_step":
-            int(paged if backend.supports_paged else full) * layers,
-        "selected_rows": int(rows),
+        "full_view_bytes_per_step": int(full),
+        "paged_bytes_per_step": int(paged),
+        "window_bytes_per_step": int(window),
+        "state_bytes_per_step": int(state),
+        "selected_rows": int(selected),
         "fused_paged_kernel": bool(fused),
+        "num_paged_layers": counts["paged"],
+        "num_ring_layers": counts["ring"],
+        "num_state_layers": counts["state"],
     }

@@ -1,0 +1,65 @@
+"""Temperature + nucleus (top-p) sampling for the jitted decode step.
+
+Greedy (``temperature == 0``) stays pure argmax — bit-identical to the
+pre-sampling engine, so static-vs-continuous parity tests and
+replay-exact preemption are unaffected by default.
+
+Sampling threads one PRNG key **per decode slot** (seeded by folding the
+slot index into the engine seed): each step splits the slot's key,
+samples from the temperature-scaled, top-p-truncated distribution, and
+carries the fresh half forward.  Per-slot keys keep a slot's sample
+stream independent of which other slots happen to be live — the ragged
+batch composition does not perturb a request's randomness.
+
+Post-preemption *replay* steps reuse recorded tokens and discard the
+sampled one (see the engine), so resumed requests keep their original
+text; the slot's key stream still advances, which only affects tokens
+that were never sampled before.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["slot_keys", "sample_tokens"]
+
+NEG_INF = -1e30
+
+
+def slot_keys(seed: int, max_batch: int) -> jax.Array:
+    """(max_batch, 2) uint32 — one independent PRNG key per decode slot."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda i: jax.random.fold_in(base, i))(
+        jnp.arange(max_batch))
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, *,
+                  temperature: float, top_p: float,
+                  vocab_size: int):
+    """Sample one token per row.  ``logits`` (B, V); ``keys`` (B, 2).
+
+    Returns ``(tokens (B,) int32, new_keys (B, 2))``.  Rows beyond
+    ``vocab_size`` (the padded vocab tail) are masked out so sampling can
+    never emit an invalid id.  ``top_p`` keeps the smallest prefix of the
+    sorted distribution whose mass reaches ``top_p`` (the top token is
+    always kept; exact ties at the cutoff logit are all kept).
+    """
+    assert temperature > 0.0, "temperature 0 is greedy — use argmax"
+    logits = logits.astype(jnp.float32)
+    v = logits.shape[-1]
+    if vocab_size < v:
+        pad = jnp.arange(v) >= vocab_size
+        logits = jnp.where(pad[None], NEG_INF, logits)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_l = jnp.flip(jnp.sort(logits, axis=-1), axis=-1)
+        probs = jax.nn.softmax(sorted_l, axis=-1)
+        csum = jnp.cumsum(probs, axis=-1)
+        keep = (csum - probs) < top_p          # mass strictly before token
+        cutoff = jnp.min(jnp.where(keep, sorted_l, jnp.inf), axis=-1,
+                         keepdims=True)
+        logits = jnp.where(logits >= cutoff, logits, NEG_INF)
+    split = jax.vmap(jax.random.split)(keys)   # (B, 2, 2)
+    tok = jax.vmap(jax.random.categorical)(split[:, 1], logits)
+    return tok.astype(jnp.int32), split[:, 0]

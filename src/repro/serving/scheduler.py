@@ -8,12 +8,16 @@ Lifecycle::
 
 Admission is by free-block accounting: a waiting request is admitted only
 when a decode slot is free and the pool can cover its prompt blocks plus
-one block of decode headroom.  On pool exhaustion mid-decode the scheduler
-preempts the least-recently-used running request (recompute-style: its
-blocks are freed and it re-enters the waiting queue keeping its generated
-tokens; on re-admission the original prompt is re-prefilled and recorded
-tokens replay through the decode path — resume is token-exact, see
-:attr:`Request.prefill_tokens`).
+one block of decode headroom.  Block demand follows the per-layer cache
+plan (see :meth:`Scheduler._blocks_for`): linear with context when any
+global-attention layer pages, capped at the circular window page list
+for sliding-window-only models, zero for SSM-only models.  On pool
+exhaustion mid-decode the scheduler preempts the least-recently-used
+running request (recompute-style: its blocks are freed and it re-enters
+the waiting queue keeping its generated tokens; on re-admission the
+original prompt is re-prefilled — rebuilding paged KV, window rings and
+SSM state bit-exactly — and recorded tokens replay through the decode
+path — resume is token-exact, see :attr:`Request.prefill_tokens`).
 """
 
 from __future__ import annotations
@@ -95,14 +99,26 @@ class Request:
 
 
 class Scheduler:
-    """Slot + block bookkeeping for the continuous-batching engine."""
+    """Slot + block bookkeeping for the continuous-batching engine.
+
+    ``has_paged_layers`` / ``ring_blocks`` carry the host half of the
+    per-layer cache plan (``cfg.cache_plan()``): with any global-attention
+    layer, block demand grows linearly with context (every block id is
+    live in that layer's pages); with only sliding-window layers it is
+    capped at ``ring_blocks`` (the circular page list recycles the ids in
+    place); SSM-only models hold zero blocks and are admitted on free
+    decode slots alone.
+    """
 
     def __init__(self, pool: BlockPool, *, max_batch: int,
-                 max_blocks_per_seq: int, block_size: int):
+                 max_blocks_per_seq: int, block_size: int,
+                 has_paged_layers: bool = True, ring_blocks: int = 0):
         self.pool = pool
         self.max_batch = max_batch
         self.max_blocks_per_seq = max_blocks_per_seq
         self.block_size = block_size
+        self.has_paged_layers = has_paged_layers
+        self.ring_blocks = ring_blocks
         self.waiting: List[Request] = []       # FCFS by (arrival, rid)
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(max_batch - 1, -1, -1))
@@ -127,7 +143,14 @@ class Scheduler:
         self.waiting.sort(key=lambda r: (r.arrival, r.rid))
 
     def _blocks_for(self, tokens: int) -> int:
-        return -(-tokens // self.block_size)
+        """Blocks a request holding ``tokens`` cache tokens occupies,
+        under the per-kind accounting (see class docstring)."""
+        full = -(-tokens // self.block_size)
+        if self.has_paged_layers:
+            return full
+        if self.ring_blocks:
+            return min(full, self.ring_blocks)
+        return 0
 
     # ---------------------------------------------------------- admission
     def try_admit(self, now: float) -> Optional[Request]:
@@ -167,15 +190,17 @@ class Scheduler:
     # ----------------------------------------------------------- stepping
     def ensure_decode_blocks(self) -> List[Request]:
         """Grow each running request's block table to cover writing index
-        ``pos``; preempt LRU victims on exhaustion.  Returns the requests
-        runnable this step (sorted by slot)."""
+        ``pos`` (capped by the per-kind accounting: sliding-window-only
+        demand stops at ``ring_blocks``, SSM-only at zero); preempt LRU
+        victims on exhaustion.  Returns the requests runnable this step
+        (sorted by slot)."""
         self._clock += 1
         for slot in sorted(self.running):
             req = self.running.get(slot)
             if req is None:
                 continue
             req.last_used = self._clock
-            while len(req.blocks) < req.pos // self.block_size + 1:
+            while len(req.blocks) < self._blocks_for(req.pos + 1):
                 got = self.pool.alloc(1)
                 if got is not None:
                     req.blocks.extend(got)

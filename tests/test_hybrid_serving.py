@@ -1,0 +1,373 @@
+"""Per-layer heterogeneous cache plans on the continuous engine:
+gemma3-pattern (5:1 local:global), jamba-pattern (attn:mamba hybrid) and
+pure-SSM models must serve with exact token parity vs the static path,
+bounded sliding-window block demand, token-exact preemption resume of
+SSM state, and pool contents that are a pure function of the live
+requests (scrub-on-reuse)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import LayerSpec
+from repro.serving import FINISHED, Request
+
+
+def _gemma3_like(backend="socket"):
+    """gemma3 smoke pattern (5 local + 1 global, local remainder), one
+    group to keep the CPU parity runs fast."""
+    return get_config("gemma3-27b").smoke().replace(
+        num_groups=1, attention_backend=backend)
+
+
+def _jamba_like(backend="socket"):
+    """jamba smoke pattern (1 attn : 7 mamba, MoE every other layer),
+    dropless MoE so static-vs-continuous comparisons are exact (token
+    dropping depends on batch composition)."""
+    cfg = get_config("jamba-v0.1-52b").smoke().replace(
+        num_groups=1, attention_backend=backend)
+    return cfg.replace(capacity_factor=float(cfg.num_experts))
+
+
+def _local_only():
+    """Sliding-window-only stack: block demand must be ring-bounded."""
+    local = LayerSpec(kind="attn", attn_type="local", mlp="dense")
+    return get_config("gemma3-27b").smoke().replace(
+        pattern=(local, local), num_groups=1, remainder=())
+
+
+def _run_engine(cfg, prompts, steps, rng_seed=0, engine=None, **kw):
+    from repro.serving.engine import ContinuousBatchingEngine
+    if engine is None:
+        engine = ContinuousBatchingEngine(
+            cfg, rng=jax.random.PRNGKey(rng_seed), **kw)
+    reqs = [Request(prompt=list(p), max_new_tokens=steps, arrival=0.0)
+            for p in prompts]
+    metrics = engine.run(reqs, realtime=False)
+    return engine, reqs, metrics
+
+
+# ------------------------------------------------------ cache-plan shapes
+
+
+def test_cache_plan_derivation():
+    cfg = _gemma3_like()
+    kinds = [p.kind for p in cfg.cache_plan()]
+    assert kinds == ["ring"] * 5 + ["paged"] + ["ring"]
+    rb, rows = cfg.ring_geometry()
+    bs = cfg.serving.block_size
+    assert rb <= -(-cfg.sliding_window // bs) + 1   # the acceptance bound
+    assert rows == rb * bs and rows >= min(
+        cfg.sliding_window, cfg.serving.max_context)
+
+    jam = _jamba_like()
+    kinds = [p.kind for p in jam.cache_plan()]
+    assert kinds.count("paged") == 1 and kinds.count("state") == 7
+
+    assert all(p.kind == "state" and p.ring_blocks == 0
+               for p in get_config("mamba2-780m").smoke().cache_plan())
+
+
+def test_layer_cache_spec_resolution():
+    from repro.models import backends as bk
+
+    cfg = _gemma3_like()
+    spec_g = bk.layer_cache_spec(cfg, cfg.pattern[5])
+    assert spec_g.kind == "paged" and {"k", "v", "bits", "vnorm"} <= set(
+        spec_g.leaves)
+    spec_l = bk.layer_cache_spec(cfg, cfg.pattern[0])
+    assert spec_l.kind == "ring" and set(spec_l.leaves) == {"k", "v"}
+    assert spec_l.ring_blocks == cfg.ring_geometry()[0]
+    spec_s = bk.layer_cache_spec(_jamba_like(), _jamba_like().pattern[0])
+    assert spec_s.kind == "state" and spec_s.leaves == {}
+
+
+def test_pool_layout_per_kind():
+    """Pool leaves follow the plan: ring layers get full block_size pages
+    (no window truncation), mamba layers one row per decode slot."""
+    from repro.serving import paged
+
+    cfg = _jamba_like()
+    sv = cfg.serving
+    pages = paged.init_paged_caches(cfg, sv)
+    g = pages["groups"]
+    # pattern slot 4 is the attention layer; others are mamba
+    assert g["slot_4"]["k"].shape[1:] == (
+        sv.num_blocks, cfg.num_kv_heads, sv.block_size, cfg.head_dim)
+    assert g["slot_0"]["ssm"].shape[1] == sv.max_batch
+    assert g["slot_0"]["conv"].shape[1] == sv.max_batch
+
+    cfg_g = _gemma3_like()
+    pages = paged.init_paged_caches(cfg_g, cfg_g.serving)
+    # local layers' pages are block_size rows even though window > bs
+    assert pages["groups"]["slot_0"]["k"].shape[3] == cfg_g.serving.block_size
+    assert set(pages["groups"]["slot_0"]) == {"k", "v"}
+
+
+# ------------------------------------------------------------ token parity
+
+
+@pytest.mark.parametrize("make_cfg,backend", [
+    (_gemma3_like, "socket"), (_gemma3_like, "dense"),
+    (_jamba_like, "socket"), (_jamba_like, "dense"),
+])
+def test_hybrid_continuous_matches_static(make_cfg, backend):
+    """Mixed prompt lengths through the heterogeneous paged engine must
+    reproduce each request served alone by the static engine
+    token-for-token — paged-native (socket) and gather/scatter fallback
+    (dense) paths both."""
+    from repro.launch.serve import run_serve
+
+    cfg = make_cfg(backend)
+    steps = 6
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=p) for p in (8, 24)]
+
+    refs = []
+    for pr in prompts:
+        toks, _, _ = run_serve(cfg, 1, len(pr), steps - 1, seed=0,
+                               prompt=pr[None])
+        refs.append(np.asarray(toks)[0].tolist())
+
+    _, reqs, _ = _run_engine(cfg, prompts, steps)
+    for r, ref in zip(reqs, refs):
+        assert r.state == FINISHED
+        assert r.generated == ref, (r.generated, ref)
+
+
+def test_mamba_only_continuous_matches_static_with_zero_blocks():
+    """Pure-SSM serving: exact parity AND zero pool blocks ever
+    consumed (admission is slot-gated only)."""
+    from repro.launch.serve import run_serve
+
+    cfg = get_config("mamba2-780m").smoke()
+    steps = 6
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab_size, size=p) for p in (8, 24)]
+    refs = []
+    for pr in prompts:
+        toks, _, _ = run_serve(cfg, 1, len(pr), steps - 1, seed=0,
+                               prompt=pr[None])
+        refs.append(np.asarray(toks)[0].tolist())
+    engine, reqs, _ = _run_engine(cfg, prompts, steps)
+    for r, ref in zip(reqs, refs):
+        assert r.generated == ref, (r.generated, ref)
+        assert r.blocks == []
+    assert engine.pool.num_used == 0
+    assert engine.pool.num_free == cfg.serving.num_blocks - 1
+
+
+# ------------------------------------------------- bounded window demand
+
+
+def test_window_layers_never_exceed_ring_block_bound():
+    """A sliding-window-only model generating far past its window must
+    finish from a pool sized at the ring bound — per-slot demand never
+    exceeds ceil(window/block_size)+1 blocks (zero preemptions proves
+    no slot ever asked for more)."""
+    cfg = _local_only()
+    rb, _ = cfg.ring_geometry()
+    bs = cfg.serving.block_size
+    assert rb <= -(-cfg.sliding_window // bs) + 1
+    # 2 slots, pool of exactly 2*rb usable blocks; context grows to
+    # 8 + 40 = 48 tokens = 6 linear blocks/request (12 > pool) — only
+    # ring-bounded accounting can serve this without preemption.
+    cfg = cfg.replace(serving=cfg.serving.replace(
+        num_blocks=2 * rb + 1, max_batch=2, max_blocks_per_seq=8))
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=8) for _ in range(2)]
+    engine, reqs, metrics = _run_engine(cfg, prompts, steps=40)
+    assert metrics.preemptions == 0
+    for r in reqs:
+        assert r.state == FINISHED and len(r.generated) == 40
+    assert engine.pool.num_used == 0
+
+
+def test_ring_parity_across_window_wrap():
+    """Local-only static-vs-continuous parity with generation wrapping
+    the ring several times (ring recycling must shadow exactly the
+    static ring buffer)."""
+    from repro.launch.serve import run_serve
+
+    cfg = _local_only()
+    steps = 40                                 # wraps the 32-token window
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab_size, size=8)
+    toks, _, _ = run_serve(cfg, 1, 8, steps - 1, seed=0,
+                           prompt=prompt[None])
+    ref = np.asarray(toks)[0].tolist()
+    _, reqs, _ = _run_engine(cfg, [prompt], steps)
+    assert reqs[0].generated == ref
+
+
+# -------------------------------------------------- preemption + scrubbing
+
+
+def test_mamba_preemption_resume_is_token_exact():
+    """Pool pressure on a jamba-like hybrid forces recompute-preemption;
+    resume must reproduce the SSM state bit-exactly (re-prefill of the
+    original prompt + decode replay), giving the same tokens as an
+    unpressured pool."""
+    cfg = _jamba_like()
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=16).tolist()
+               for _ in range(2)]
+
+    def serve(num_blocks):
+        eng, reqs, metrics = _run_engine(
+            cfg.replace(serving=cfg.serving.replace(
+                num_blocks=num_blocks, max_batch=2)),
+            prompts, steps=24)
+        return reqs, metrics
+
+    pressured, m = serve(num_blocks=9)
+    calm, mc = serve(num_blocks=48)
+    assert m.preemptions > 0 and mc.preemptions == 0
+    for p, c in zip(pressured, calm):
+        assert len(p.generated) == 24
+        assert p.generated == c.generated
+
+
+@pytest.mark.parametrize("make_cfg", [_gemma3_like, _jamba_like])
+def test_pool_history_independence(make_cfg):
+    """Scrub-on-reuse: outputs must not depend on what previous owners
+    left in recycled pool blocks or slot state.  (a) poison every
+    ring/state leaf with large finite garbage before serving; (b) serve a
+    second batch on a warm engine whose freed blocks get recycled
+    (LIFO) — both must match a fresh zero-pool engine bit-for-bit."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = make_cfg()
+    rng = np.random.default_rng(6)
+    prompts_a = [rng.integers(0, cfg.vocab_size, size=12) for _ in range(2)]
+    prompts_b = [rng.integers(0, cfg.vocab_size, size=20) for _ in range(2)]
+
+    def fresh(prompts):
+        _, reqs, _ = _run_engine(cfg, prompts, steps=5)
+        return [r.generated for r in reqs]
+
+    want_a, want_b = fresh(prompts_a), fresh(prompts_b)
+
+    # (a) poisoned pool: ring + state leaves filled with garbage
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    from repro.models import backends as bk
+
+    def poison(tree, specs):
+        for i, spec in enumerate(specs):
+            if bk.layer_cache_handler(cfg, spec).kind == "paged":
+                continue
+            tree[f"slot_{i}"] = {
+                name: jnp.full_like(leaf, 1e4)
+                for name, leaf in tree[f"slot_{i}"].items()}
+    poison(eng.pages["groups"], cfg.pattern)
+    poison(eng.pages["remainder"], cfg.remainder)
+    _, reqs, _ = _run_engine(cfg, prompts_a, steps=5, engine=eng)
+    assert [r.generated for r in reqs] == want_a
+
+    # (b) warm engine: batch B reuses blocks/slots freed by batch A
+    eng2, _, _ = _run_engine(cfg, prompts_a, steps=5)
+    assert eng2.pool.num_used == 0
+    _, reqs_b, _ = _run_engine(cfg, prompts_b, steps=5, engine=eng2)
+    assert [r.generated for r in reqs_b] == want_b
+
+
+# -------------------------------------------------------- gather hygiene
+
+
+def test_hybrid_paged_engine_gather_trace_is_bounded():
+    """Under a hybrid config the paged engine must still never
+    materialize full K/V views: global layers read only metadata leaves
+    plus O(top_k) rows, ring layers only their window-bounded ring view,
+    state layers nothing at all."""
+    from repro.core import socket as sk
+    from repro.models import backends as bk
+
+    cfg = _gemma3_like("socket")
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, size=12) for _ in range(2)]
+    bk.gather_trace_reset()
+    _run_engine(cfg, prompts, steps=4)
+    trace = bk.gather_trace()
+    assert trace, "paged path not exercised"
+    full_leaves = {name for kind, name, _ in trace if kind == "leaf"}
+    assert full_leaves <= {"bits", "vnorm"}, full_leaves
+    kq = sk.topk_budget(bk.socket_config_of(cfg), cfg.serving.max_context)
+    ring_rows = cfg.ring_geometry()[1]
+    saw_ring = False
+    for kind, name, shape in trace:
+        if kind == "rows":
+            assert name in ("k", "v") and shape[-2] == kq, (name, shape)
+        elif kind == "ring":
+            saw_ring = True
+            assert name in ("k", "v") and shape[2] == ring_rows, (
+                name, shape)
+    assert saw_ring, "ring layers never decoded through the ring view"
+
+
+def test_hybrid_footprint_accounting():
+    """gather_footprint: window layers report bounded bytes (independent
+    of max_context), mamba layers ~0 gathered."""
+    from repro.serving.paged import gather_footprint
+
+    cfg = _gemma3_like("socket")
+    fp = gather_footprint(cfg)
+    assert fp["num_ring_layers"] == 6 and fp["num_paged_layers"] == 1
+    rb, rows = cfg.ring_geometry()
+    sv = cfg.serving
+    per_layer = fp["window_bytes_per_step"] // fp["num_ring_layers"]
+    itemsize = jnp.dtype(cfg.compute_dtype).itemsize
+    assert per_layer == 2 * sv.max_batch * cfg.num_kv_heads * rows * \
+        cfg.head_dim * itemsize
+    assert fp["window_bytes_per_step"] < fp["full_view_bytes_per_step"]
+    assert fp["paged_bytes_per_step"] > 0
+
+    jam = gather_footprint(_jamba_like("socket"))
+    assert jam["num_state_layers"] == 7
+    assert jam["state_bytes_per_step"] > 0       # informational, O(1)
+
+    mam = gather_footprint(get_config("mamba2-780m").smoke())
+    assert mam["paged_bytes_per_step"] == 0      # nothing gathered at all
+    assert mam["full_view_bytes_per_step"] == 0
+    assert mam["num_state_layers"] > 0
+
+
+def test_bucket_padding_excluded_from_mamba_state():
+    """mamba_train(last_index=...) must return the state at last_index:
+    bit-for-bit independent of the padding *content* (pad rows are exact
+    identity steps — the recompute-resume guarantee), and equal to the
+    unpadded run up to chunking-order float reassociation."""
+    from repro.models import mamba as mb
+    from repro.models import param as pm
+
+    cfg = get_config("mamba2-780m").smoke()
+    rng = jax.random.PRNGKey(0)
+    params = pm.unbox(mb.init_mamba(cfg, rng))
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, 24, cfg.d_model))
+    li = jnp.asarray([9, 17], jnp.int32)
+    _, padded = mb.mamba_train(cfg, params, x, return_state=True,
+                               last_index=li)
+
+    # scribble over every position past last_index: state must not move
+    mask = jnp.arange(24)[None, :, None] <= li[:, None, None]
+    x_garbled = jnp.where(mask, x, 1e3 * jax.random.normal(
+        jax.random.fold_in(rng, 2), x.shape))
+    _, garbled = mb.mamba_train(cfg, params, x_garbled, return_state=True,
+                                last_index=li)
+    np.testing.assert_array_equal(np.asarray(padded["ssm"]),
+                                  np.asarray(garbled["ssm"]))
+    np.testing.assert_array_equal(np.asarray(padded["conv"]),
+                                  np.asarray(garbled["conv"]))
+
+    # and it is the state at last_index (unpadded reference)
+    for b, n in enumerate([10, 18]):
+        _, exact = mb.mamba_train(cfg, params, x[b:b + 1, :n],
+                                  return_state=True)
+        np.testing.assert_allclose(np.asarray(padded["ssm"][b]),
+                                   np.asarray(exact["ssm"][0]), atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(padded["conv"][b]).astype(np.float32),
+            np.asarray(exact["conv"][0]).astype(np.float32), atol=1e-5)
