@@ -19,6 +19,14 @@ heterogeneous per-layer cache-plan configs — 5:1 local:global and
 attn:mamba — where window layers report *bounded* gathered bytes
 (``window_kb_per_step``) and mamba layers ~0.
 
+Head-of-line rows (``serve_longprompt_chunked`` /
+``serve_longprompt_unchunked``) replay the same workload — one
+max-length prompt arriving while short requests decode — through the
+chunked token-budget mixed step and the legacy whole-prompt prefill;
+``stall_ms_max`` (longest gap between consecutive tokens of any one
+request) is the head-of-line-blocking number chunked prefill exists to
+bound, ``iter_ms_p99`` the per-iteration tail.
+
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke [--json F]
 """
 
@@ -56,6 +64,22 @@ def _footprint_metrics(cfg):
     }
 
 
+def _serve_row(m, num_requests, cfg):
+    return {
+        "tput_tok_s": float(m.throughput_tok_s),
+        "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
+        "tok_ms_p50": float(m.token_latency_s_p50 * 1e3),
+        "tok_ms_p99": float(m.token_latency_s_p99 * 1e3),
+        "stall_ms_max": float(m.intertoken_stall_s_max * 1e3),
+        "iter_ms_p99": float(m.decode_iter_s_p99 * 1e3),
+        "preemptions": m.preemptions,
+        "decode_iters": m.decode_iters,
+        "prefill_chunks": m.prefill_chunks,
+        "requests": num_requests,
+        **_footprint_metrics(cfg),
+    }
+
+
 def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         backends=("socket", "socket_fused", "dense"),
         hybrids=tuple(HYBRID_ARCHS)):
@@ -64,13 +88,14 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
     Defaults are the --smoke operating point: tiny model, 8 requests,
     finishes in well under a minute on one CPU core.
     """
-    from repro.launch.serve import run_continuous, run_serve
+    from repro.launch.serve import run_continuous, run_serve, \
+        serving_ceiling
 
     rows = []
     for backend in backends:
         cfg = _cfg_for(backend, smoke)
         sv = cfg.serving
-        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        ceiling = serving_ceiling(cfg)
         top = ceiling - max_new
         if top < 1:
             raise ValueError(
@@ -89,16 +114,8 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         # materializing full contiguous cache views vs what the paged
         # backend actually gathers (metadata + top-k K/V rows; ~0 when
         # the fused paged kernel consumes the pool in place)
-        rows.append((f"serve_continuous_{backend}", {
-            "tput_tok_s": float(m.throughput_tok_s),
-            "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
-            "tok_ms_p50": float(m.token_latency_s_p50 * 1e3),
-            "tok_ms_p99": float(m.token_latency_s_p99 * 1e3),
-            "preemptions": m.preemptions,
-            "decode_iters": m.decode_iters,
-            "requests": num_requests,
-            **_footprint_metrics(cfg),
-        }))
+        rows.append((f"serve_continuous_{backend}",
+                     _serve_row(m, num_requests, cfg)))
 
         # static lockstep baseline: same #sequences at the mean length
         # (the fused kernel only exists on the paged path — its static
@@ -124,8 +141,7 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
     # socket-paged); fewer requests — they are deeper stacks.
     for name in hybrids:
         cfg = _cfg_for("socket", smoke, arch=HYBRID_ARCHS[name])
-        sv = cfg.serving
-        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        ceiling = serving_ceiling(cfg)
         top = ceiling - max_new
         if top < 1:
             raise ValueError(
@@ -137,16 +153,31 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
                                  max_new_tokens=max_new, seed=0,
                                  warmup=True)
         assert all(r.state == "finished" for r in reqs)
-        rows.append((f"serve_continuous_{name}", {
-            "tput_tok_s": float(m.throughput_tok_s),
-            "ttft_ms_mean": float(m.ttft_s_mean * 1e3),
-            "tok_ms_p50": float(m.token_latency_s_p50 * 1e3),
-            "tok_ms_p99": float(m.token_latency_s_p99 * 1e3),
-            "preemptions": m.preemptions,
-            "decode_iters": m.decode_iters,
-            "requests": n,
-            **_footprint_metrics(cfg),
-        }))
+        rows.append((f"serve_continuous_{name}", _serve_row(m, n, cfg)))
+
+    # head-of-line rate sweep: one maximal prompt lands while short
+    # requests stream tokens; the legacy engine stalls every decode for
+    # the whole prompt's prefill, the mixed step for one chunk.  Same
+    # workload both rows (the long prompt is capped at the legacy
+    # bucket ceiling so the unchunked engine can serve it at all —
+    # beyond-bucket prompts are chunked-only, pinned in tests).
+    base = _cfg_for("socket", smoke)
+    legacy_ceiling = min(max(base.serving.prefill_buckets),
+                         base.serving.max_context)
+    long_len = legacy_ceiling - max_new
+    lens = [8, long_len, 8, 8, 8, 8]
+    arrivals = [0.0, 0.02, 0.04, 0.06, 0.08, 0.10]
+    for tag, chunk in (("chunked", base.serving.prefill_chunk or
+                        base.serving.block_size * 2),
+                       ("unchunked", 0)):
+        cfg = base.replace(serving=base.serving.replace(
+            prefill_chunk=chunk))
+        reqs, m = run_continuous(cfg, len(lens), rate_rps=50.0,
+                                 prompt_lens=lens, max_new_tokens=max_new,
+                                 seed=0, warmup=True, arrivals=arrivals)
+        assert all(r.state == "finished" for r in reqs)
+        rows.append((f"serve_longprompt_{tag}",
+                     _serve_row(m, len(lens), cfg)))
     return rows
 
 

@@ -109,9 +109,18 @@ class ServingSettings:
     layers; block 0 is reserved as the trash page that masked slots and
     padded block-table entries write into.  ``max_blocks_per_seq *
     block_size`` is the per-request context ceiling and the static length
-    of the gathered ragged-decode view.  ``prefill_buckets`` are the
-    static prompt paddings (each must be a multiple of ``block_size``) —
-    one prefill compile per bucket.
+    of the gathered ragged-decode view.
+
+    ``prefill_chunk > 0`` (the default) selects the **token-budget mixed
+    step**: each engine iteration runs at most one prefill chunk of this
+    many tokens alongside the full ragged decode batch in ONE jitted
+    call, so a long prompt stalls in-flight decodes by at most one chunk
+    and prompts are bounded only by ``max_context`` (two compiles total:
+    mixed + decode-only).  ``prefill_chunk = 0`` keeps the legacy
+    alternating whole-prompt phases, where ``prefill_buckets`` are the
+    static prompt paddings (each a multiple of ``block_size``, one
+    prefill compile per bucket) and prompts beyond the largest bucket
+    are rejected.
     """
 
     block_size: int = 16
@@ -120,6 +129,7 @@ class ServingSettings:
     max_blocks_per_seq: int = 64
     prefill_buckets: Tuple[int, ...] = (128, 256, 512, 1024)
     max_prefill_per_iter: int = 1
+    prefill_chunk: int = 256
 
     def validate(self) -> None:
         assert self.num_blocks > 1, "need at least one non-trash block"
@@ -127,11 +137,20 @@ class ServingSettings:
             assert b % self.block_size == 0, (
                 f"prefill bucket {b} not a multiple of block_size "
                 f"{self.block_size}")
-        assert max(self.prefill_buckets) >= self.max_context, (
-            f"largest prefill bucket {max(self.prefill_buckets)} < "
-            f"max_context {self.max_context}: an admissible request "
-            "(prompt+generated after preemption) could fail prefill "
-            "bucketing mid-run")
+        assert self.prefill_chunk >= 0, (
+            f"prefill_chunk must be >= 0, got {self.prefill_chunk}")
+        if self.prefill_chunk:
+            assert self.prefill_chunk % self.block_size == 0, (
+                f"prefill_chunk {self.prefill_chunk} not a multiple of "
+                f"block_size {self.block_size} (chunks write whole pages)")
+        else:
+            # legacy whole-prompt bucketing: every admissible request
+            # (prompt+generated after preemption) must fit some bucket
+            assert max(self.prefill_buckets) >= self.max_context, (
+                f"largest prefill bucket {max(self.prefill_buckets)} < "
+                f"max_context {self.max_context}: an admissible request "
+                "(prompt+generated after preemption) could fail prefill "
+                "bucketing mid-run")
 
     @property
     def max_context(self) -> int:
@@ -331,5 +350,9 @@ class ModelConfig:
             quest=dataclasses.replace(self.quest, page_size=8),
             serving=dataclasses.replace(
                 self.serving, block_size=8, num_blocks=48, max_batch=4,
-                max_blocks_per_seq=8, prefill_buckets=(24, 32, 48, 64)),
+                max_blocks_per_seq=8, prefill_buckets=(24, 32, 48, 64),
+                # prefill_chunk == smoke ssm_chunk: chunk boundaries land
+                # on the SSD grid, so chunked prefill carries Mamba state
+                # across chunks bit-exactly vs the whole-bucket path
+                prefill_chunk=16),
         )

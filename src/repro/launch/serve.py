@@ -116,26 +116,51 @@ def make_poisson_requests(cfg, num_requests: int, rate_rps: float,
     return reqs
 
 
+def serving_ceiling(cfg) -> int:
+    """Largest servable prompt+generated context: the block table alone
+    under chunked prefill, additionally the largest prefill bucket in
+    legacy whole-prompt mode."""
+    sv = cfg.serving
+    if sv.prefill_chunk:
+        return sv.max_context
+    return min(max(sv.prefill_buckets), sv.max_context)
+
+
 def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
                    max_new_tokens: int, seed: int = 0, realtime=True,
                    warmup=False, temperature: float = 0.0,
-                   top_p: float = 1.0):
+                   top_p: float = 1.0, arrivals=None):
     """Continuous-batching serve; returns (requests, ServeMetrics).
 
-    ``warmup=True`` pre-compiles the decode step and every prefill bucket
-    so the reported TTFT/latency reflect steady-state serving, not jit.
-    ``temperature > 0`` samples inside the jitted decode step
-    (temperature + nucleus top-p, per-slot seeded PRNG); the default is
-    greedy, bit-exact vs the static engine.
+    ``warmup=True`` pre-compiles the shapes this workload needs (chunked
+    mode: the mixed + decode steps; legacy: only the buckets the prompts
+    hit) so the reported TTFT/latency reflect steady-state serving, not
+    jit.  ``temperature > 0`` samples inside the jitted decode step
+    (temperature + nucleus top-p, per-request seeded PRNG); the default
+    is greedy, bit-exact vs the static engine.  ``arrivals``: optional
+    explicit per-request arrival times overriding the Poisson draw
+    (cycled over ``prompt_lens`` in order).
     """
     from repro.serving.engine import ContinuousBatchingEngine
     engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed),
                                       temperature=temperature, top_p=top_p,
                                       sample_seed=seed)
+    if arrivals is None:
+        reqs = make_poisson_requests(cfg, num_requests, rate_rps,
+                                     prompt_lens, max_new_tokens, seed=seed)
+    else:
+        from repro.serving import Request
+        assert len(arrivals) == num_requests, (
+            f"arrivals ({len(arrivals)}) must match num_requests "
+            f"({num_requests})")
+        rng = np.random.default_rng(seed)
+        reqs = [Request(prompt=rng.integers(
+                    0, cfg.vocab_size,
+                    size=prompt_lens[i % len(prompt_lens)]).tolist(),
+                        max_new_tokens=max_new_tokens, arrival=t)
+                for i, t in enumerate(arrivals)]
     if warmup:
-        engine.warmup()
-    reqs = make_poisson_requests(cfg, num_requests, rate_rps, prompt_lens,
-                                 max_new_tokens, seed=seed)
+        engine.warmup(reqs)
     metrics = engine.run(reqs, realtime=realtime)
     return reqs, metrics
 
@@ -164,6 +189,11 @@ def main():
                     help="sampling temperature; 0 = greedy (default)")
     ap.add_argument("--top-p", type=float, default=1.0,
                     help="nucleus sampling mass (with --temperature > 0)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill token budget per engine "
+                         "iteration (continuous engine; 0 = legacy "
+                         "whole-prompt bucketed prefill; default: the "
+                         "config's serving.prefill_chunk)")
     args = ap.parse_args()
 
     if args.backend == "socket_fused" and args.engine != "continuous":
@@ -177,18 +207,25 @@ def main():
     if not 0.0 < args.top_p <= 1.0:
         ap.error(f"--top-p must be in (0, 1], got {args.top_p}")
 
+    if args.prefill_chunk is not None and args.engine != "continuous":
+        ap.error("--prefill-chunk requires --engine continuous: chunked "
+                 "prefill is the continuous engine's execution model")
+
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.smoke()
     cfg = apply_backend_arg(cfg, args.backend)
+    if args.prefill_chunk is not None:
+        cfg = cfg.replace(serving=cfg.serving.replace(
+            prefill_chunk=args.prefill_chunk))
 
     if args.engine == "continuous":
         sv = cfg.serving
-        # mixed prompt lengths, bounded so prompt+generated fits a bucket
+        # mixed prompt lengths, bounded so prompt+generated fits the
+        # serving ceiling (block table only when chunked; additionally
+        # the largest prefill bucket in legacy whole-prompt mode)
         max_new = args.max_new_tokens or (8 if args.smoke else 64)
-        # prompt + generated must fit both a prefill bucket and the
-        # per-request block table
-        ceiling = min(max(sv.prefill_buckets), sv.max_context)
+        ceiling = serving_ceiling(cfg)
         top = ceiling - max_new
         if top < 1:
             ap.error(f"--max-new-tokens {max_new} leaves no prompt room "
@@ -203,6 +240,7 @@ def main():
         print(json.dumps({
             "arch": cfg.name, "backend": args.backend,
             "engine": "continuous",
+            "prefill_chunk": sv.prefill_chunk,
             "prompt_lens": lens,
             "max_new_tokens": max_new,
             "temperature": args.temperature,

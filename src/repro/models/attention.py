@@ -4,6 +4,14 @@ Training/prefill: dense causal attention (XLA einsum path — the Pallas
 ``flash_prefill`` kernel is the TPU fast path and is validated against the
 same math in tests).  Local layers apply a sliding-window mask.
 
+Chunked serving prefill (:func:`attention_prefill_chunk`) runs the same
+dense math one ``prefill_chunk`` at a time directly against the engine's
+page pool: the chunk's K/V + backend metadata are committed first, then
+its queries attend causally over the paged logical view (prefix-extension
+attention — the in-chunk causal mask composes with the context earlier
+chunks committed; local layers compose the pre-write ring with in-chunk
+K/V under the window mask).
+
 Decode — the ``DecodeBackend`` / ``KVView`` contract
 ----------------------------------------------------
 
@@ -69,7 +77,8 @@ from repro.models.backends import socket_config_of
 from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, softcap
 
 __all__ = ["init_attention", "attention_train", "attention_prefill",
-           "attention_decode", "init_attention_cache", "socket_config_of"]
+           "attention_prefill_chunk", "attention_decode",
+           "init_attention_cache", "socket_config_of"]
 
 NEG_INF = -1e30
 
@@ -320,6 +329,122 @@ def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
                                  dtype=kc.dtype)
     backend = backends.get_backend(cfg.attention_backend)
     return y, backend.prefill_build(cfg, params, cache, kc, vc)
+
+
+def attention_prefill_chunk(cfg: ModelConfig, params: Dict, x: jax.Array,
+                            positions: jax.Array, attn_type: str,
+                            cache: Dict, bt_row: jax.Array,
+                            history: jax.Array, last_index: jax.Array,
+                            ) -> Tuple[jax.Array, Dict]:
+    """One **prefix-extension** prefill chunk straight against the pool.
+
+    The chunked engine feeds the prompt through the stack
+    ``prefill_chunk`` tokens at a time; this is one attention layer's
+    share of one chunk.  ``x`` is ``(1, C, d)`` (one chunk per engine
+    iteration), ``positions`` the absolute token positions ``history +
+    [0, C)``, ``cache`` this layer's *pool* leaves, ``bt_row`` the
+    request's trash-padded block-id row, ``history`` the number of
+    prompt tokens already committed by earlier chunks (a traced scalar —
+    one compile covers every chunk index), and ``last_index`` the
+    ``(1,)`` last *real* in-chunk index (the final chunk is padded to the
+    static chunk length).
+
+    Global layers write the chunk's K/V + backend metadata into their
+    pages first (reusing the backend's ``prefill_build`` on a chunk-sized
+    mini cache), then attend causally over the paged logical view — the
+    ``si <= ti`` mask composes in-chunk causality with the committed
+    context, which is exactly the prefix-extension contract.  Local
+    layers attend over the pre-write circular ring (history) plus the
+    in-chunk K/V under the sliding-window mask, then write the chunk's
+    real rows into the ring with the usual page-opening scrub; padded
+    rows are routed to the trash page so ring slots only ever hold
+    positions the decode-side ring arithmetic can reconstruct.
+    """
+    b, t, _ = x.shape
+    hd = cfg.head_dim
+    h_eff = params["wq"].shape[1]
+    kv = params["wk"].shape[1]
+    g = h_eff // kv
+    scale = 1.0 / np.sqrt(hd)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    kc = jnp.swapaxes(k, 1, 2)                       # (B, KV, C, hd)
+    vc = jnp.swapaxes(v, 1, 2)
+    bs = cfg.serving.block_size
+    cache = dict(cache)
+    qg = q.reshape(b, t, kv, g, hd)
+    li = jnp.asarray(last_index, jnp.int32).reshape(b)
+
+    if attn_type == "local":
+        rb, cap = cfg.ring_geometry()
+        w = cfg.sliding_window
+        # history ring as of position history-1: slot s holds the newest
+        # committed position p ≡ s (mod cap); slots never written (or
+        # fallen out of the window) mask out.  Gathered BEFORE the chunk
+        # writes, so early chunk queries still see positions a later
+        # in-chunk token will recycle.
+        ring_k = backends.gather_block_leaf(cache["k"], bt_row[None, :rb])
+        ring_v = backends.gather_block_leaf(cache["v"], bt_row[None, :rb])
+        sl = jnp.arange(cap, dtype=jnp.int32)
+        lp = jnp.asarray(history, jnp.int32) - 1
+        rp = lp - ((lp - sl) % cap)                          # (cap,)
+        ti = history + jnp.arange(t, dtype=jnp.int32)        # (t,)
+        ring_mask = (rp[None, :] >= 0) & (ti[:, None] - rp[None, :] < w)
+        ij = jnp.arange(t, dtype=jnp.int32)
+        in_mask = (ij[None, :] <= ij[:, None]) & \
+            (ij[:, None] - ij[None, :] < w)
+        k_all = jnp.concatenate([ring_k, kc], axis=2)    # (B,KV,cap+C,hd)
+        v_all = jnp.concatenate([ring_v, vc], axis=2)
+        logits = jnp.einsum("btkgd,bknd->bkgtn", qg.astype(jnp.float32),
+                            k_all.astype(jnp.float32)) * scale
+        logits = softcap(logits, cfg.attn_logit_softcap)
+        mask = jnp.concatenate([ring_mask, in_mask], axis=1)  # (t, cap+C)
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        wts = jax.nn.softmax(logits, axis=-1)
+        ctx = jnp.einsum("bkgtn,bknd->btkgd", wts,
+                         v_all.astype(jnp.float32))
+        ctx = ctx.reshape(b, t, h_eff, hd)
+
+        def body(j, kvp):
+            kp, vp = kvp
+            pos = jnp.full((b,), history + j, jnp.int32)
+            blk = bt_row[(pos // bs) % rb]
+            # padded rows (j > last_index) go to the trash page (block 0)
+            blk = jnp.where(j <= li, blk, jnp.zeros_like(blk))
+            kp = backends.ring_write_page(kp, blk, pos, kc[:, :, j],
+                                          block_size=bs, ring_blocks=rb,
+                                          window=w)
+            vp = backends.ring_write_page(vp, blk, pos, vc[:, :, j],
+                                          block_size=bs, ring_blocks=rb,
+                                          window=w)
+            return kp, vp
+
+        cache["k"], cache["v"] = jax.lax.fori_loop(
+            0, t, body, (cache["k"], cache["v"]))
+    else:
+        backend = backends.get_backend(cfg.attention_backend)
+        # chunk-sized mini cache through the backend's own prefill_build:
+        # K/V plus metadata (SOCKET bits/vnorm, Quest page stats) land in
+        # the chunk's pages block-aligned (C % block_size == 0, and every
+        # leaf granularity divides block_size by construction).
+        mini = backend.init_cache(cfg, b, kv, t,
+                                  jnp.dtype(cfg.compute_dtype))
+        mini = backend.prefill_build(cfg, params, mini, kc, vc)
+        block0 = jnp.asarray(history, jnp.int32) // bs
+        for name in cache:
+            cache[name] = backends.write_chunk_blocks(
+                cache[name], mini[name], bt_row, block0)
+        # prefix-extension attend over the paged logical view: the chunk's
+        # own rows were just committed, so the causal si <= ti mask covers
+        # both the earlier chunks' pages and in-chunk causality; trash
+        # rows sit past every real query's position.
+        k_full = backends.gather_block_leaf(cache["k"], bt_row[None])
+        v_full = backends.gather_block_leaf(cache["v"], bt_row[None])
+        ctx = _attn_chunk(cfg, qg, jnp.swapaxes(k_full, 1, 2),
+                          jnp.swapaxes(v_full, 1, 2), history, "global",
+                          scale, repeat_kv=False)
+        ctx = ctx.reshape(b, t, h_eff, hd)
+
+    return _merge_heads(cfg, params, ctx.astype(x.dtype)), cache
 
 
 # ----------------------------------------------------------------- decode

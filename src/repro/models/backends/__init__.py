@@ -21,7 +21,8 @@ from repro.models.backends.base import (ContiguousView, DecodeBackend,
                                         PagedKVCacheHandler, PagedView,
                                         RingView, gather_block_leaf,
                                         gather_trace, gather_trace_reset,
-                                        kv_leaf_specs, record_fused)
+                                        kv_leaf_specs, record_fused,
+                                        ring_write_page, write_chunk_blocks)
 
 __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "RingView", "LeafSpec", "LayerCacheSpec", "LayerCacheHandler",
@@ -29,7 +30,8 @@ __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "layer_cache_handler", "layer_cache_spec", "kv_leaf_specs",
            "register", "get_backend", "registered_backends",
            "gather_block_leaf", "gather_trace", "gather_trace_reset",
-           "record_fused", "socket_config_of"]
+           "record_fused", "ring_write_page", "write_chunk_blocks",
+           "socket_config_of"]
 
 _REGISTRY: Dict[str, DecodeBackend] = {}
 

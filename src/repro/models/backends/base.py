@@ -44,7 +44,7 @@ __all__ = ["LeafSpec", "LayerCacheSpec", "KVView", "ContiguousView",
            "PagedKVCacheHandler", "kv_leaf_specs", "write_prefill_kv",
            "subset_attention", "gather_trace", "gather_trace_reset",
            "record_fused", "gather_block_leaf", "write_block_prefill",
-           "ring_write_page"]
+           "write_chunk_blocks", "ring_write_page"]
 
 
 def gather_block_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
@@ -496,6 +496,24 @@ def write_block_prefill(pages: jax.Array, leaf: jax.Array,
     blocks = leaf[0].reshape(kvh, nb, rows_pb, *leaf.shape[3:])
     blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, rows_pb, *rest)
     return pages.at[bt_row[:nb]].set(blocks.astype(pages.dtype))
+
+
+def write_chunk_blocks(pages: jax.Array, leaf: jax.Array,
+                       bt_row: jax.Array, block0) -> jax.Array:
+    """Scatter one *prefill chunk's* batch=1 cache leaf ``(1, KVH, rows,
+    *rest)`` into pool pages at block-table offset ``block0`` (a traced
+    scalar — the chunk's first logical block, ``history // block_size``):
+    the chunked analogue of :func:`write_block_prefill`.  ``bt_row`` must
+    be padded so ``block0 + rows / rows_per_block`` never exceeds its
+    static length (entries past the request's allocation are trash)."""
+    kvh, rows = leaf.shape[1], leaf.shape[2]
+    rows_pb = pages.shape[2]
+    nb = rows // rows_pb
+    blocks = leaf[0].reshape(kvh, nb, rows_pb, *leaf.shape[3:])
+    blocks = jnp.moveaxis(blocks, 1, 0)      # (nb, KVH, rows_pb, *rest)
+    ids = jax.lax.dynamic_slice(bt_row, (jnp.asarray(block0, jnp.int32),),
+                                (nb,))
+    return pages.at[ids].set(blocks.astype(pages.dtype))
 
 
 class LayerCacheHandler:

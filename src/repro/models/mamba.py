@@ -69,11 +69,18 @@ def _split_proj(cfg: ModelConfig, proj: jax.Array):
     return z, xc, bmat, cmat, dt
 
 
-def _causal_conv(cfg: ModelConfig, params: Dict, u: jax.Array) -> jax.Array:
-    """Depthwise causal conv1d.  u: (B, S, C)."""
+def _causal_conv(cfg: ModelConfig, params: Dict, u: jax.Array,
+                 conv0=None) -> jax.Array:
+    """Depthwise causal conv1d.  u: (B, S, C).
+
+    ``conv0``: optional ``(B, K-1, C)`` carried tail of the *previous*
+    segment's conv inputs (chunked prefill) — replaces the zero left-pad
+    so a chunk's first outputs see exactly the history a whole-sequence
+    run would."""
     w = params["conv_w"].astype(u.dtype)            # (C, K)
     k = w.shape[1]
-    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    pad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0))) if conv0 is None else \
+        jnp.concatenate([conv0.astype(u.dtype), u], axis=1)
     out = jnp.zeros_like(u)
     for i in range(k):   # K=4: unrolled taps beat conv_general on TPU VPU
         out = out + pad[:, i:i + u.shape[1]] * w[None, None, :, i]
@@ -171,6 +178,14 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
     the chunked SSD uses internally for chunk padding); the conv tail is
     likewise taken ending at ``last_index``.  Outputs at real positions
     are causal and unaffected.
+
+    ``h0`` / ``conv0``: optional carried SSD state ``(B, nh, hd, st)``
+    and conv tail ``(B, conv_width-1, conv_dim)`` from an earlier
+    segment — chunked prefill runs the prompt through this function one
+    chunk at a time, threading both through ``return_state``.  When the
+    segment length is a multiple of ``ssm_chunk`` the chunk boundaries
+    land on the SSD scan grid and the state trajectory is bit-identical
+    to a whole-sequence run.
     """
     b, s, d = x.shape
     di, nh, st, conv_dim = _dims(cfg)
@@ -179,7 +194,7 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
     z, xc, bmat, cmat, dt = _split_proj(cfg, proj)
 
     conv_in = jnp.concatenate([xc, bmat, cmat], axis=-1)  # (B,S,conv_dim)
-    conv_out = _causal_conv(cfg, params, conv_in)
+    conv_out = _causal_conv(cfg, params, conv_in, conv0=conv0)
     xc, bmat, cmat = jnp.split(conv_out, [di, di + N_GROUPS * st], axis=-1)
 
     dt = jax.nn.softplus(dt.astype(jnp.float32) +
@@ -193,6 +208,8 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
     xh = xc.reshape(b, s, nh, cfg.ssm_head_dim).astype(jnp.float32)
     bg = bmat.reshape(b, s, N_GROUPS, st).astype(jnp.float32)
     cg = cmat.reshape(b, s, N_GROUPS, st).astype(jnp.float32)
+    if h0 is not None:
+        h0 = h0.astype(jnp.float32)
     y, h_final = _ssd_chunked(cfg, xh, dt, a_coef, bg, cg, h0)
     y = y + xh * params["D"].astype(jnp.float32)[None, None, :, None]
     y = y.reshape(b, s, di).astype(cdt)
@@ -205,13 +222,21 @@ def mamba_train(cfg: ModelConfig, params: Dict, x: jax.Array,
     out = y @ params["out_proj"].astype(cdt)
     if return_state:
         kw = cfg.ssm_conv_width - 1
+        # conv0 given: the carried tail prefixes conv_in, so a chunk whose
+        # real tokens number fewer than kw reaches back into the previous
+        # chunk's rows instead of zeroing them.
+        ext = conv_in if conv0 is None else jnp.concatenate(
+            [conv0.astype(conv_in.dtype), conv_in], axis=1)
+        off = 0 if conv0 is None else kw
         if last_index is None:
-            conv_tail = conv_in[:, -kw:]
-            if s < kw:
-                conv_tail = jnp.pad(conv_in, ((0, 0), (kw - s, 0), (0, 0)))
+            conv_tail = ext[:, -kw:]
+            if ext.shape[1] < kw:
+                conv_tail = jnp.pad(
+                    ext, ((0, 0), (kw - ext.shape[1], 0), (0, 0)))
         else:
-            idx = li[:, None] - kw + 1 + jnp.arange(kw, dtype=jnp.int32)
-            tail = jnp.take_along_axis(conv_in, jnp.maximum(idx, 0)[..., None],
+            idx = off + li[:, None] - kw + 1 + \
+                jnp.arange(kw, dtype=jnp.int32)
+            tail = jnp.take_along_axis(ext, jnp.maximum(idx, 0)[..., None],
                                        axis=1)
             conv_tail = jnp.where((idx >= 0)[..., None], tail, 0)
         return out.astype(x.dtype), {"ssm": h_final,

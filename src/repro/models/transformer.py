@@ -28,8 +28,8 @@ from repro.models.layers import (apply_mlp, embed_tokens, init_embedding,
                                  init_mlp, init_rmsnorm, lm_head, rmsnorm)
 
 __all__ = ["init_model", "forward_train", "loss_and_metrics", "prefill",
-           "decode_step", "init_decode_caches", "decode_cache_axes",
-           "model_flops_per_token"]
+           "prefill_chunk", "decode_step", "init_decode_caches",
+           "decode_cache_axes", "model_flops_per_token"]
 
 
 # ------------------------------------------------------------------ blocks
@@ -89,6 +89,44 @@ def _block_prefill(cfg: ModelConfig, params: Dict, spec: LayerSpec,
                                  rmsnorm(params["norm_mlp"], x))
         x = x + y
     return lsc(x, "batch", "act_seq", "embed"), cache
+
+
+def _block_prefill_chunk(cfg: ModelConfig, params: Dict, spec: LayerSpec,
+                         x: jax.Array, positions: jax.Array, cache: Dict,
+                         bt_row: jax.Array, slot: jax.Array,
+                         history: jax.Array, last_index: jax.Array):
+    """One block's share of one prefill chunk, writing the pool in place
+    (see :func:`prefill_chunk`)."""
+    h = rmsnorm(params["norm_mix"], x)
+    if spec.kind == "attn":
+        h, cache = attn.attention_prefill_chunk(
+            cfg, params["attn"], h, positions, spec.attn_type, cache,
+            bt_row, history, last_index)
+    else:
+        # Mamba state carries across chunks through the per-slot rows:
+        # read the previous chunk's SSD state + conv tail, run the chunk
+        # (padding past last_index is exact identity steps), write back.
+        # The FIRST chunk starts from zeros — the slot row still holds the
+        # previous occupant's state (nothing scrubs it on free).
+        first = jnp.asarray(history, jnp.int32) == 0
+        h0 = jnp.where(first, 0.0, cache["ssm"][slot][None])
+        conv0 = jnp.where(first, 0.0, cache["conv"][slot][None])
+        h, st = mb.mamba_train(cfg, params["mamba"], h, h0=h0, conv0=conv0,
+                               return_state=True, last_index=last_index)
+        cache = {
+            "ssm": cache["ssm"].at[slot].set(
+                st["ssm"][0].astype(cache["ssm"].dtype)),
+            "conv": cache["conv"].at[slot].set(
+                st["conv"][0].astype(cache["conv"].dtype)),
+        }
+    x = x + h
+    if spec.mlp == "dense":
+        x = x + apply_mlp(cfg, params["mlp"], rmsnorm(params["norm_mlp"], x))
+    elif spec.mlp == "moe":
+        y, _ = moe_mod.apply_moe(cfg, params["moe"],
+                                 rmsnorm(params["norm_mlp"], x))
+        x = x + y
+    return x, cache
 
 
 def _block_decode(cfg: ModelConfig, params: Dict, spec: LayerSpec,
@@ -342,6 +380,57 @@ def prefill(cfg: ModelConfig, params, batch: Dict, capacity: int,
         x = x[:, -1:]
     else:
         x = x[jnp.arange(b), jnp.asarray(last_index, jnp.int32)][:, None]
+    x = rmsnorm(params["final_norm"], x)
+    logits = lm_head(cfg, params["embed"], x)
+    return logits, {"groups": group_caches, "remainder": rem_caches}
+
+
+def prefill_chunk(cfg: ModelConfig, params, caches, tokens: jax.Array,
+                  *, bt_row: jax.Array, slot: jax.Array,
+                  history: jax.Array, last_index: jax.Array):
+    """One prefix-extension prefill chunk for the whole stack, directly
+    against the serving engine's page pool.
+
+    ``tokens``: ``(1, C)`` chunk token ids (the final chunk zero-padded to
+    the static chunk length); ``caches``: the pool pytree (pages written
+    in place, chunk attention reads committed history through the block
+    table); ``bt_row``: ``(max_blocks_per_seq + C/block_size,)``
+    trash-padded block ids; ``slot``: the request's decode slot (carries
+    Mamba state across chunks); ``history``: tokens committed by earlier
+    chunks (traced — one compile for every chunk index); ``last_index``:
+    ``(1,)`` last real in-chunk index.
+
+    Returns ``(logits (1,1,V) at last_index, updated caches)`` — the
+    logits are only meaningful on the final chunk, where ``history +
+    last_index + 1 == len(prompt)``.
+    """
+    x = embed_tokens(cfg, params["embed"], tokens)
+    b, c, _ = x.shape
+    positions = (jnp.asarray(history, jnp.int32) +
+                 jnp.arange(c, dtype=jnp.int32))[None]
+    positions = jnp.broadcast_to(positions, (b, c))
+
+    def group_body(x, xs):
+        gparams, gcache = xs
+        new_caches = {}
+        for i, spec in enumerate(cfg.pattern):
+            x, new_caches[f"slot_{i}"] = _block_prefill_chunk(
+                cfg, gparams[f"slot_{i}"], spec, x, positions,
+                gcache[f"slot_{i}"], bt_row, slot, history, last_index)
+        return x, new_caches
+
+    x, group_caches = jax.lax.scan(
+        group_body, x, (params["groups"], caches["groups"]))
+
+    rem_caches = {}
+    for i, spec in enumerate(cfg.remainder):
+        x, rem_caches[f"slot_{i}"] = _block_prefill_chunk(
+            cfg, params["remainder"][f"slot_{i}"], spec, x, positions,
+            caches["remainder"][f"slot_{i}"], bt_row, slot, history,
+            last_index)
+
+    li = jnp.asarray(last_index, jnp.int32).reshape(b)
+    x = x[jnp.arange(b), li][:, None]
     x = rmsnorm(params["final_norm"], x)
     logits = lm_head(cfg, params["embed"], x)
     return logits, {"groups": group_caches, "remainder": rem_caches}

@@ -22,7 +22,8 @@ from repro.configs.base import ModelConfig
 from repro.models import transformer as tfm
 from repro.optim import AdamWConfig, adamw_update
 
-__all__ = ["make_train_step", "make_prefill_step", "make_serve_step"]
+__all__ = ["make_train_step", "make_prefill_step",
+           "make_chunk_prefill_step", "make_serve_step"]
 
 
 def make_train_step(cfg: ModelConfig, ocfg: AdamWConfig,
@@ -94,6 +95,21 @@ def make_prefill_step(cfg: ModelConfig, capacity: int,
     def prefill_step(params, batch):
         return tfm.prefill(cfg, params, batch, capacity=capacity)
     return prefill_step
+
+
+def make_chunk_prefill_step(cfg: ModelConfig) -> Callable:
+    """(params, pages, tokens, bt_row, slot, history, last_index) ->
+    (last-real-token logits, pages).  One prefix-extension prefill chunk
+    straight against the paged pool (see :func:`tfm.prefill_chunk`):
+    the chunked engine's half of the token-budget mixed step.  The chunk
+    length is static (``tokens.shape[1]``); history/slot/last_index are
+    traced, so ONE compile serves every chunk of every request."""
+    def chunk_step(params, pages, tokens, bt_row, slot, history,
+                   last_index):
+        return tfm.prefill_chunk(cfg, params, pages, tokens,
+                                 bt_row=bt_row, slot=slot, history=history,
+                                 last_index=last_index)
+    return chunk_step
 
 
 def make_serve_step(cfg: ModelConfig) -> Callable:

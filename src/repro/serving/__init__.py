@@ -9,10 +9,10 @@ host- and device-side halves of the paged pool.  Design notes in
 
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
 from repro.serving.scheduler import (DECODE, FINISHED, PREFILL, WAITING,
-                                     Request, Scheduler)
+                                     PrefillChunk, Request, Scheduler)
 
-__all__ = ["BlockPool", "TRASH_BLOCK", "Request", "Scheduler",
-           "WAITING", "PREFILL", "DECODE", "FINISHED",
+__all__ = ["BlockPool", "TRASH_BLOCK", "Request", "PrefillChunk",
+           "Scheduler", "WAITING", "PREFILL", "DECODE", "FINISHED",
            "ContinuousBatchingEngine", "ServeMetrics"]
 
 

@@ -1,12 +1,25 @@
 """Continuous-batching serving engine (sglang/vLLM-style, JAX-static).
 
-Each iteration interleaves **prefill** (admit up to
-``serving.max_prefill_per_iter`` waiting requests, one jitted
-bucket-padded forward each, caches written straight into the paged pool)
-with one **ragged decode step** over all running slots, a single
-jit-compiled function with a per-slot ``pos`` vector (masked slots point
-at the trash page).  Static shapes throughout — one decode compile
-total, one prefill compile per bucket.
+Execution model — the **token-budget mixed step** (default,
+``serving.prefill_chunk > 0``): each iteration the scheduler grants at
+most ONE fixed-size prefill chunk (``PrefillChunk`` cursor on the
+request, per-chunk block growth) alongside the full ragged decode batch,
+and a single jitted call runs both.  Chunk queries attend over the pages
+earlier chunks committed (prefix-extension attention — see
+:func:`repro.models.attention.attention_prefill_chunk`), sliding-window
+rings thread the chunk through the circular page list, and Mamba state
+carries across chunks in the per-slot state rows.  Consequences:
+
+* decode stall per iteration is bounded by one chunk, not one prompt —
+  no head-of-line blocking on long-context prefills;
+* exactly TWO compiles total (mixed step + decode-only step) instead of
+  one per prefill bucket;
+* prompts are bounded only by ``max_blocks_per_seq * block_size``, not
+  by the largest prefill bucket.
+
+``serving.prefill_chunk == 0`` keeps the legacy alternating phases:
+whole-prompt bucket-padded prefill (one compile per bucket, prompts
+beyond the largest bucket rejected), then one ragged decode step.
 
 Layers are cached per the **per-layer cache plan** (``cfg.cache_plan()``):
 global-attention layers hold backend-paged KV (+ SOCKET bits / Quest
@@ -27,15 +40,21 @@ free for state layers.
 
 Sampling is greedy by default (bit-exact vs the static engine);
 ``temperature > 0`` switches the jitted step to temperature + top-p
-sampling with one seeded PRNG stream per decode slot
-(:mod:`repro.serving.sampling`).  ``input_mode == "tokens"`` only.
+sampling.  Each request owns its PRNG key (folded from the engine seed
+and the request's submission index, stored on the ``Request`` and
+re-installed into the slot on every admission), and slot key streams
+only advance while their request is active — a request's sample stream
+is a pure function of (seed, submission index, token index), so
+preemption resume replays sampled generations bit-exactly and batch
+composition never perturbs a request's randomness.
+``input_mode == "tokens"`` only.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -45,10 +64,12 @@ from repro.configs.base import ModelConfig
 from repro.models import backends as bk
 from repro.models import param as pm
 from repro.models import transformer as tfm
-from repro.runtime.steps import make_prefill_step, make_serve_step
+from repro.runtime.steps import (make_chunk_prefill_step, make_prefill_step,
+                                 make_serve_step)
 from repro.serving import paged, sampling
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
-from repro.serving.scheduler import Request, Scheduler
+from repro.serving.scheduler import (PREFILL, PrefillChunk, Request,
+                                     Scheduler)
 
 __all__ = ["ContinuousBatchingEngine", "ServeMetrics"]
 
@@ -67,6 +88,13 @@ class ServeMetrics:
     token_latency_s_p99: float
     preemptions: int
     decode_iters: int
+    prefill_chunks: int
+    # longest wall-clock gap between consecutive token emissions of any
+    # single request — the head-of-line-blocking metric chunked prefill
+    # exists to bound (legacy mode: a long co-tenant prompt lands here)
+    intertoken_stall_s_max: float
+    # p99 over jitted step-call durations (mixed or decode-only)
+    decode_iter_s_p99: float
 
     def to_json(self) -> Dict:
         return {k: (round(v, 6) if isinstance(v, float) else v)
@@ -97,12 +125,15 @@ class ContinuousBatchingEngine:
         has_paged = any(p.kind == "paged" for p in plan)
         ring_blocks = max((p.ring_blocks for p in plan
                            if p.kind == "ring"), default=0)
+        self._has_state = any(p.kind == "state" for p in plan)
         # page-native decode: paged-capable backend, or no global layer
         # consumes the backend at all (ring/state layers are page-native
         # by construction)
         self._paged_native = self.backend.supports_paged or not has_paged
         self.temperature = float(temperature)
         self.top_p = float(top_p)
+        self._sample_base = jax.random.PRNGKey(sample_seed)
+        self._submitted = 0
         self._keys = sampling.slot_keys(sample_seed, self.serving.max_batch)
         self.pages = paged.init_paged_caches(cfg, self.serving)
         self.pool = BlockPool(self.serving.num_blocks)
@@ -110,9 +141,19 @@ class ContinuousBatchingEngine:
             self.pool, max_batch=self.serving.max_batch,
             max_blocks_per_seq=self.serving.max_blocks_per_seq,
             block_size=self.serving.block_size,
-            has_paged_layers=has_paged, ring_blocks=ring_blocks)
+            has_paged_layers=has_paged, ring_blocks=ring_blocks,
+            prefill_chunk=self.serving.prefill_chunk)
         self._decode_fn = self._build_decode()
+        self._mixed_fn = self._build_mixed() if self.chunked else None
+        self._prefilling: Optional[Request] = None
         self._prefill_fns: Dict[int, callable] = {}
+        # (iteration, rid, chunk.start, chunk.tokens) per chunk co-run —
+        # lets tests pin "never more than one chunk per decode iteration"
+        self.chunk_trace: List[Tuple[int, int, int, int]] = []
+
+    @property
+    def chunked(self) -> bool:
+        return self.serving.prefill_chunk > 0
 
     @staticmethod
     def _validate(cfg: ModelConfig) -> None:
@@ -139,24 +180,61 @@ class ContinuousBatchingEngine:
                 vocab_size=self.cfg.vocab_size)
         return jnp.argmax(last, axis=-1), keys
 
-    def _build_decode(self):
-        serve = make_serve_step(self.cfg)
-        cfg = self.cfg
+    def _decode_body(self, serve, params, pages, keys, tokens, bt, pos,
+                     active):
+        """Shared ragged-decode body of the decode-only and mixed steps.
 
+        ``active`` (``(B,)`` bool) marks slots holding a runnable
+        request: inactive slots keep their per-slot state rows (a
+        chunk-owner's Mamba state must survive the decode iterations
+        between its chunks) and their PRNG keys (a request's sample
+        stream advances exactly once per emitted token, never while the
+        slot idles — the replay-exact resume invariant).
+        """
         if self._paged_native:
             # page-native path: the pool + block tables go straight into
             # the model; no contiguous K/V view is ever materialized.
-            def step(params, pages, keys, tokens, bt, pos):
-                logits, pages = serve(params, pages, tokens, pos, bt)
-                tok, keys = self._pick(logits, keys)
-                return tok, keys, pages
+            logits, new_pages = serve(params, pages, tokens, pos, bt)
         else:
-            def step(params, pages, keys, tokens, bt, pos):
-                views = paged.gather_views(cfg, pages, bt)
-                logits, views = serve(params, views, tokens, pos)
-                pages = paged.scatter_token(cfg, pages, views, bt, pos)
-                tok, keys = self._pick(logits, keys)
-                return tok, keys, pages
+            views = paged.gather_views(self.cfg, pages, bt)
+            logits, views = serve(params, views, tokens, pos)
+            new_pages = paged.scatter_token(self.cfg, pages, views, bt, pos)
+        if self._has_state:
+            new_pages = paged.keep_state_rows(self.cfg, pages, new_pages,
+                                              active)
+        tok, new_keys = self._pick(logits, keys)
+        keys = jnp.where(active[:, None], new_keys, keys)
+        return tok, keys, new_pages
+
+    def _build_decode(self):
+        serve = make_serve_step(self.cfg)
+
+        def step(params, pages, keys, tokens, bt, pos, active):
+            return self._decode_body(serve, params, pages, keys, tokens,
+                                     bt, pos, active)
+
+        return jax.jit(step, donate_argnums=(1,))
+
+    def _build_mixed(self):
+        """The token-budget mixed step: one prefill chunk + the full
+        ragged decode batch in ONE jitted call.  The chunk runs first
+        (its writes land in blocks disjoint from every decoding
+        request), then the decode batch; ``ch_final`` gates whether the
+        chunk's logits consume the slot's PRNG key (only the final chunk
+        emits a token)."""
+        serve = make_serve_step(self.cfg)
+        chunk_fn = make_chunk_prefill_step(self.cfg)
+
+        def step(params, pages, keys, ch_tokens, ch_bt, ch_slot, ch_hist,
+                 ch_last, ch_final, tokens, bt, pos, active):
+            logits_c, pages = chunk_fn(params, pages, ch_tokens, ch_bt,
+                                       ch_slot, ch_hist, ch_last)
+            tok_c, key_c = self._pick(logits_c, keys[ch_slot][None])
+            keys = keys.at[ch_slot].set(
+                jnp.where(ch_final, key_c[0], keys[ch_slot]))
+            tok, keys, pages = self._decode_body(
+                serve, params, pages, keys, tokens, bt, pos, active)
+            return tok_c[0], tok, keys, pages
 
         return jax.jit(step, donate_argnums=(1,))
 
@@ -167,6 +245,13 @@ class ContinuousBatchingEngine:
         trash)."""
         return max(bucket // self.serving.block_size,
                    self.scheduler.ring_blocks)
+
+    def _chunk_bt_len(self) -> int:
+        """Chunk block-table row length: the full per-request table plus
+        one chunk of slack, so the final (padded) chunk's block window
+        never clamps — its overhang entries are trash."""
+        sv = self.serving
+        return sv.max_blocks_per_seq + sv.prefill_chunk // sv.block_size
 
     def _prefill_fn(self, bucket: int):
         if bucket not in self._prefill_fns:
@@ -186,19 +271,36 @@ class ContinuousBatchingEngine:
             self._prefill_fns[bucket] = jax.jit(step, donate_argnums=(1,))
         return self._prefill_fns[bucket]
 
-    def warmup(self) -> None:
-        """Trigger every jit compile (decode step + all prefill buckets)
-        against the trash page, so a subsequent run's TTFT and latency
-        percentiles measure serving, not compilation.  Sampling keys are
-        not consumed (warmup randomness is discarded)."""
+    def warmup(self, requests: Optional[List[Request]] = None) -> None:
+        """Trigger the jit compiles a run will need against the trash
+        page, so a subsequent run's TTFT and latency percentiles measure
+        serving, not compilation.  Chunked mode needs exactly TWO shapes
+        (mixed + decode-only) regardless of the workload; legacy mode
+        warms one prefill compile per bucket — only the buckets
+        ``requests`` will actually hit when given, all of them otherwise.
+        Sampling keys are not consumed (warmup randomness is
+        discarded)."""
         sv = self.serving
         tokens = jnp.zeros((sv.max_batch, 1), jnp.int32)
         bt = jnp.full((sv.max_batch, sv.max_blocks_per_seq), TRASH_BLOCK,
                       jnp.int32)
         pos = jnp.zeros((sv.max_batch,), jnp.int32)
+        active = jnp.zeros((sv.max_batch,), bool)
         _, _, self.pages = self._decode_fn(self.params, self.pages,
-                                           self._keys, tokens, bt, pos)
-        for bucket in sv.prefill_buckets:
+                                           self._keys, tokens, bt, pos,
+                                           active)
+        if self.chunked:
+            ch_bt = jnp.full((self._chunk_bt_len(),), TRASH_BLOCK,
+                             jnp.int32)
+            _, _, _, self.pages = self._mixed_fn(
+                self.params, self.pages, self._keys,
+                jnp.zeros((1, sv.prefill_chunk), jnp.int32), ch_bt,
+                jnp.int32(0), jnp.int32(0), jnp.zeros((1,), jnp.int32),
+                jnp.asarray(False), tokens, bt, pos, active)
+            return
+        buckets = sv.prefill_buckets if requests is None else sorted(
+            {self._bucket_for(len(r.prefill_tokens)) for r in requests})
+        for bucket in buckets:
             bt_row = jnp.full((self._bt_row_len(bucket),), TRASH_BLOCK,
                               jnp.int32)
             _, _, self.pages = self._prefill_fn(bucket)(
@@ -210,8 +312,30 @@ class ContinuousBatchingEngine:
         for b in sorted(self.serving.prefill_buckets):
             if b >= n:
                 return b
-        raise ValueError(f"prompt of {n} tokens exceeds largest prefill "
-                         f"bucket {max(self.serving.prefill_buckets)}")
+        raise ValueError(
+            f"prompt of {n} tokens exceeds largest prefill bucket "
+            f"{max(self.serving.prefill_buckets)} (chunked prefill — "
+            f"serving.prefill_chunk > 0 — serves prompts up to "
+            f"max_context {self.serving.max_context})")
+
+    # -------------------------------------------------------------- keys
+    def _register(self, req: Request) -> None:
+        """Assign the request's sampling key at first submission: folded
+        from the engine seed and the submission index, so the stream is
+        deterministic per workload and survives preemption (re-submission
+        keeps the stored key)."""
+        if req.sample_key is None:
+            req.sample_key = np.asarray(
+                jax.random.fold_in(self._sample_base, self._submitted))
+        self._submitted += 1
+
+    def _install_key(self, req: Request) -> None:
+        """(Re-)install the request's key into its slot at admission.
+        Replay after preemption then re-advances the stream exactly as
+        the original run did — one consumption per emitted token."""
+        keys = np.array(self._keys)          # writable host copy
+        keys[req.slot] = req.sample_key
+        self._keys = jnp.asarray(keys)
 
     # -------------------------------------------------------------- run
     def run(self, requests: List[Request],
@@ -221,31 +345,62 @@ class ContinuousBatchingEngine:
         already-arrived (offline batch; deterministic, used by tests)."""
         sched = self.scheduler
         sv = self.serving
+        self.chunk_trace = []               # per-run, like the metrics
         for r in requests:
+            self._register(r)
             sched.submit(r)
         t0 = time.perf_counter()
-        now = lambda: (time.perf_counter() - t0) if realtime else \
-            float("inf")
+        wall = lambda: time.perf_counter() - t0
+        now = wall if realtime else (lambda: float("inf"))
+        stamp = wall if realtime else (lambda: 0.0)
         decode_iters = 0
+        iter_times: List[float] = []
+        chunks_run = 0
 
         while sched.has_work:
-            # ---------------- prefill phase -----------------------------
-            for _ in range(sv.max_prefill_per_iter):
-                req = sched.try_admit(now())
-                if req is None:
-                    break
-                self._prefill_one(req)
-                first = now() if realtime else 0.0
-                if req.t_first_token is None:
-                    req.t_first_token = first
-                sched.activate(req)
-                if req.done:          # max_new_tokens == 1 degenerate case
-                    sched.finish(req, now() if realtime else 0.0)
+            chunk: Optional[PrefillChunk] = None
+            if self.chunked:
+                # decode-table growth FIRST (it may evict the prefiller,
+                # which must not happen after a chunk has been granted —
+                # the granted chunk's block ids would be dangling)...
+                runnable = sched.ensure_decode_blocks()
+                if self._prefilling is not None and \
+                        self._prefilling.state != PREFILL:
+                    self._prefilling = None  # evicted by decode growth
+                # ...then the chunk grant (alloc-only: cannot invalidate
+                # the runnable snapshot)
+                if self._prefilling is None:
+                    req = sched.try_admit(now())
+                    if req is not None:
+                        self._install_key(req)
+                        self._prefilling = req
+                if self._prefilling is not None:
+                    chunk = sched.grant_chunk(self._prefilling)
+                    if chunk is None and \
+                            self._prefilling.state != PREFILL:
+                        self._prefilling = None   # safety self-preempt
+            else:
+                # legacy order: whole-prompt prefill phase, then growth —
+                # a request admitted this iteration decodes this
+                # iteration (ensure-first would cost every admission one
+                # extra iteration of inter-token latency)
+                for _ in range(sv.max_prefill_per_iter):
+                    req = sched.try_admit(now())
+                    if req is None:
+                        break
+                    self._install_key(req)
+                    self._prefill_one(req, wall)
+                    if req.t_first_token is None:
+                        req.t_first_token = stamp()
+                    sched.activate(req)
+                    if req.done:      # max_new_tokens == 1 degenerate case
+                        sched.finish(req, stamp())
+                runnable = sched.ensure_decode_blocks()
 
-            # ---------------- ragged decode phase -----------------------
-            runnable = sched.ensure_decode_blocks()
-            if not runnable:
-                if sched.waiting and not sched.running:
+            # ---------------- ragged decode (+ chunk) -------------------
+            if not runnable and chunk is None:
+                if sched.waiting and not sched.running and \
+                        self._prefilling is None:
                     nxt = min(r.arrival for r in sched.waiting)
                     wait = nxt - now()
                     if realtime and wait > 0:
@@ -256,15 +411,28 @@ class ContinuousBatchingEngine:
             bt = np.full((sv.max_batch, sv.max_blocks_per_seq),
                          TRASH_BLOCK, np.int32)
             pos = np.zeros((sv.max_batch,), np.int32)
+            active = np.zeros((sv.max_batch,), bool)
             for r in runnable:
                 tokens[r.slot, 0] = r.input_token(r.pos)
                 bt[r.slot, :len(r.blocks)] = r.blocks
                 pos[r.slot] = r.pos
-            next_tok, self._keys, self.pages = self._decode_fn(
-                self.params, self.pages, self._keys, jnp.asarray(tokens),
-                jnp.asarray(bt), jnp.asarray(pos))
+                active[r.slot] = True
+            if chunk is not None:
+                first_tok, next_tok = self._run_mixed(
+                    chunk, tokens, bt, pos, active)
+                self.chunk_trace.append((decode_iters,
+                                         self._prefilling.rid,
+                                         chunk.start, chunk.tokens))
+                chunks_run += 1
+                self._finish_chunk(chunk, first_tok, wall, stamp)
+            else:
+                next_tok, self._keys, self.pages = self._decode_fn(
+                    self.params, self.pages, self._keys,
+                    jnp.asarray(tokens), jnp.asarray(bt), jnp.asarray(pos),
+                    jnp.asarray(active))
             next_tok = np.asarray(next_tok)
             it_s = time.perf_counter() - t_it
+            iter_times.append(it_s)
             decode_iters += 1
             for r in runnable:
                 # post-preemption replay: steps whose output token is
@@ -275,14 +443,54 @@ class ContinuousBatchingEngine:
                 if not replaying:
                     r.generated.append(int(next_tok[r.slot]))
                     r.token_latencies.append(it_s)
+                    r.token_walls.append(wall())
                 r.pos += 1
                 if r.done and not replaying:
-                    sched.finish(r, now() if realtime else 0.0)
+                    sched.finish(r, stamp())
 
-        wall = time.perf_counter() - t0
-        return self._metrics(requests, wall, decode_iters)
+        wall_total = time.perf_counter() - t0
+        return self._metrics(requests, wall_total, decode_iters,
+                             chunks_run, iter_times)
 
-    def _prefill_one(self, req: Request) -> None:
+    # ------------------------------------------------------------- chunk
+    def _run_mixed(self, chunk: PrefillChunk, tokens, bt, pos, active):
+        """Dispatch the mixed step for ``chunk`` plus the decode batch."""
+        req = self._prefilling
+        sv = self.serving
+        c = sv.prefill_chunk
+        ch_tokens = np.zeros((1, c), np.int32)
+        ch_tokens[0, :chunk.tokens] = \
+            req.prefill_tokens[chunk.start:chunk.start + chunk.tokens]
+        ch_bt = np.full((self._chunk_bt_len(),), TRASH_BLOCK, np.int32)
+        ch_bt[:len(req.blocks)] = req.blocks
+        first_tok, next_tok, self._keys, self.pages = self._mixed_fn(
+            self.params, self.pages, self._keys, jnp.asarray(ch_tokens),
+            jnp.asarray(ch_bt), jnp.int32(req.slot), jnp.int32(chunk.start),
+            jnp.asarray([chunk.tokens - 1], jnp.int32),
+            jnp.asarray(chunk.final), jnp.asarray(tokens), jnp.asarray(bt),
+            jnp.asarray(pos), jnp.asarray(active))
+        return first_tok, next_tok
+
+    def _finish_chunk(self, chunk: PrefillChunk, first_tok, wall,
+                      stamp) -> None:
+        """Advance the cursor; on the final chunk record the first token
+        (unless replay already holds it) and activate into decode."""
+        req = self._prefilling
+        sched = self.scheduler
+        sched.advance_chunk(req, chunk)
+        if not chunk.final:
+            return
+        if not req.generated:
+            req.generated.append(int(np.asarray(first_tok)))
+            req.token_walls.append(wall())
+        if req.t_first_token is None:
+            req.t_first_token = stamp()
+        sched.activate(req)
+        if req.done:                  # max_new_tokens == 1 degenerate case
+            sched.finish(req, stamp())
+        self._prefilling = None
+
+    def _prefill_one(self, req: Request, wall) -> None:
         prompt = req.prefill_tokens
         bucket = self._bucket_for(len(prompt))
         tokens = np.zeros((1, bucket), np.int32)
@@ -296,6 +504,7 @@ class ContinuousBatchingEngine:
             jnp.asarray(bt_row), jnp.int32(req.slot))
         if not req.generated:
             req.generated.append(int(np.asarray(first_tok)[0]))
+            req.token_walls.append(wall())
         # resumed after preemption: the prefill only rebuilt the prompt's
         # caches (KV pages / window ring / SSM state — bit-exact
         # recomputation); recorded tokens now replay through the decode
@@ -303,10 +512,13 @@ class ContinuousBatchingEngine:
         # is token-exact regardless of pool pressure.
 
     def _metrics(self, requests: List[Request], wall: float,
-                 decode_iters: int) -> ServeMetrics:
+                 decode_iters: int, chunks_run: int,
+                 iter_times: List[float]) -> ServeMetrics:
         ttfts = [r.t_first_token - r.arrival for r in requests
                  if r.t_first_token is not None]
         lats = [t for r in requests for t in r.token_latencies]
+        stalls = [b - a for r in requests
+                  for a, b in zip(r.token_walls, r.token_walls[1:])]
         total = sum(len(r.generated) for r in requests)
         return ServeMetrics(
             num_requests=len(requests),
@@ -319,4 +531,7 @@ class ContinuousBatchingEngine:
             token_latency_s_p99=_percentile(lats, 99),
             preemptions=sum(r.preemptions for r in requests),
             decode_iters=decode_iters,
+            prefill_chunks=chunks_run,
+            intertoken_stall_s_max=max(stalls) if stalls else float("nan"),
+            decode_iter_s_p99=_percentile(iter_times, 99),
         )

@@ -51,7 +51,7 @@ from repro.models import backends as bk
 from repro.models import transformer as tfm
 
 __all__ = ["init_paged_caches", "gather_views", "scatter_token",
-           "write_prefill", "gather_footprint"]
+           "write_prefill", "keep_state_rows", "gather_footprint"]
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
@@ -114,6 +114,27 @@ def write_prefill(cfg: ModelConfig, pages, caches, bt_row: jax.Array,
     return _map_slots(
         cfg, lambda h, p, c: h.write_prefill(cfg, p, c, bt_row, slot),
         pages, caches)
+
+
+def keep_state_rows(cfg: ModelConfig, before, after, active: jax.Array):
+    """Preserve inactive decode slots' per-slot **state** rows across a
+    decode step: the jitted ragged step updates every Mamba slot row
+    unconditionally (masked attention slots write the trash page, but
+    state rows have no trash row to absorb the garbage).  With the legacy
+    whole-prompt prefill that was harmless — a slot's state was only live
+    while the slot decoded.  Under chunked prefill a slot's state must
+    survive the decode iterations running *between* its chunks, so state
+    leaves take the post-step value only where ``active`` (``(B,)``
+    bool) marks a runnable request; paged/ring leaves pass through
+    untouched (their inactive-slot writes already land in the trash
+    page)."""
+    def sel(h, old, new):
+        if h.kind != "state":
+            return new
+        return {name: jnp.where(
+            active.reshape((-1,) + (1,) * (new[name].ndim - 1)),
+            new[name], old[name]) for name in new}
+    return _map_slots(cfg, sel, before, after)
 
 
 # -------------------------------------------------------------- accounting

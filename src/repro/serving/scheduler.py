@@ -3,21 +3,33 @@
 Lifecycle::
 
     WAITING --admit--> PREFILL --activate--> DECODE --finish--> FINISHED
-       ^                                       |
-       +----------- preempt (blocks freed) ----+
+       ^                  |                    |
+       +--- preempt (blocks freed, cursor reset) ---+
 
 Admission is by free-block accounting: a waiting request is admitted only
-when a decode slot is free and the pool can cover its prompt blocks plus
-one block of decode headroom.  Block demand follows the per-layer cache
-plan (see :meth:`Scheduler._blocks_for`): linear with context when any
-global-attention layer pages, capped at the circular window page list
-for sliding-window-only models, zero for SSM-only models.  On pool
-exhaustion mid-decode the scheduler preempts the least-recently-used
-running request (recompute-style: its blocks are freed and it re-enters
-the waiting queue keeping its generated tokens; on re-admission the
-original prompt is re-prefilled — rebuilding paged KV, window rings and
-SSM state bit-exactly — and recorded tokens replay through the decode
-path — resume is token-exact, see :attr:`Request.prefill_tokens`).
+when a decode slot is free and the pool can cover its first prefill grant
+(the whole prompt in legacy whole-bucket mode, one chunk when
+``prefill_chunk > 0``) plus one block of decode headroom.  Block demand
+follows the per-layer cache plan (see :meth:`Scheduler._blocks_for`):
+linear with context when any global-attention layer pages, capped at the
+circular window page list for sliding-window-only models, zero for
+SSM-only models.
+
+Under **chunked prefill** the admitted request stays in PREFILL across
+iterations while :meth:`Scheduler.grant_chunk` hands the engine one
+:class:`PrefillChunk` at a time, growing the block table through the same
+per-kind accounting; the :attr:`Request.prefill_pos` cursor tracks the
+committed prompt prefix.  A request preempted mid-prefill (its blocks are
+gone) re-chunks from cursor 0 on re-admission — chunk boundaries are a
+pure function of the prompt length, so the recompute is bit-exact.
+
+On pool exhaustion mid-decode the scheduler preempts the
+least-recently-used running request (recompute-style: its blocks are
+freed and it re-enters the waiting queue keeping its generated tokens; on
+re-admission the original prompt is re-prefilled — rebuilding paged KV,
+window rings and SSM state bit-exactly — and recorded tokens replay
+through the decode path — resume is token-exact, see
+:attr:`Request.prefill_tokens`).
 """
 
 from __future__ import annotations
@@ -28,7 +40,7 @@ from typing import Dict, List, Optional
 
 from repro.serving.block_pool import BlockPool
 
-__all__ = ["Request", "Scheduler",
+__all__ = ["Request", "PrefillChunk", "Scheduler",
            "WAITING", "PREFILL", "DECODE", "FINISHED"]
 
 WAITING = "waiting"
@@ -37,6 +49,17 @@ DECODE = "decode"
 FINISHED = "finished"
 
 _rid = itertools.count()
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefillChunk:
+    """One granted prefill chunk: the engine runs prompt tokens
+    ``[start, start + tokens)`` this iteration (``final`` marks the chunk
+    whose last real token produces the request's first output)."""
+
+    start: int
+    tokens: int
+    final: bool
 
 
 @dataclasses.dataclass
@@ -53,13 +76,22 @@ class Request:
     blocks: List[int] = dataclasses.field(default_factory=list)
     generated: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0                           # next cache index to write
+    prefill_pos: int = 0                   # chunked-prefill cursor
     last_used: int = 0                     # scheduler clock, for LRU
     preemptions: int = 0
+    # per-request sampling PRNG key (np.ndarray (2,) uint32), assigned by
+    # the engine at first submission and RE-installed on every admission,
+    # so temperature/top-p streams replay bit-exactly after preemption
+    # and never depend on the slot's previous occupants.
+    sample_key: Optional[object] = None
 
     # metrics (seconds relative to run start)
     t_first_token: Optional[float] = None
     t_finished: Optional[float] = None
     token_latencies: List[float] = dataclasses.field(default_factory=list)
+    # wall-clock emission time of each token (engine-relative seconds) —
+    # feeds the max inter-token-stall metric
+    token_walls: List[float] = dataclasses.field(default_factory=list)
 
     @property
     def effective_prompt(self) -> List[int]:
@@ -112,14 +144,17 @@ class Scheduler:
 
     def __init__(self, pool: BlockPool, *, max_batch: int,
                  max_blocks_per_seq: int, block_size: int,
-                 has_paged_layers: bool = True, ring_blocks: int = 0):
+                 has_paged_layers: bool = True, ring_blocks: int = 0,
+                 prefill_chunk: int = 0):
         self.pool = pool
         self.max_batch = max_batch
         self.max_blocks_per_seq = max_blocks_per_seq
         self.block_size = block_size
         self.has_paged_layers = has_paged_layers
         self.ring_blocks = ring_blocks
+        self.prefill_chunk = prefill_chunk     # 0 = whole-prompt prefill
         self.waiting: List[Request] = []       # FCFS by (arrival, rid)
+        self.prefilling: List[Request] = []    # admitted, mid-prefill
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self._clock = 0
@@ -155,19 +190,26 @@ class Scheduler:
     # ---------------------------------------------------------- admission
     def try_admit(self, now: float) -> Optional[Request]:
         """Pop the first arrived waiting request that fits (free slot AND
-        prompt blocks + 1 decode-headroom block); allocate its prompt
-        blocks and move it to PREFILL.  Returns None if nothing fits."""
+        first-grant blocks + 1 decode-headroom block); allocate those
+        blocks and move it to PREFILL.  Returns None if nothing fits.
+
+        The first grant is the whole prompt in legacy mode, just the
+        first chunk under chunked prefill — a long prompt is admissible
+        long before the pool could hold all of it (later chunks grow the
+        table via :meth:`grant_chunk`)."""
         if not self._free_slots:
             return None
         for i, req in enumerate(self.waiting):
             if req.arrival > now:
                 break                       # sorted: nothing arrived yet
-            need = self._blocks_for(len(req.prefill_tokens))
+            p = len(req.prefill_tokens)
+            first = min(self.prefill_chunk, p) if self.prefill_chunk else p
+            need = self._blocks_for(first)
             lifetime = self._blocks_for(
                 len(req.effective_prompt) + req.num_remaining)
             # decode headroom only if the request will ever grow past its
-            # prompt blocks — otherwise a prompt filling the whole pool
-            # could pass submit() yet never admit (engine would spin).
+            # first-grant blocks — otherwise a prompt filling the whole
+            # pool could pass submit() yet never admit (engine would spin).
             headroom = 1 if lifetime > need else 0
             if need + headroom > self.pool.num_free:
                 continue                    # try a smaller request behind it
@@ -178,12 +220,51 @@ class Scheduler:
             req.slot = self._free_slots.pop()
             req.state = PREFILL
             req.pos = len(req.prefill_tokens)
+            req.prefill_pos = 0
+            self.prefilling.append(req)
             return req
         return None
+
+    def grant_chunk(self, req: Request) -> Optional[PrefillChunk]:
+        """Grant the next prefill chunk for a PREFILL-state request,
+        growing its block table to cover the chunk end through the
+        per-kind accounting.  Prefill never evicts decoders: on pool
+        exhaustion the grant is simply withheld (None, request stays
+        PREFILL) and retried next iteration — decoders always finish
+        within ``max_new_tokens`` steps and free their blocks, so the
+        chunk eventually proceeds (eager eviction ping-pongs: the
+        evicted decoder re-admits cheaply and evicts the prefiller right
+        back).  Decode *growth* may preempt the prefiller instead
+        (:meth:`ensure_decode_blocks`) — in-flight tokens outrank queued
+        prompts.  If the pool cannot cover the chunk while nothing else
+        holds blocks — unreachable while :meth:`submit`'s lifetime guard
+        holds — the request is preempted as a safety valve."""
+        assert self.prefill_chunk and req.state == PREFILL
+        self._clock += 1
+        req.last_used = self._clock
+        p = len(req.prefill_tokens)
+        end = min(req.prefill_pos + self.prefill_chunk, p)
+        while len(req.blocks) < self._blocks_for(end):
+            got = self.pool.alloc(1)
+            if got is not None:
+                req.blocks.extend(got)
+                continue
+            if self.running or len(self.prefilling) > 1:
+                return None                 # wait for blocks to free up
+            self.preempt(req)               # cannot make progress at all
+            return None
+        return PrefillChunk(start=req.prefill_pos,
+                            tokens=end - req.prefill_pos, final=end == p)
+
+    def advance_chunk(self, req: Request, chunk: PrefillChunk) -> None:
+        """The engine ran ``chunk``; move the cursor past it."""
+        assert req.state == PREFILL and req.prefill_pos == chunk.start
+        req.prefill_pos += chunk.tokens
 
     def activate(self, req: Request) -> None:
         """Prefill done; request joins the ragged decode batch."""
         assert req.state == PREFILL
+        self.prefilling.remove(req)
         req.state = DECODE
         self.running[req.slot] = req
 
@@ -192,8 +273,10 @@ class Scheduler:
         """Grow each running request's block table to cover writing index
         ``pos`` (capped by the per-kind accounting: sliding-window-only
         demand stops at ``ring_blocks``, SSM-only at zero); preempt LRU
-        victims on exhaustion.  Returns the requests runnable this step
-        (sorted by slot)."""
+        victims on exhaustion — mid-prefill requests are eligible victims
+        too (in-flight decodes outrank queued prompts; a preempted
+        prefill re-chunks from cursor 0 bit-exactly).  Returns the
+        requests runnable this step (sorted by slot)."""
         self._clock += 1
         for slot in sorted(self.running):
             req = self.running.get(slot)
@@ -212,17 +295,29 @@ class Scheduler:
         return [self.running[s] for s in sorted(self.running)]
 
     def _lru_victim(self) -> Request:
-        return min(self.running.values(),
-                   key=lambda r: (r.last_used, -r.arrival, -r.rid))
+        # Mid-prefill requests are evicted before any decoder: they hold
+        # pages but no in-flight generation (re-chunking from cursor 0
+        # redoes prefill work only, never emitted tokens), which is the
+        # "in-flight tokens outrank queued prompts" policy — LRU clocks
+        # alone would favor the prefiller (stamped fresher by its grant
+        # each iteration) and evict an active decoder instead.
+        pool = self.prefilling or list(self.running.values())
+        return min(pool, key=lambda r: (r.last_used, -r.arrival, -r.rid))
 
     def preempt(self, req: Request) -> None:
-        """Free the request's slot + blocks and requeue it (recompute)."""
+        """Free the request's slot + blocks and requeue it (recompute).
+        A request caught mid-chunked-prefill loses its committed pages,
+        so its chunk cursor resets — re-chunking is bit-exact because
+        chunk boundaries depend only on the prompt length."""
         assert req.state == DECODE or req.state == PREFILL
         self.pool.free(req.blocks)
         req.blocks = []
+        if req in self.prefilling:
+            self.prefilling.remove(req)
         self.running.pop(req.slot, None)
         self._free_slots.append(req.slot)
         req.slot = None
+        req.prefill_pos = 0
         req.preemptions += 1
         self.submit(req)
 
@@ -239,7 +334,7 @@ class Scheduler:
     # ------------------------------------------------------------- status
     @property
     def has_work(self) -> bool:
-        return bool(self.waiting or self.running)
+        return bool(self.waiting or self.prefilling or self.running)
 
     @property
     def num_running(self) -> int:

@@ -1,0 +1,403 @@
+"""Chunked prefill + the token-budget mixed step: token parity vs the
+legacy whole-bucket engine across every backend and hybrid cache plan,
+beyond-bucket prompt serving, preemption mid-chunk (greedy AND sampled —
+resume must re-chunk bit-exactly), the one-chunk-per-iteration trace
+invariant, per-chunk scheduler accounting, and warmup shape narrowing."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import FINISHED, BlockPool, Request, Scheduler
+
+
+def _smoke(backend="socket"):
+    return get_config("stablelm-12b").smoke().replace(
+        attention_backend=backend)
+
+
+def _with_chunk(cfg, chunk, **sv):
+    return cfg.replace(serving=cfg.serving.replace(prefill_chunk=chunk,
+                                                   **sv))
+
+
+def _run(cfg, prompts, steps, temperature=0.0, seed=0, engine=None):
+    from repro.serving.engine import ContinuousBatchingEngine
+    if engine is None:
+        engine = ContinuousBatchingEngine(
+            cfg, rng=jax.random.PRNGKey(0), temperature=temperature,
+            sample_seed=seed)
+    reqs = [Request(prompt=list(p), max_new_tokens=steps, arrival=0.0)
+            for p in prompts]
+    metrics = engine.run(reqs, realtime=False)
+    return engine, reqs, metrics
+
+
+# ----------------------------------------------------- chunked-vs-whole
+
+
+@pytest.mark.parametrize("backend", ["socket", "dense", "hard_lsh",
+                                     "quest"])
+def test_chunked_matches_whole_bucket(backend):
+    """The mixed token-budget step must reproduce the legacy
+    whole-bucket engine token-for-token for every paged backend and the
+    dense fallback — prompt lengths deliberately off every chunk/bucket
+    boundary."""
+    cfg = _smoke(backend)
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (9, 24, 17)]
+    _, chunked, mc = _run(_with_chunk(cfg, 16), prompts, steps=6)
+    _, whole, _ = _run(_with_chunk(cfg, 0), prompts, steps=6)
+    assert mc.prefill_chunks >= len(prompts)
+    for c, w in zip(chunked, whole):
+        assert c.state == FINISHED and c.generated == w.generated, (
+            c.generated, w.generated)
+
+
+@pytest.mark.parametrize("arch,ngroups", [
+    ("gemma3-27b", 1), ("jamba-v0.1-52b", 1), ("mamba2-780m", None)])
+def test_chunked_matches_whole_bucket_hybrid(arch, ngroups):
+    """Heterogeneous cache plans under chunked prefill: gemma3's ring
+    layers thread chunks through the circular page list, jamba/mamba2
+    carry SSD state across chunks through the per-slot rows — all
+    token-exact vs the whole-bucket engine (smoke prefill_chunk ==
+    ssm_chunk, so chunk boundaries land on the SSD scan grid)."""
+    cfg = get_config(arch).smoke()
+    if ngroups is not None:
+        cfg = cfg.replace(num_groups=ngroups)
+    if arch.startswith("jamba"):
+        cfg = cfg.replace(capacity_factor=float(cfg.num_experts))
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (9, 24)]
+    _, chunked, _ = _run(_with_chunk(cfg, 16), prompts, steps=6)
+    _, whole, _ = _run(_with_chunk(cfg, 0), prompts, steps=6)
+    for c, w in zip(chunked, whole):
+        assert c.generated == w.generated, (c.generated, w.generated)
+
+
+def test_chunked_matches_whole_bucket_sampled():
+    """Sampled decoding too: the per-request key stream consumes once at
+    the first token (final chunk == whole-bucket prefill) and once per
+    decode emission, so chunked and whole-bucket engines draw identical
+    temperature/top-p generations."""
+    cfg = _smoke("socket")
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (9, 24, 17)]
+    _, chunked, _ = _run(_with_chunk(cfg, 16), prompts, steps=6,
+                         temperature=0.8, seed=13)
+    _, whole, _ = _run(_with_chunk(cfg, 0), prompts, steps=6,
+                       temperature=0.8, seed=13)
+    for c, w in zip(chunked, whole):
+        assert c.generated == w.generated, (c.generated, w.generated)
+
+
+def test_chunked_fused_kernel_matches_unfused():
+    """cfg.socket.use_paged_kernel composes with chunked prefill: the
+    fused decode pass over chunk-written pages yields the same tokens."""
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, 250, size=n).tolist() for n in (9, 23)]
+
+    def run(fused):
+        cfg = _smoke("socket")
+        cfg = cfg.replace(socket=dataclasses.replace(
+            cfg.socket, use_paged_kernel=fused))
+        _, reqs, _ = _run(cfg, prompts, steps=5)
+        return [r.generated for r in reqs]
+
+    assert run(True) == run(False)
+
+
+# ----------------------------------------------- beyond-bucket serving
+
+
+def test_prompt_beyond_largest_bucket_is_served():
+    """Chunked prefill bounds prompts by the block table, not the
+    prefill-bucket zoo: a prompt past the largest bucket must serve end
+    to end and match the static engine token-for-token, while the legacy
+    engine rejects it."""
+    from repro.launch.serve import run_serve
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke("socket")
+    cfg = cfg.replace(serving=cfg.serving.replace(prefill_buckets=(24, 32)))
+    rng = np.random.default_rng(3)
+    long = rng.integers(0, cfg.vocab_size, size=56).tolist()
+    short = rng.integers(0, cfg.vocab_size, size=9).tolist()
+
+    _, reqs, m = _run(cfg, [long, short], steps=8)
+    assert all(r.state == FINISHED for r in reqs)
+    assert m.prefill_chunks == 4 + 1        # ceil(56/16) + ceil(9/16)
+    base = _smoke("socket")                 # static path has no buckets
+    for r, p in zip(reqs, (long, short)):
+        toks, _, _ = run_serve(base, 1, len(p), 7, seed=0,
+                               prompt=np.asarray(p)[None])
+        assert r.generated == np.asarray(toks)[0].tolist()
+
+    # the legacy engine cannot even exist at this geometry: whole-prompt
+    # bucketing requires the largest bucket to cover max_context
+    with pytest.raises(AssertionError, match="largest prefill bucket"):
+        ContinuousBatchingEngine(_with_chunk(cfg, 0),
+                                 rng=jax.random.PRNGKey(0))
+
+
+def test_one_chunk_per_decode_iteration():
+    """The mixed step co-runs at most ONE prefill chunk with the decode
+    batch (the bounded-stall contract): every chunk_trace iteration
+    index is distinct, and chunks of one request are granted in cursor
+    order."""
+    cfg = _smoke("socket")
+    rng = np.random.default_rng(4)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (40, 33, 24)]
+    engine, reqs, m = _run(cfg, prompts, steps=4)
+    trace = engine.chunk_trace
+    assert len(trace) == m.prefill_chunks == 3 + 3 + 2  # ceil(n/16) each
+    iters = [it for it, _, _, _ in trace]
+    assert len(set(iters)) == len(iters), "co-ran chunks in one iteration"
+    for rid in {rid for _, rid, _, _ in trace}:
+        starts = [s for _, r, s, _ in trace if r == rid]
+        assert starts == sorted(starts)
+
+
+# -------------------------------------------------- preemption resume
+
+
+def _pressure_cfg(cfg, num_blocks):
+    return cfg.replace(serving=cfg.serving.replace(
+        num_blocks=num_blocks, max_batch=2))
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.8])
+@pytest.mark.parametrize("chunk", [16, 0])
+def test_chunked_preemption_resume_token_exact(temperature, chunk):
+    """Pool pressure with multi-chunk prompts: preempted requests must
+    re-chunk from cursor 0 and reproduce the unpressured run exactly —
+    greedy AND sampled (the per-request PRNG key is re-installed at
+    re-admission and replay re-advances it step for step; ``chunk=0``
+    extends the pre-existing preemption parity coverage to sampled
+    decoding on the legacy whole-bucket path too)."""
+    cfg = _with_chunk(_smoke("socket"), chunk)
+    rng = np.random.default_rng(5)
+    prompts = [rng.integers(0, cfg.vocab_size, size=24).tolist()
+               for _ in range(2)]
+
+    def serve(num_blocks):
+        _, reqs, m = _run(_pressure_cfg(cfg, num_blocks), prompts,
+                          steps=20, temperature=temperature, seed=7)
+        return reqs, m
+
+    hot, mh = serve(9)
+    calm, mc = serve(48)
+    assert mh.preemptions > 0 and mc.preemptions == 0
+    for h, c in zip(hot, calm):
+        assert h.state == FINISHED and len(h.generated) == 20
+        assert h.generated == c.generated
+
+
+def test_sampled_stream_is_composition_independent():
+    """A request's sampled tokens are a pure function of (seed,
+    submission index, token index): serving it alone or alongside
+    co-tenants must draw the same tokens — keys live on the request and
+    only advance on its own emissions."""
+    cfg = _smoke("socket")
+    rng = np.random.default_rng(6)
+    first = rng.integers(0, cfg.vocab_size, size=12).tolist()
+    others = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+              for n in (9, 17)]
+    _, alone, _ = _run(cfg, [first], steps=6, temperature=0.9, seed=11)
+    _, crowd, _ = _run(cfg, [first] + others, steps=6, temperature=0.9,
+                       seed=11)
+    assert alone[0].generated == crowd[0].generated
+
+
+# --------------------------------------------------- scheduler units
+
+
+def _chunked_sched(num_blocks=16, max_batch=2, chunk=16, bs=8):
+    return Scheduler(BlockPool(num_blocks), max_batch=max_batch,
+                     max_blocks_per_seq=8, block_size=bs,
+                     prefill_chunk=chunk)
+
+
+def test_scheduler_admits_on_first_chunk_blocks():
+    """Chunked admission asks for the first chunk only: with 3 free
+    blocks a 40-token prompt (5 prompt blocks over its lifetime) admits
+    on its 2 chunk-0 blocks + headroom, where whole-prompt admission
+    (5 + headroom) must refuse."""
+    s = _chunked_sched(num_blocks=8)
+    held = s.pool.alloc(4)                  # 3 of 7 usable blocks free
+    r = Request(prompt=[1] * 40, max_new_tokens=4, arrival=0.0)
+    s.submit(r)
+    assert s.try_admit(0.0) is r and len(r.blocks) == 2
+    assert r.prefill_pos == 0 and r in s.prefilling and s.has_work
+    s.pool.free(held)
+
+    legacy = Scheduler(BlockPool(8), max_batch=2, max_blocks_per_seq=8,
+                       block_size=8)
+    legacy.pool.alloc(4)
+    legacy.submit(Request(prompt=[1] * 40, max_new_tokens=4, arrival=0.0))
+    assert legacy.try_admit(0.0) is None
+
+
+def test_scheduler_grant_chunk_grows_and_finalizes():
+    s = _chunked_sched(num_blocks=16)
+    r = Request(prompt=[1] * 40, max_new_tokens=4, arrival=0.0)
+    s.submit(r)
+    s.try_admit(0.0)
+    got = []
+    while True:
+        ch = s.grant_chunk(r)
+        got.append((ch.start, ch.tokens, ch.final))
+        assert len(r.blocks) == -(-(ch.start + ch.tokens) // 8)
+        s.advance_chunk(r, ch)
+        if ch.final:
+            break
+    assert got == [(0, 16, False), (16, 16, False), (32, 8, True)]
+    s.activate(r)
+    assert r.state == "decode" and not s.prefilling
+
+
+def test_scheduler_chunk_grant_waits_and_decode_growth_evicts_prefiller():
+    """Chunk grants never evict decoders — on pool exhaustion the grant
+    is withheld (request stays PREFILL) until blocks free up, which
+    prevents the admit/evict ping-pong between a cheap first-chunk
+    admission and the decoder it displaced.  Decode *growth* outranks
+    the prefiller: ensure_decode_blocks may evict it mid-prefill, which
+    resets the chunk cursor so resume re-chunks from zero."""
+    s = _chunked_sched(num_blocks=6)        # 5 usable blocks
+    d = Request(prompt=[2] * 16, max_new_tokens=8, arrival=0.0)
+    s.submit(d)
+    s.try_admit(0.0)
+    ch = s.grant_chunk(d)                   # single final chunk: 2 blocks
+    assert ch.final
+    s.advance_chunk(d, ch)
+    s.activate(d)
+    p = Request(prompt=[3] * 32, max_new_tokens=8, arrival=0.1)
+    s.submit(p)
+    assert s.try_admit(1.0) is p            # chunk 0: 2 blocks (4 used)
+    assert p in s.prefilling
+    s.advance_chunk(p, s.grant_chunk(p))
+    ch = s.grant_chunk(p)                   # needs 2 more, 1 free -> waits
+    assert ch is None
+    assert p.state == "prefill" and p.prefill_pos == 16
+    assert d.state == "decode" and d.preemptions == 0
+
+    # decoder frees its blocks (finished) -> the withheld grant proceeds
+    s.finish(d, now=2.0)
+    ch = s.grant_chunk(p)
+    assert ch is not None and ch.final and len(p.blocks) == 4
+
+    # decode growth evicting the mid-prefill request resets its cursor
+    s.preempt(p)
+    assert p.prefill_pos == 0 and p.state == "waiting"
+    assert p not in s.prefilling and s.pool.num_used == 0
+
+
+def test_engine_decode_growth_preempts_prefiller_token_exact(monkeypatch):
+    """End-to-end **mid-prefill** preemption: two growing decoders evict
+    the in-flight chunked prefill (the 40-token prompt is caught with 2
+    of 3 chunks committed — pinned via a preemption spy), the engine
+    drops its cursor, and the evicted request still finishes with the
+    exact unpressured tokens."""
+    cfg = _smoke("socket")
+    rng = np.random.default_rng(10)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (15, 23, 40)]
+    seen = []
+    orig = Scheduler.preempt
+
+    def spy(self, req):
+        seen.append((req.state, req.prefill_pos))
+        orig(self, req)
+
+    monkeypatch.setattr(Scheduler, "preempt", spy)
+
+    def serve(num_blocks):
+        _, reqs, m = _run(cfg.replace(serving=cfg.serving.replace(
+            num_blocks=num_blocks, max_batch=3)), prompts, steps=16)
+        return reqs, m
+
+    hot, mh = serve(13)
+    # evicted with a strict subset of its chunks committed
+    assert any(s == "prefill" and 0 < c < 40 for s, c in seen), seen
+    seen.clear()
+    calm, mc = serve(48)
+    assert mh.preemptions > 0 and mc.preemptions == 0
+    for h, c in zip(hot, calm):
+        assert h.state == FINISHED and h.generated == c.generated
+
+
+# ------------------------------------------------- warmup + metrics
+
+
+def test_warmup_compiles_only_needed_shapes():
+    """Chunked warmup needs exactly the mixed + decode steps (no bucket
+    zoo); legacy warmup given the workload warms only the buckets those
+    prompts hit."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _smoke("socket")
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    eng.warmup()
+    assert eng._prefill_fns == {}           # no per-bucket compiles
+
+    legacy = ContinuousBatchingEngine(_with_chunk(cfg, 0),
+                                      rng=jax.random.PRNGKey(0))
+    reqs = [Request(prompt=[1] * 9, max_new_tokens=2, arrival=0.0),
+            Request(prompt=[1] * 30, max_new_tokens=2, arrival=0.0)]
+    legacy.warmup(reqs)
+    assert sorted(legacy._prefill_fns) == [24, 32]
+
+
+def test_serve_metrics_report_stall_and_chunks():
+    cfg = _smoke("socket")
+    rng = np.random.default_rng(8)
+    prompts = [rng.integers(0, cfg.vocab_size, size=24).tolist()
+               for _ in range(2)]
+    _, _, m = _run(cfg, prompts, steps=4)
+    assert m.prefill_chunks == 4            # two 24-token prompts, C=16
+    assert np.isfinite(m.intertoken_stall_s_max)
+    assert np.isfinite(m.decode_iter_s_p99)
+    assert m.intertoken_stall_s_max >= 0
+    j = m.to_json()
+    assert {"prefill_chunks", "intertoken_stall_s_max",
+            "decode_iter_s_p99"} <= set(j)
+
+
+# --------------------------------------------------- mamba chunk carry
+
+
+def test_mamba_chunk_carry_is_bit_exact():
+    """mamba_train(h0, conv0) segment chaining: running a sequence as
+    two chunks (boundary on the ssm_chunk grid) must reproduce the
+    whole-sequence output and final state bit-for-bit — the carried
+    conv tail replaces the zero left-pad exactly."""
+    from repro.models import mamba as mb
+    from repro.models import param as pm
+
+    cfg = get_config("mamba2-780m").smoke()
+    rng = jax.random.PRNGKey(0)
+    params = pm.unbox(mb.init_mamba(cfg, rng))
+    s = 2 * cfg.ssm_chunk
+    x = jax.random.normal(jax.random.fold_in(rng, 1), (2, s, cfg.d_model))
+
+    y_ref, st_ref = mb.mamba_train(cfg, params, x, return_state=True)
+    cut = cfg.ssm_chunk
+    y1, st1 = mb.mamba_train(cfg, params, x[:, :cut], return_state=True)
+    y2, st2 = mb.mamba_train(cfg, params, x[:, cut:], h0=st1["ssm"],
+                             conv0=st1["conv"], return_state=True)
+    np.testing.assert_array_equal(np.asarray(y_ref[:, :cut]),
+                                  np.asarray(y1))
+    np.testing.assert_array_equal(np.asarray(y_ref[:, cut:]),
+                                  np.asarray(y2))
+    np.testing.assert_array_equal(np.asarray(st_ref["ssm"]),
+                                  np.asarray(st2["ssm"]))
+    np.testing.assert_array_equal(np.asarray(st_ref["conv"]),
+                                  np.asarray(st2["conv"]))
