@@ -33,7 +33,6 @@ bound, ``iter_ms_p99`` the per-iteration tail.
 from __future__ import annotations
 
 import argparse
-import json
 
 HYBRID_ARCHS = {"hybrid_gemma3": "gemma3-27b", "hybrid_jamba":
                 "jamba-v0.1-52b"}
@@ -106,16 +105,26 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         # warmup=True: exclude jit compiles from the timed region, like
         # the static baseline's explicit warm-up — else TTFT/p99 compare
         # compile time against steady-state decode.
-        reqs, m = run_continuous(cfg, num_requests, rate_rps=50.0,
-                                 prompt_lens=lens, max_new_tokens=max_new,
-                                 seed=0, warmup=True)
+        # The plain-socket row also samples the selection-quality probe
+        # (recall vs dense top-k, budget utilization) — the bench JSON
+        # then carries a per-run "is selection still sane" pulse.
+        obs = None
+        if backend == "socket":
+            from repro.serving.obs import Observability
+            obs = Observability(probe_every=4)
+        reqs, m, _ = run_continuous(cfg, num_requests, rate_rps=50.0,
+                                    prompt_lens=lens,
+                                    max_new_tokens=max_new,
+                                    seed=0, warmup=True, obs=obs)
         assert all(r.state == "finished" for r in reqs)
         # memory-traffic accounting: bytes a decode step would move by
         # materializing full contiguous cache views vs what the paged
         # backend actually gathers (metadata + top-k K/V rows; ~0 when
         # the fused paged kernel consumes the pool in place)
-        rows.append((f"serve_continuous_{backend}",
-                     _serve_row(m, num_requests, cfg)))
+        row = _serve_row(m, num_requests, cfg)
+        if obs is not None:
+            row["probe"] = obs.probe_summary()
+        rows.append((f"serve_continuous_{backend}", row))
 
         # static lockstep baseline: same #sequences at the mean length
         # (the fused kernel only exists on the paged path — its static
@@ -149,9 +158,10 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
                 f"{name} serving context ceiling ({ceiling})")
         lens = sorted({max(1, top // 2), top})
         n = min(4, num_requests)
-        reqs, m = run_continuous(cfg, n, rate_rps=50.0, prompt_lens=lens,
-                                 max_new_tokens=max_new, seed=0,
-                                 warmup=True)
+        reqs, m, _ = run_continuous(cfg, n, rate_rps=50.0,
+                                    prompt_lens=lens,
+                                    max_new_tokens=max_new, seed=0,
+                                    warmup=True)
         assert all(r.state == "finished" for r in reqs)
         rows.append((f"serve_continuous_{name}", _serve_row(m, n, cfg)))
 
@@ -172,9 +182,11 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
                        ("unchunked", 0)):
         cfg = base.replace(serving=base.serving.replace(
             prefill_chunk=chunk))
-        reqs, m = run_continuous(cfg, len(lens), rate_rps=50.0,
-                                 prompt_lens=lens, max_new_tokens=max_new,
-                                 seed=0, warmup=True, arrivals=arrivals)
+        reqs, m, _ = run_continuous(cfg, len(lens), rate_rps=50.0,
+                                    prompt_lens=lens,
+                                    max_new_tokens=max_new,
+                                    seed=0, warmup=True,
+                                    arrivals=arrivals)
         assert all(r.state == "finished" for r in reqs)
         rows.append((f"serve_longprompt_{tag}",
                      _serve_row(m, len(lens), cfg)))
@@ -195,9 +207,15 @@ def main():
     for name, metrics in rows:
         print(name, metrics)
     if args.json:
+        # strict JSON: empty-series metrics are NaN (e.g. a static row's
+        # throughput with decode_s == 0), and json.dump would write the
+        # non-strict `NaN` token — serialize non-finite floats as null
+        # instead (CI validates the artifact with
+        # `python -m repro.serving.obs.validate --json`).
+        from repro.serving.obs.events import strict_dumps
         with open(args.json, "w") as f:
-            json.dump({name: metrics for name, metrics in rows}, f,
-                      indent=2, sort_keys=True)
+            f.write(strict_dumps({name: metrics for name, metrics in rows},
+                                 indent=2, sort_keys=True))
 
 
 if __name__ == "__main__":

@@ -19,7 +19,6 @@ Two engines:
 from __future__ import annotations
 
 import argparse
-import json
 import time
 
 import jax
@@ -30,6 +29,10 @@ from repro.configs import get_config
 from repro.models import param as pm
 from repro.models import transformer as tfm
 from repro.runtime.steps import make_prefill_step, make_serve_step
+# strict JSON: NaN/Infinity serialized as null, never the non-strict
+# tokens (an empty-series percentile is NaN; json.dumps would happily
+# emit `NaN`, which no compliant parser accepts)
+from repro.serving.obs.events import strict_dumps
 
 # serving-surface backend names: the real DecodeBackend registry plus the
 # socket_fused pseudo-backend (socket + cfg.socket.use_paged_kernel — the
@@ -129,8 +132,10 @@ def serving_ceiling(cfg) -> int:
 def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
                    max_new_tokens: int, seed: int = 0, realtime=True,
                    warmup=False, temperature: float = 0.0,
-                   top_p: float = 1.0, arrivals=None):
-    """Continuous-batching serve; returns (requests, ServeMetrics).
+                   top_p: float = 1.0, arrivals=None, obs=None):
+    """Continuous-batching serve; returns (requests, ServeMetrics,
+    engine) — the engine exposes the run's metrics registry
+    (``engine.registry``) for snapshot / Prometheus exposition.
 
     ``warmup=True`` pre-compiles the shapes this workload needs (chunked
     mode: the mixed + decode steps; legacy: only the buckets the prompts
@@ -139,12 +144,14 @@ def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
     (temperature + nucleus top-p, per-request seeded PRNG); the default
     is greedy, bit-exact vs the static engine.  ``arrivals``: optional
     explicit per-request arrival times overriding the Poisson draw
-    (cycled over ``prompt_lens`` in order).
+    (cycled over ``prompt_lens`` in order).  ``obs``: optional
+    :class:`repro.serving.obs.Observability` bundle (event trace /
+    selection probe / profiler) threaded into the engine.
     """
     from repro.serving.engine import ContinuousBatchingEngine
     engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed),
                                       temperature=temperature, top_p=top_p,
-                                      sample_seed=seed)
+                                      sample_seed=seed, obs=obs)
     if arrivals is None:
         reqs = make_poisson_requests(cfg, num_requests, rate_rps,
                                      prompt_lens, max_new_tokens, seed=seed)
@@ -162,7 +169,7 @@ def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
     if warmup:
         engine.warmup(reqs)
     metrics = engine.run(reqs, realtime=realtime)
-    return reqs, metrics
+    return reqs, metrics, engine
 
 
 def main():
@@ -194,6 +201,30 @@ def main():
                          "iteration (continuous engine; 0 = legacy "
                          "whole-prompt bucketed prefill; default: the "
                          "config's serving.prefill_chunk)")
+    # observability (continuous engine)
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="stream a schema-validated JSONL event trace "
+                         "of the run to FILE")
+    ap.add_argument("--perfetto", default=None, metavar="FILE",
+                    help="also export the trace as Chrome trace-event "
+                         "JSON (open at https://ui.perfetto.dev); "
+                         "requires --trace")
+    ap.add_argument("--metrics-json", default=None, metavar="FILE",
+                    help="write the run's metrics-registry snapshot as "
+                         "strict JSON")
+    ap.add_argument("--metrics-prom", default=None, metavar="FILE",
+                    help="write the run's metrics registry in "
+                         "Prometheus text exposition format")
+    ap.add_argument("--probe-every", type=int, default=0,
+                    help="sample the SOCKET selection-quality probe "
+                         "every N engine iterations (0 = off; socket "
+                         "backend, kvhead/pooled selection)")
+    ap.add_argument("--profile-dir", default=None,
+                    help="capture a jax.profiler trace of the engine "
+                         "loop into this directory")
+    ap.add_argument("--profile-steps", type=int, default=20,
+                    help="profiled window length in engine iterations "
+                         "(with --profile-dir)")
     args = ap.parse_args()
 
     if args.backend == "socket_fused" and args.engine != "continuous":
@@ -210,6 +241,15 @@ def main():
     if args.prefill_chunk is not None and args.engine != "continuous":
         ap.error("--prefill-chunk requires --engine continuous: chunked "
                  "prefill is the continuous engine's execution model")
+    obs_flags = (args.trace, args.perfetto, args.metrics_json,
+                 args.metrics_prom, args.profile_dir)
+    if (any(f is not None for f in obs_flags) or args.probe_every) \
+            and args.engine != "continuous":
+        ap.error("observability flags (--trace/--perfetto/--metrics-*/"
+                 "--probe-every/--profile-dir) require --engine "
+                 "continuous")
+    if args.perfetto and not args.trace:
+        ap.error("--perfetto needs --trace (it exports the event trace)")
 
     cfg = get_config(args.arch)
     if args.smoke:
@@ -233,11 +273,18 @@ def main():
                      f"({ceiling} tokens)")
         lens = sorted({max(1, top // 4), max(1, top // 2),
                        max(1, (3 * top) // 4), top})
-        reqs, m = run_continuous(cfg, args.num_requests, args.rate, lens,
-                                 max_new, seed=args.seed,
-                                 temperature=args.temperature,
-                                 top_p=args.top_p)
-        print(json.dumps({
+        obs = None
+        if any(f is not None for f in obs_flags) or args.probe_every:
+            from repro.serving.obs import Observability
+            obs = Observability(args.trace, probe_every=args.probe_every,
+                                profile_dir=args.profile_dir,
+                                profile_steps=args.profile_steps)
+        reqs, m, engine = run_continuous(cfg, args.num_requests,
+                                         args.rate, lens,
+                                         max_new, seed=args.seed,
+                                         temperature=args.temperature,
+                                         top_p=args.top_p, obs=obs)
+        report = {
             "arch": cfg.name, "backend": args.backend,
             "engine": "continuous",
             "prefill_chunk": sv.prefill_chunk,
@@ -247,14 +294,29 @@ def main():
             "top_p": args.top_p,
             "finished": sum(r.state == "finished" for r in reqs),
             **m.to_json(),
-        }, indent=2))
+        }
+        if obs is not None:
+            obs.close()
+            if args.probe_every:
+                report["probe"] = obs.probe_summary()
+            if args.perfetto:
+                from repro.serving.obs import write_chrome_trace
+                write_chrome_trace(args.trace, args.perfetto)
+            if args.metrics_json:
+                with open(args.metrics_json, "w") as f:
+                    f.write(strict_dumps(engine.registry.snapshot(),
+                                         indent=2, sort_keys=True))
+            if args.metrics_prom:
+                with open(args.metrics_prom, "w") as f:
+                    f.write(engine.registry.prometheus_text())
+        print(strict_dumps(report, indent=2))
         return
 
     toks, prefill_s, decode_s = run_serve(cfg, args.batch, args.prompt_len,
                                           args.decode_steps,
                                           seed=args.seed)
     tput = args.batch * args.decode_steps / decode_s
-    print(json.dumps({
+    print(strict_dumps({
         "arch": cfg.name, "backend": args.backend, "engine": "static",
         "prefill_s": round(prefill_s, 3),
         "decode_s": round(decode_s, 3),

@@ -1,0 +1,160 @@
+"""Selection-quality probe capture for sparse decode backends.
+
+The serving engine's sampled probe (see
+:mod:`repro.serving.obs.probe`) answers "is the kernel still selecting
+the right tokens under serving pressure?" by re-running one decode step
+through a **separately-jitted shadow step** traced inside
+:func:`capture`.  While the capture flag is up (a trace-time Python
+flag, so the production decode step contains zero probe ops),
+``SocketBackend.attend``:
+
+* routes through the unfused XLA selection path (the fused Pallas kernel
+  never materializes indices — and its selected set is pinned elsewhere
+  to match :func:`~repro.core.socket.value_aware_topk` exactly, so the
+  XLA selection *is* the fused kernel's selection);
+* computes :func:`selection_stats` in-graph — budget utilization,
+  selection recall against the exact dense attention-mass top-k, and the
+  forced sink/window share — and ships the small per-request vectors to
+  the host through ``jax.debug.callback`` (fires once per attention
+  layer, in execution order, including under ``lax.scan``).
+
+The host drains :func:`drain` after the shadow step executes; call order
+identifies the layer.  The probe runs **off the hot path**: the shadow
+step is its own compile, its outputs are discarded, and nothing here is
+ever staged into the production step.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import socket as sk
+
+__all__ = ["capture", "capturing", "drain", "emit", "selection_stats"]
+
+_CAPTURING = False
+_SINK: List[Dict] = []
+
+
+def capturing() -> bool:
+    """True while a probe shadow step is being traced (trace-time flag)."""
+    return _CAPTURING
+
+
+@contextlib.contextmanager
+def capture():
+    """Raise the capture flag for tracing (and executing) a shadow step."""
+    global _CAPTURING
+    prev, _CAPTURING = _CAPTURING, True
+    try:
+        yield
+    finally:
+        _CAPTURING = prev
+
+
+def _sink_cb(stats: Dict) -> None:
+    _SINK.append({k: jax.device_get(v) for k, v in stats.items()})
+
+
+def emit(stats: Dict) -> None:
+    """Stage a host callback delivering ``stats`` (a dict of small
+    arrays) at execution time; one call per probed attention layer.
+    ``ordered=True`` pins execution order to program order, so the
+    drained list indexes layers deterministically (scan iterations
+    included)."""
+    jax.debug.callback(_sink_cb, stats, ordered=True)
+
+
+def drain() -> List[Dict]:
+    """Pop everything the last shadow-step execution delivered, in layer
+    execution order."""
+    out, _SINK[:] = list(_SINK), []
+    return out
+
+
+def selection_stats(scfg: sk.SocketConfig, q: jax.Array, k_full: jax.Array,
+                    vnorm: jax.Array, idx: jax.Array, sel_mask: jax.Array,
+                    *, length, budget: Optional[jax.Array],
+                    static_k: int, scale: float) -> Dict[str, jax.Array]:
+    """Per-request selection-quality stats for one layer's decode step.
+
+    The dense reference is the exact attention mass each key would
+    receive under full (non-sparse) attention: ``softmax(q·k)`` summed
+    over the query group — its top-``m`` set (``m`` = the request's
+    realized selection count) is what a perfect selector with the same
+    budget would pick.  Recall is the fraction of that reference set the
+    SOCKET selection actually covered.
+
+    Args:
+      q:        ``(B, KVH, G, 1, hd)`` this step's queries.
+      k_full:   ``(B, KVH, N, hd)`` the logical key view (probe-only
+                materialization — the production path never does this).
+      vnorm:    ``(B, KVH, N)`` value norms (kept for schema parity /
+                future value-weighted reference variants).
+      idx:      ``(B, KVH, K)`` selected logical indices.
+      sel_mask: ``(B, KVH, K)`` selection validity (budget applied).
+      length:   scalar or ``(B,)`` live context lengths.
+      budget:   per-request dynamic budgets ``(B,)`` or None (static).
+      static_k: the static selection width K.
+      scale:    attention logit scale.
+
+    Returns dict of ``(B,)`` float32 vectors: ``recall``,
+    ``budget_utilization`` (selected / static K), ``forced_share``
+    (fraction of selections that were force-included sink/window
+    tokens), ``selected`` and ``budget`` (counts, KVH-averaged where
+    applicable).  Inactive slots (length 0) report zeros; the engine
+    masks them out with its ``active`` vector anyway.
+    """
+    del vnorm
+    b, kvh, n = k_full.shape[0], k_full.shape[1], k_full.shape[2]
+    pos = jnp.arange(n, dtype=jnp.int32)
+    length_b = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    valid = pos[None] < length_b[:, None]                     # (B, N)
+
+    # exact dense attention mass per key, summed over the query group
+    logits = jnp.einsum("bhgtd,bhnd->bhgtn", q.astype(jnp.float32),
+                        k_full.astype(jnp.float32)) * scale
+    logits = jnp.where(valid[:, None, None, None, :], logits, sk.NEG_INF)
+    mass = jnp.sum(jax.nn.softmax(logits, axis=-1), axis=(2, 3))  # (B,KVH,N)
+
+    m = jnp.sum(sel_mask, axis=-1)                            # (B, KVH)
+    _, dense_idx = jax.lax.top_k(mass, static_k)              # (B,KVH,K)
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(kvh)[None, :, None]
+    dense_keep = (jnp.arange(static_k)[None, None, :] < m[:, :, None]) \
+        & valid[:, None][bidx, jnp.zeros_like(hidx), dense_idx]
+
+    def onehot(indices, keep):
+        base = jnp.zeros((b, kvh, n), jnp.int32)
+        return base.at[bidx, hidx, indices].add(keep.astype(jnp.int32)) > 0
+
+    sel_set = onehot(idx, sel_mask)
+    dense_set = onehot(dense_idx, dense_keep)
+    inter = jnp.sum(sel_set & dense_set, axis=-1)             # (B, KVH)
+    denom = jnp.maximum(1, jnp.sum(dense_set, axis=-1))
+    recall = jnp.mean(inter / denom, axis=1)                  # (B,)
+
+    forced = (pos[None] < scfg.sink_tokens) | \
+        (pos[None] >= (length_b[:, None] - scfg.window_tokens))
+    forced_sel = forced[:, None][bidx, jnp.zeros_like(hidx), idx]  # (B,KVH,K)
+    n_forced = jnp.sum(sel_mask & forced_sel, axis=-1)
+    forced_share = jnp.mean(n_forced / jnp.maximum(1, m), axis=1)
+
+    selected = jnp.mean(m.astype(jnp.float32), axis=1)        # (B,)
+    if budget is None:
+        budget_b = jnp.full((b,), static_k, jnp.float32)
+    else:
+        budget_b = jnp.broadcast_to(jnp.asarray(budget),
+                                    (b,)).astype(jnp.float32)
+    return {
+        "recall": recall.astype(jnp.float32),
+        "budget_utilization": selected / float(static_k),
+        "forced_share": forced_share.astype(jnp.float32),
+        "selected": selected,
+        "budget": budget_b,
+        "static_k": jnp.int32(static_k),
+    }

@@ -29,6 +29,7 @@ import jax.numpy as jnp
 from repro.core import hashing
 from repro.core import socket as sk
 from repro.models.backends import base
+from repro.models.backends import probe as bprobe
 from repro.models.backends.base import ContiguousView, KVView, LeafSpec
 
 __all__ = ["SocketBackend", "socket_config_of"]
@@ -170,7 +171,13 @@ class SocketBackend(base.DecodeBackend):
         n = view.n_tokens
         budget = self._budget(cfg, length, n)
 
-        if cfg.socket.use_paged_kernel and isinstance(view, base.PagedView):
+        # Probe shadow steps take the unfused XLA route even when the
+        # fused kernel is on: the fused pass never materializes its
+        # selection, and it is pinned elsewhere (differential harness)
+        # to match value_aware_topk exactly — so the XLA selection
+        # probed below IS the fused kernel's selection.
+        if cfg.socket.use_paged_kernel and isinstance(view, base.PagedView) \
+                and not bprobe.capturing():
             return self._attend_fused(cfg, params, q, view, length=length,
                                       scale=scale, budget=budget)
 
@@ -206,6 +213,11 @@ class SocketBackend(base.DecodeBackend):
             idx, sel_mask = sk.value_aware_topk(
                 scfg, scores, vnorm, k=kq, length=length, n_total=n,
                 budget=budget)
+            if bprobe.capturing():
+                bprobe.emit(bprobe.selection_stats(
+                    scfg, q, view.leaf("k"), vnorm, idx, sel_mask,
+                    length=length, budget=budget, static_k=kq,
+                    scale=scale))
             k_sel = view.gather_rows("k", idx)
             v_sel = view.gather_rows("v", idx)
             return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,

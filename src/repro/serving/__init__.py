@@ -1,9 +1,11 @@
 """Continuous-batching serving subsystem (paged KV + SOCKET bit-cache).
 
 See :mod:`repro.serving.engine` for the engine,
-:mod:`repro.serving.scheduler` for the request lifecycle and
+:mod:`repro.serving.scheduler` for the request lifecycle,
 :mod:`repro.serving.block_pool` / :mod:`repro.serving.paged` for the
-host- and device-side halves of the paged pool.  Design notes in
+host- and device-side halves of the paged pool, and
+:mod:`repro.serving.obs` for the observability layer (event tracing,
+metrics registry, selection probe, profiling).  Design notes in
 ``src/repro/serving/README.md``.
 """
 
@@ -13,7 +15,7 @@ from repro.serving.scheduler import (DECODE, FINISHED, PREFILL, WAITING,
 
 __all__ = ["BlockPool", "TRASH_BLOCK", "Request", "PrefillChunk",
            "Scheduler", "WAITING", "PREFILL", "DECODE", "FINISHED",
-           "ContinuousBatchingEngine", "ServeMetrics"]
+           "ContinuousBatchingEngine", "ServeMetrics", "Observability"]
 
 
 def __getattr__(name):
@@ -22,4 +24,7 @@ def __getattr__(name):
     if name in ("ContinuousBatchingEngine", "ServeMetrics"):
         from repro.serving import engine
         return getattr(engine, name)
+    if name == "Observability":
+        from repro.serving.obs import Observability
+        return Observability
     raise AttributeError(name)

@@ -33,6 +33,10 @@ class BlockPool:
         # LIFO free list: recently freed blocks are reused first (warm).
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
         self._allocated = [False] * num_blocks
+        # peak simultaneous allocation over the pool's lifetime — the
+        # capacity-planning number (how many blocks this workload
+        # actually needed)
+        self.high_water = 0
 
     @property
     def num_free(self) -> int:
@@ -54,7 +58,14 @@ class BlockPool:
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
             self._allocated[b] = True
+        if self.num_used > self.high_water:
+            self.high_water = self.num_used
         return blocks
+
+    def stats(self) -> dict:
+        """Occupancy snapshot for step records / gauges."""
+        return {"free": self.num_free, "used": self.num_used,
+                "high_water": self.high_water}
 
     def free(self, blocks: List[int]) -> None:
         for b in blocks:

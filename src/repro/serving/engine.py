@@ -52,7 +52,9 @@ composition never perturbs a request's randomness.
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import math
 import time
 from typing import Dict, List, Optional, Tuple
 
@@ -68,6 +70,8 @@ from repro.runtime.steps import (make_chunk_prefill_step, make_prefill_step,
                                  make_serve_step)
 from repro.serving import paged, sampling
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
+from repro.serving.obs import Observability
+from repro.serving.obs.metrics import Registry
 from repro.serving.scheduler import (PREFILL, PrefillChunk, Request,
                                      Scheduler)
 
@@ -97,12 +101,15 @@ class ServeMetrics:
     decode_iter_s_p99: float
 
     def to_json(self) -> Dict:
-        return {k: (round(v, 6) if isinstance(v, float) else v)
-                for k, v in dataclasses.asdict(self).items()}
-
-
-def _percentile(xs: List[float], q: float) -> float:
-    return float(np.percentile(np.asarray(xs), q)) if xs else float("nan")
+        """Strict-JSON dict: non-finite floats (empty-series percentiles
+        are NaN) become ``None``/``null`` — ``NaN`` is not JSON and a
+        default ``json.dump`` of it breaks every compliant consumer."""
+        out = {}
+        for k, v in dataclasses.asdict(self).items():
+            if isinstance(v, float):
+                v = round(v, 6) if math.isfinite(v) else None
+            out[k] = v
+        return out
 
 
 class ContinuousBatchingEngine:
@@ -111,7 +118,8 @@ class ContinuousBatchingEngine:
     def __init__(self, cfg: ModelConfig, params=None,
                  rng: Optional[jax.Array] = None, *,
                  temperature: float = 0.0, top_p: float = 1.0,
-                 sample_seed: int = 0):
+                 sample_seed: int = 0,
+                 obs: Optional[Observability] = None):
         self._validate(cfg)
         self.cfg = cfg
         self.serving = cfg.serving
@@ -150,10 +158,83 @@ class ContinuousBatchingEngine:
         # (iteration, rid, chunk.start, chunk.tokens) per chunk co-run —
         # lets tests pin "never more than one chunk per decode iteration"
         self.chunk_trace: List[Tuple[int, int, int, int]] = []
+        # ---- observability ----------------------------------------------
+        # The metrics registry is always on (pure-Python counters; the
+        # end-of-run ServeMetrics derive from it).  Everything else —
+        # tracer, probe, profiler — only exists when ``obs`` is given:
+        # with obs=None the hot loop allocates zero tracing objects per
+        # step (pinned by tests/test_observability.py).
+        self.obs = obs
+        self.registry = Registry()
+        self._bind_instruments(self.registry)
+        self._probe_fn = None
+        self._compile_seen: set = set()
+        self._probe_capable = (cfg.attention_backend == "socket"
+                               and cfg.socket.selection in ("kvhead",
+                                                            "pooled")
+                               and has_paged)
+        if obs is not None:
+            counts = paged.cache_kind_counts(cfg)
+            obs.tracer.ensure_start(
+                arch=cfg.name, backend=cfg.attention_backend,
+                prefill_chunk=self.serving.prefill_chunk,
+                layers_paged=counts["paged"], layers_ring=counts["ring"],
+                layers_state=counts["state"])
 
     @property
     def chunked(self) -> bool:
         return self.serving.prefill_chunk > 0
+
+    # ------------------------------------------------------ observability
+    def _bind_instruments(self, reg: Registry) -> None:
+        """Create (or re-bind, at run start) the run-scoped serving
+        series.  ``exact=True``: these histograms also retain samples,
+        so end-of-run ServeMetrics percentiles are byte-identical to a
+        direct ``np.percentile`` over the recorded series."""
+        self._c_tokens = reg.counter("serve_tokens_total")
+        self._h_ttft = reg.histogram("serve_ttft_s", exact=True)
+        self._h_lat = reg.histogram("serve_token_latency_s", exact=True)
+        self._h_stall = reg.histogram("serve_intertoken_stall_s",
+                                      exact=True)
+        self._h_iter = reg.histogram("serve_iter_s", exact=True)
+
+    def _set_gauges(self, reg: Registry) -> None:
+        st = self.pool.stats()
+        reg.gauge("pool_blocks_free").set(st["free"])
+        reg.gauge("pool_blocks_used").set(st["used"])
+        reg.gauge("pool_blocks_high_water").set(st["high_water"])
+        sched = self.scheduler
+        reg.gauge("batch_running").set(len(sched.running))
+        reg.gauge("batch_prefilling").set(len(sched.prefilling))
+        reg.gauge("batch_waiting").set(len(sched.waiting))
+
+    def _note_call(self, tag: str, seconds: float) -> None:
+        """First dispatch of a jitted shape = trace + compile + run;
+        record it as a compile event so latency analysis can discount
+        it (warmup marks the shapes it covers)."""
+        if tag in self._compile_seen:
+            return
+        self._compile_seen.add(tag)
+        if self.obs is not None:
+            self.obs.tracer.emit("compile", fn=tag,
+                                 seconds=round(seconds, 6))
+
+    def _note_token(self, req: Request, w: float) -> None:
+        """Per-emitted-token bookkeeping shared by the decode loop and
+        the first-token prefill sites."""
+        self._c_tokens.inc()
+        req.token_walls.append(w)
+        if len(req.token_walls) >= 2:
+            self._h_stall.record(req.token_walls[-1]
+                                 - req.token_walls[-2])
+
+    def _note_first_token(self, req: Request, t: float) -> None:
+        req.t_first_token = t
+        ttft = t - req.arrival
+        self._h_ttft.record(ttft)
+        if self.obs is not None:
+            self.obs.tracer.emit("first_token", rid=req.rid,
+                                 ttft_s=round(ttft, 6))
 
     @staticmethod
     def _validate(cfg: ModelConfig) -> None:
@@ -286,27 +367,34 @@ class ContinuousBatchingEngine:
                       jnp.int32)
         pos = jnp.zeros((sv.max_batch,), jnp.int32)
         active = jnp.zeros((sv.max_batch,), bool)
+        t_w = time.perf_counter()
         _, _, self.pages = self._decode_fn(self.params, self.pages,
                                            self._keys, tokens, bt, pos,
                                            active)
+        self._note_call("decode", time.perf_counter() - t_w)
         if self.chunked:
             ch_bt = jnp.full((self._chunk_bt_len(),), TRASH_BLOCK,
                              jnp.int32)
+            t_w = time.perf_counter()
             _, _, _, self.pages = self._mixed_fn(
                 self.params, self.pages, self._keys,
                 jnp.zeros((1, sv.prefill_chunk), jnp.int32), ch_bt,
                 jnp.int32(0), jnp.int32(0), jnp.zeros((1,), jnp.int32),
                 jnp.asarray(False), tokens, bt, pos, active)
+            self._note_call("mixed", time.perf_counter() - t_w)
             return
         buckets = sv.prefill_buckets if requests is None else sorted(
             {self._bucket_for(len(r.prefill_tokens)) for r in requests})
         for bucket in buckets:
             bt_row = jnp.full((self._bt_row_len(bucket),), TRASH_BLOCK,
                               jnp.int32)
+            t_w = time.perf_counter()
             _, _, self.pages = self._prefill_fn(bucket)(
                 self.params, self.pages, self._keys,
                 jnp.zeros((1, bucket), jnp.int32),
                 jnp.zeros((1,), jnp.int32), bt_row, jnp.int32(0))
+            self._note_call(f"prefill_{bucket}",
+                            time.perf_counter() - t_w)
 
     def _bucket_for(self, n: int) -> int:
         for b in sorted(self.serving.prefill_buckets):
@@ -345,17 +433,33 @@ class ContinuousBatchingEngine:
         already-arrived (offline batch; deterministic, used by tests)."""
         sched = self.scheduler
         sv = self.serving
+        obs = self.obs
+        tracer = obs.tracer if obs is not None else None
+        probe = obs.probe if obs is not None and obs.probe.every > 0 \
+            and self._probe_capable else None
+        profiler = obs.profiler if obs is not None else None
+        reg = self.registry = Registry()    # run-scoped, like the metrics
+        self._bind_instruments(reg)
+        sched.bind_obs(reg, tracer)
         self.chunk_trace = []               # per-run, like the metrics
+        run_ord = tracer.begin_run(requests=len(requests)) if tracer \
+            else 0
         for r in requests:
             self._register(r)
             sched.submit(r)
+            if tracer:
+                tracer.emit("submit", rid=r.rid,
+                            prompt_tokens=len(r.prompt),
+                            max_new_tokens=r.max_new_tokens,
+                            arrival=float(r.arrival))
         t0 = time.perf_counter()
         wall = lambda: time.perf_counter() - t0
         now = wall if realtime else (lambda: float("inf"))
         stamp = wall if realtime else (lambda: 0.0)
         decode_iters = 0
-        iter_times: List[float] = []
-        chunks_run = 0
+        c_iters_mixed = reg.counter("serve_iters_total", kind="mixed")
+        c_iters_decode = reg.counter("serve_iters_total", kind="decode")
+        c_chunks = reg.counter("serve_chunks_total")
 
         while sched.has_work:
             chunk: Optional[PrefillChunk] = None
@@ -391,7 +495,7 @@ class ContinuousBatchingEngine:
                     self._install_key(req)
                     self._prefill_one(req, wall)
                     if req.t_first_token is None:
-                        req.t_first_token = stamp()
+                        self._note_first_token(req, stamp())
                     sched.activate(req)
                     if req.done:      # max_new_tokens == 1 degenerate case
                         sched.finish(req, stamp())
@@ -406,6 +510,8 @@ class ContinuousBatchingEngine:
                     if realtime and wait > 0:
                         time.sleep(min(wait, 0.05))
                 continue
+            if profiler is not None:
+                profiler.maybe_start(decode_iters, tracer)
             t_it = time.perf_counter()
             tokens = np.zeros((sv.max_batch, 1), np.int32)
             bt = np.full((sv.max_batch, sv.max_blocks_per_seq),
@@ -417,23 +523,33 @@ class ContinuousBatchingEngine:
                 bt[r.slot, :len(r.blocks)] = r.blocks
                 pos[r.slot] = r.pos
                 active[r.slot] = True
+            if probe is not None and runnable \
+                    and probe.due(decode_iters):
+                self._run_probe(decode_iters, tokens, bt, pos, active,
+                                runnable)
+            kind = "decode" if chunk is None else "mixed"
+            ann = profiler.annotate(kind) if profiler is not None \
+                else contextlib.nullcontext()
             if chunk is not None:
-                first_tok, next_tok = self._run_mixed(
-                    chunk, tokens, bt, pos, active)
+                with ann:
+                    first_tok, next_tok = self._run_mixed(
+                        chunk, tokens, bt, pos, active)
                 self.chunk_trace.append((decode_iters,
                                          self._prefilling.rid,
                                          chunk.start, chunk.tokens))
-                chunks_run += 1
+                c_chunks.inc()
                 self._finish_chunk(chunk, first_tok, wall, stamp)
             else:
-                next_tok, self._keys, self.pages = self._decode_fn(
-                    self.params, self.pages, self._keys,
-                    jnp.asarray(tokens), jnp.asarray(bt), jnp.asarray(pos),
-                    jnp.asarray(active))
+                with ann:
+                    next_tok, self._keys, self.pages = self._decode_fn(
+                        self.params, self.pages, self._keys,
+                        jnp.asarray(tokens), jnp.asarray(bt),
+                        jnp.asarray(pos), jnp.asarray(active))
             next_tok = np.asarray(next_tok)
             it_s = time.perf_counter() - t_it
-            iter_times.append(it_s)
-            decode_iters += 1
+            self._note_call(kind, it_s)
+            self._h_iter.record(it_s)
+            (c_iters_mixed if chunk is not None else c_iters_decode).inc()
             for r in runnable:
                 # post-preemption replay: steps whose output token is
                 # already recorded only rebuild the cache — the
@@ -443,14 +559,37 @@ class ContinuousBatchingEngine:
                 if not replaying:
                     r.generated.append(int(next_tok[r.slot]))
                     r.token_latencies.append(it_s)
-                    r.token_walls.append(wall())
+                    self._h_lat.record(it_s)
+                    self._note_token(r, wall())
                 r.pos += 1
                 if r.done and not replaying:
                     sched.finish(r, stamp())
+            self._set_gauges(reg)
+            if tracer:
+                st = self.pool.stats()
+                tracer.emit(
+                    "step", iter=decode_iters, kind=kind,
+                    occupancy=int(active.sum()),
+                    chunk_tokens=chunk.tokens if chunk is not None else 0,
+                    step_s=round(it_s, 6), pool_free=st["free"],
+                    pool_used=st["used"],
+                    pool_high_water=st["high_water"],
+                    waiting=len(sched.waiting),
+                    prefilling=len(sched.prefilling),
+                    running=len(sched.running))
+            decode_iters += 1
+            if profiler is not None:
+                profiler.maybe_stop(decode_iters, tracer)
 
+        if profiler is not None:
+            profiler.stop(tracer)           # run shorter than the window
         wall_total = time.perf_counter() - t0
-        return self._metrics(requests, wall_total, decode_iters,
-                             chunks_run, iter_times)
+        m = self._metrics(requests, wall_total)
+        if tracer:
+            tracer.end_run(run_ord, requests=len(requests),
+                           generated=m.total_generated,
+                           wall_s=round(wall_total, 6))
+        return m
 
     # ------------------------------------------------------------- chunk
     def _run_mixed(self, chunk: PrefillChunk, tokens, bt, pos, active):
@@ -482,9 +621,9 @@ class ContinuousBatchingEngine:
             return
         if not req.generated:
             req.generated.append(int(np.asarray(first_tok)))
-            req.token_walls.append(wall())
+            self._note_token(req, wall())
         if req.t_first_token is None:
-            req.t_first_token = stamp()
+            self._note_first_token(req, stamp())
         sched.activate(req)
         if req.done:                  # max_new_tokens == 1 degenerate case
             sched.finish(req, stamp())
@@ -498,40 +637,84 @@ class ContinuousBatchingEngine:
         bt_row = np.full((self._bt_row_len(bucket),), TRASH_BLOCK,
                          np.int32)
         bt_row[:len(req.blocks)] = req.blocks
+        t_p = time.perf_counter()
         first_tok, self._keys, self.pages = self._prefill_fn(bucket)(
             self.params, self.pages, self._keys, jnp.asarray(tokens),
             jnp.asarray([len(prompt) - 1], jnp.int32),
             jnp.asarray(bt_row), jnp.int32(req.slot))
+        self._note_call(f"prefill_{bucket}", time.perf_counter() - t_p)
         if not req.generated:
             req.generated.append(int(np.asarray(first_tok)[0]))
-            req.token_walls.append(wall())
+            self._note_token(req, wall())
         # resumed after preemption: the prefill only rebuilt the prompt's
         # caches (KV pages / window ring / SSM state — bit-exact
         # recomputation); recorded tokens now replay through the decode
         # path (the backend that originally produced them), so generation
         # is token-exact regardless of pool pressure.
 
-    def _metrics(self, requests: List[Request], wall: float,
-                 decode_iters: int, chunks_run: int,
-                 iter_times: List[float]) -> ServeMetrics:
-        ttfts = [r.t_first_token - r.arrival for r in requests
-                 if r.t_first_token is not None]
-        lats = [t for r in requests for t in r.token_latencies]
-        stalls = [b - a for r in requests
-                  for a, b in zip(r.token_walls, r.token_walls[1:])]
-        total = sum(len(r.generated) for r in requests)
+    # ------------------------------------------------------------- probe
+    def _run_probe(self, iteration: int, tokens, bt, pos, active,
+                   runnable: List[Request]) -> None:
+        """Sampled selection-quality probe: re-run the current decode
+        batch through a shadow step traced with the capture flag up
+        (:mod:`repro.models.backends.probe`), so every socket layer
+        ships per-request recall / budget-utilization / forced-share
+        stats to the host — then reduce over the active slots and emit
+        one ``probe`` event per layer.  The shadow step is jitted
+        WITHOUT donation (the production step still needs these pages)
+        and its outputs are discarded; the production decode fn contains
+        zero probe ops."""
+        from repro.models.backends import probe as bprobe
+        if self._probe_fn is None:
+            serve = make_serve_step(self.cfg)
+
+            def step(params, pages, keys, tokens, bt, pos, active):
+                return self._decode_body(serve, params, pages, keys,
+                                         tokens, bt, pos, active)
+
+            self._probe_fn = jax.jit(step)
+        t_p = time.perf_counter()
+        bprobe.drain()                      # drop anything stale
+        with bprobe.capture():
+            self._probe_fn(self.params, self.pages, self._keys,
+                           jnp.asarray(tokens), jnp.asarray(bt),
+                           jnp.asarray(pos), jnp.asarray(active))
+            jax.effects_barrier()           # flush the stat callbacks
+        self._note_call("probe", time.perf_counter() - t_p)
+        stats = bprobe.drain()
+        rows = self.obs.probe.add(iteration, stats,
+                                  [r.slot for r in runnable])
+        for row in rows:
+            self.obs.tracer.emit("probe", **row)
+            if row["recall"] is not None:
+                self.registry.histogram("probe_recall").record(
+                    row["recall"])
+                self.registry.histogram(
+                    "probe_budget_utilization").record(
+                        row["budget_utilization"])
+
+    # ----------------------------------------------------------- metrics
+    def _metrics(self, requests: List[Request],
+                 wall: float) -> ServeMetrics:
+        """End-of-run aggregate, derived entirely from the run's metrics
+        registry.  The serving histograms retain exact samples
+        (``exact=True``), so the percentiles below are byte-identical to
+        ``np.percentile`` over the per-request series the engine used to
+        aggregate directly (pinned by tests/test_observability.py)."""
+        reg = self.registry
+        total = int(reg.value("serve_tokens_total"))
         return ServeMetrics(
             num_requests=len(requests),
             total_generated=total,
             wall_s=wall,
             throughput_tok_s=total / wall if wall > 0 else float("nan"),
-            ttft_s_mean=float(np.mean(ttfts)) if ttfts else float("nan"),
-            ttft_s_p99=_percentile(ttfts, 99),
-            token_latency_s_p50=_percentile(lats, 50),
-            token_latency_s_p99=_percentile(lats, 99),
-            preemptions=sum(r.preemptions for r in requests),
-            decode_iters=decode_iters,
-            prefill_chunks=chunks_run,
-            intertoken_stall_s_max=max(stalls) if stalls else float("nan"),
-            decode_iter_s_p99=_percentile(iter_times, 99),
+            ttft_s_mean=self._h_ttft.mean_exact(),
+            ttft_s_p99=self._h_ttft.percentile_exact(99),
+            token_latency_s_p50=self._h_lat.percentile_exact(50),
+            token_latency_s_p99=self._h_lat.percentile_exact(99),
+            preemptions=int(reg.value("serve_preemptions_total")),
+            decode_iters=int(reg.value("serve_iters_total")),
+            prefill_chunks=int(reg.value("serve_chunks_total")),
+            intertoken_stall_s_max=self._h_stall.max_exact(),
+            decode_iter_s_p99=self._h_iter.percentile_exact(99),
         )

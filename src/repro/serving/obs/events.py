@@ -1,0 +1,167 @@
+"""Versioned event schema for the serving trace (JSONL, one event/line).
+
+Every event is a flat JSON object with two implicit fields — ``ev`` (the
+event type) and ``ts`` (seconds since the tracer's epoch, float) — plus
+the per-type fields tabulated in :data:`EVENT_SCHEMA`.  The first line
+of every trace is a ``trace_start`` event carrying
+:data:`SCHEMA_VERSION`; consumers must refuse traces whose version they
+do not understand.  One trace covers one engine's lifetime (warmup
+compiles included); each ``run()`` is bracketed by ``run_start`` /
+``run_end``.
+
+The schema is **strict** both ways: :func:`validate_event` rejects
+missing fields, wrong types, and unknown fields, so an emitted trace and
+the schema can never drift apart silently (the tracer validates every
+event at emit time, and CI re-validates the written file).
+
+JSON is strict too: ``NaN``/``Infinity`` are not JSON — floats that are
+not finite are serialized as ``null`` (:func:`sanitize`), and the
+loaders here reject the non-strict tokens outright
+(:func:`strict_loads`).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+from typing import Any, Dict, Iterable, List
+
+__all__ = ["SCHEMA_VERSION", "EVENT_SCHEMA", "validate_event",
+           "validate_jsonl", "sanitize", "strict_dumps", "strict_loads"]
+
+SCHEMA_VERSION = 1
+
+# Field type specs: int / float / str / bool.  ``float`` accepts ints
+# (JSON has one number type) and ``None`` (a sanitized non-finite value);
+# every other type is exact.  ``?`` prefix marks the field optional.
+EVENT_SCHEMA: Dict[str, Dict[str, type]] = {
+    # one per trace file — version handshake + engine metadata (warmup
+    # compiles may precede the first run, so runs are bracketed by
+    # run_start/run_end instead)
+    "trace_start": {"schema": int, "?arch": str, "?backend": str,
+                    "?prefill_chunk": int, "?layers_paged": int,
+                    "?layers_ring": int, "?layers_state": int},
+    "run_start": {"run": int, "requests": int},
+    "run_end": {"run": int, "requests": int, "generated": int,
+                "wall_s": float},
+    # ---- request lifecycle ------------------------------------------------
+    "submit": {"rid": int, "prompt_tokens": int, "max_new_tokens": int,
+               "arrival": float},
+    "admit": {"rid": int, "slot": int, "blocks": int, "resume": bool,
+              "?wait_s": float},
+    "chunk_grant": {"rid": int, "start": int, "tokens": int, "final": bool,
+                    "blocks": int},
+    "chunk_withheld": {"rid": int, "free_blocks": int},
+    "preempt": {"rid": int, "cause": str, "state": str,
+                "blocks_freed": int},
+    "first_token": {"rid": int, "ttft_s": float},
+    "finish": {"rid": int, "generated": int, "preemptions": int},
+    # ---- per-iteration step record ---------------------------------------
+    "step": {"iter": int, "kind": str, "occupancy": int,
+             "chunk_tokens": int, "step_s": float, "pool_free": int,
+             "pool_used": int, "pool_high_water": int, "waiting": int,
+             "prefilling": int, "running": int},
+    # first execution of a jitted shape (trace + compile + first run)
+    "compile": {"fn": str, "seconds": float},
+    # ---- sampled selection-quality probe (one event per probed layer) ----
+    "probe": {"iter": int, "layer": int, "requests": int, "static_k": int,
+              "recall": float, "budget_utilization": float,
+              "forced_share": float, "selected_mean": float,
+              "budget_mean": float},
+    # ---- profiler lifecycle ----------------------------------------------
+    "profile_start": {"dir": str, "steps": int},
+    "profile_stop": {"dir": str},
+}
+
+
+def sanitize(obj: Any) -> Any:
+    """Recursively replace non-finite floats with ``None`` (JSON has no
+    NaN/Infinity; the non-strict tokens Python emits by default are
+    rejected by every compliant parser)."""
+    if isinstance(obj, float):
+        return obj if math.isfinite(obj) else None
+    if isinstance(obj, dict):
+        return {k: sanitize(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [sanitize(v) for v in obj]
+    return obj
+
+
+def strict_dumps(obj: Any, **kw) -> str:
+    """``json.dumps`` with non-finite floats as ``null`` — never the
+    non-strict ``NaN``/``Infinity`` tokens."""
+    return json.dumps(sanitize(obj), allow_nan=False, **kw)
+
+
+def _reject_constant(tok: str):
+    raise ValueError(
+        f"non-strict JSON token {tok!r} (NaN/Infinity must be serialized "
+        "as null — see repro.serving.obs.events.sanitize)")
+
+
+def strict_loads(s: str) -> Any:
+    """``json.loads`` rejecting the non-strict ``NaN``/``Infinity`` tokens."""
+    return json.loads(s, parse_constant=_reject_constant)
+
+
+def _type_ok(value: Any, spec: type) -> bool:
+    if spec is float:
+        # JSON has one number type; None is a sanitized non-finite float
+        return value is None or (isinstance(value, (int, float))
+                                 and not isinstance(value, bool))
+    if spec is int:
+        return isinstance(value, int) and not isinstance(value, bool)
+    return isinstance(value, spec)
+
+
+def validate_event(event: Dict[str, Any]) -> None:
+    """Raise ``ValueError`` unless ``event`` conforms to the schema."""
+    ev = event.get("ev")
+    if ev not in EVENT_SCHEMA:
+        raise ValueError(f"unknown event type {ev!r}")
+    if not _type_ok(event.get("ts"), float) or event.get("ts") is None:
+        raise ValueError(f"{ev}: missing/invalid ts: {event.get('ts')!r}")
+    fields = EVENT_SCHEMA[ev]
+    known = {"ev", "ts"}
+    for name, spec in fields.items():
+        optional = name.startswith("?")
+        name = name[1:] if optional else name
+        known.add(name)
+        if name not in event:
+            if optional:
+                continue
+            raise ValueError(f"{ev}: missing field {name!r}")
+        if not _type_ok(event[name], spec):
+            raise ValueError(
+                f"{ev}: field {name!r} expected {spec.__name__}, got "
+                f"{event[name]!r}")
+    extra = set(event) - known
+    if extra:
+        raise ValueError(f"{ev}: unknown fields {sorted(extra)}")
+
+
+def validate_jsonl(lines: Iterable[str]) -> List[Dict[str, Any]]:
+    """Validate a trace (an iterable of JSONL lines); returns the parsed
+    events.  The first event must be a ``trace_start`` carrying a known
+    schema version; parsing is strict (no NaN tokens)."""
+    events = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            event = strict_loads(line)
+        except ValueError as e:
+            raise ValueError(f"line {i + 1}: {e}") from None
+        validate_event(event)
+        events.append(event)
+    if not events:
+        raise ValueError("empty trace")
+    head = events[0]
+    if head["ev"] != "trace_start":
+        raise ValueError(
+            f"trace must open with trace_start, got {head['ev']!r}")
+    if head["schema"] != SCHEMA_VERSION:
+        raise ValueError(
+            f"unsupported trace schema {head['schema']} "
+            f"(this reader understands {SCHEMA_VERSION})")
+    return events

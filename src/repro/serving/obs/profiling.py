@@ -1,0 +1,69 @@
+"""Profiler hooks: ``jax.profiler`` trace capture around K engine steps.
+
+``--profile-dir`` wires a :class:`Profiler` into the engine loop: the
+capture starts at iteration ``start_step``, runs for ``steps``
+iterations, and stops (also force-stopped at run end if the run is
+shorter).  Each jitted dispatch inside the window is wrapped in a
+``jax.profiler.TraceAnnotation`` named after the step kind
+(``mixed``/``decode``/``probe``), so the timeline in TensorBoard /
+Perfetto attributes device time to engine phases.
+
+Start/stop are mirrored into the event trace (``profile_start`` /
+``profile_stop``) so the JSONL timeline and the profiler window can be
+aligned.  Outside the window :meth:`annotate` is a null context —
+profiling adds nothing to un-profiled steps.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+
+__all__ = ["Profiler"]
+
+
+class Profiler:
+    """Window-of-K-steps ``jax.profiler`` capture for the engine loop."""
+
+    def __init__(self, profile_dir: str, steps: int = 20,
+                 start_step: int = 0):
+        assert steps > 0, steps
+        self.profile_dir = profile_dir
+        self.steps = int(steps)
+        self.start_step = int(start_step)
+        self.active = False
+        self._done = False                  # one window per run
+
+    def maybe_start(self, iteration: int, tracer=None) -> None:
+        if self._done or self.active or iteration < self.start_step:
+            return
+        jax.profiler.start_trace(self.profile_dir)
+        self.active = True
+        self._stop_at = iteration + self.steps
+        if tracer is not None:
+            tracer.emit("profile_start", dir=self.profile_dir,
+                        steps=self.steps)
+
+    def maybe_stop(self, iteration: int, tracer=None) -> None:
+        """Stop after the window's last step has dispatched (called with
+        the next iteration number)."""
+        if self.active and iteration >= self._stop_at:
+            self.stop(tracer)
+
+    def stop(self, tracer=None) -> None:
+        """Force-stop (run end); idempotent."""
+        if not self.active:
+            return
+        jax.profiler.stop_trace()
+        self.active = False
+        self._done = True
+        if tracer is not None:
+            tracer.emit("profile_stop", dir=self.profile_dir)
+
+    def annotate(self, name: str):
+        """Named trace annotation inside the window, null context outside."""
+        if self.active:
+            return jax.profiler.TraceAnnotation(name)
+        return contextlib.nullcontext()

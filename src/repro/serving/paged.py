@@ -51,7 +51,8 @@ from repro.models import backends as bk
 from repro.models import transformer as tfm
 
 __all__ = ["init_paged_caches", "gather_views", "scatter_token",
-           "write_prefill", "keep_state_rows", "gather_footprint"]
+           "write_prefill", "keep_state_rows", "gather_footprint",
+           "cache_kind_counts"]
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
@@ -139,6 +140,16 @@ def keep_state_rows(cfg: ModelConfig, before, after, active: jax.Array):
 
 # -------------------------------------------------------------- accounting
 
+def cache_kind_counts(cfg: ModelConfig) -> Dict[str, int]:
+    """Layer count per cache kind (``paged``/``ring``/``state``) under
+    the per-layer plan — shared by the footprint model below and the
+    serving observability layer's per-kind pool gauges."""
+    counts = {"paged": 0, "ring": 0, "state": 0}
+    for spec in cfg.layer_specs:
+        counts[cfg.plan_for(spec).kind] += 1
+    return counts
+
+
 def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     """Per-decode-step gathered bytes for the whole stack, full-view vs
     paged, broken down by layer kind (reported by
@@ -158,9 +169,7 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     b, n = sv.max_batch, sv.max_context
     kvh = cfg.num_kv_heads
     cdt = jnp.dtype(cfg.compute_dtype)
-    counts = {"paged": 0, "ring": 0, "state": 0}
-    for spec in cfg.layer_specs:
-        counts[cfg.plan_for(spec).kind] += 1
+    counts = cache_kind_counts(cfg)
 
     full = paged = window = 0
     selected = 0

@@ -36,6 +36,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 from typing import Dict, List, Optional
 
 from repro.serving.block_pool import BlockPool
@@ -158,6 +159,27 @@ class Scheduler:
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self._clock = 0
+        # observability (bound by the engine per run; None = standalone)
+        self.registry = None
+        self.tracer = None
+
+    # -------------------------------------------------------- observability
+    def bind_obs(self, registry=None, tracer=None) -> None:
+        """Attach the engine's per-run metrics registry and (optional)
+        event tracer.  The scheduler emits its own lifecycle events —
+        admission, chunk grants/withholds, preemptions (by cause),
+        finishes — so the trace sees scheduling decisions, not just
+        their engine-side consequences."""
+        self.registry = registry
+        self.tracer = tracer
+
+    def _emit(self, event_type: str, **fields) -> None:
+        if self.tracer is not None:
+            self.tracer.emit(event_type, **fields)
+
+    def _count(self, name: str, **labels) -> None:
+        if self.registry is not None:
+            self.registry.counter(name, **labels).inc()
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request) -> None:
@@ -222,6 +244,16 @@ class Scheduler:
             req.pos = len(req.prefill_tokens)
             req.prefill_pos = 0
             self.prefilling.append(req)
+            # admission-queue wait: only measurable under realtime
+            # clocks (offline runs pass now=inf — everything "arrived")
+            wait = now - req.arrival if math.isfinite(now) else None
+            if wait is not None and self.registry is not None:
+                self.registry.histogram("admission_wait_s").record(wait)
+            self._emit("admit", rid=req.rid, slot=req.slot,
+                       blocks=len(req.blocks),
+                       resume=req.preemptions > 0,
+                       **({"wait_s": round(wait, 6)}
+                          if wait is not None else {}))
             return req
         return None
 
@@ -250,11 +282,19 @@ class Scheduler:
                 req.blocks.extend(got)
                 continue
             if self.running or len(self.prefilling) > 1:
-                return None                 # wait for blocks to free up
-            self.preempt(req)               # cannot make progress at all
+                # wait for blocks to free up
+                self._count("serve_chunks_withheld_total")
+                self._emit("chunk_withheld", rid=req.rid,
+                           free_blocks=self.pool.num_free)
+                return None
+            self.preempt(req, cause="prefill_stall")  # no progress at all
             return None
-        return PrefillChunk(start=req.prefill_pos,
-                            tokens=end - req.prefill_pos, final=end == p)
+        chunk = PrefillChunk(start=req.prefill_pos,
+                             tokens=end - req.prefill_pos, final=end == p)
+        self._emit("chunk_grant", rid=req.rid, start=chunk.start,
+                   tokens=chunk.tokens, final=chunk.final,
+                   blocks=len(req.blocks))
+        return chunk
 
     def advance_chunk(self, req: Request, chunk: PrefillChunk) -> None:
         """The engine ran ``chunk``; move the cursor past it."""
@@ -289,7 +329,7 @@ class Scheduler:
                     req.blocks.extend(got)
                     continue
                 victim = self._lru_victim()
-                self.preempt(victim)
+                self.preempt(victim, cause="decode_growth")
                 if victim is req:
                     break
         return [self.running[s] for s in sorted(self.running)]
@@ -304,12 +344,20 @@ class Scheduler:
         pool = self.prefilling or list(self.running.values())
         return min(pool, key=lambda r: (r.last_used, -r.arrival, -r.rid))
 
-    def preempt(self, req: Request) -> None:
+    def preempt(self, req: Request, cause: str = "manual") -> None:
         """Free the request's slot + blocks and requeue it (recompute).
         A request caught mid-chunked-prefill loses its committed pages,
         so its chunk cursor resets — re-chunking is bit-exact because
-        chunk boundaries depend only on the prompt length."""
+        chunk boundaries depend only on the prompt length.
+
+        ``cause`` labels the eviction for the preemption counter/event:
+        ``decode_growth`` (a running request's table had to grow on an
+        exhausted pool), ``prefill_stall`` (the grant_chunk safety
+        valve), or ``manual`` (direct callers/tests)."""
         assert req.state == DECODE or req.state == PREFILL
+        self._count("serve_preemptions_total", cause=cause)
+        self._emit("preempt", rid=req.rid, cause=cause, state=req.state,
+                   blocks_freed=len(req.blocks))
         self.pool.free(req.blocks)
         req.blocks = []
         if req in self.prefilling:
@@ -323,6 +371,9 @@ class Scheduler:
 
     def finish(self, req: Request, now: float) -> None:
         assert req.state == DECODE
+        self._count("serve_requests_total")
+        self._emit("finish", rid=req.rid, generated=len(req.generated),
+                   preemptions=req.preemptions)
         self.pool.free(req.blocks)
         req.blocks = []
         self.running.pop(req.slot)

@@ -313,9 +313,9 @@ def test_engine_decode_growth_preempts_prefiller_token_exact(monkeypatch):
     seen = []
     orig = Scheduler.preempt
 
-    def spy(self, req):
+    def spy(self, req, cause="manual"):
         seen.append((req.state, req.prefill_pos))
-        orig(self, req)
+        orig(self, req, cause=cause)
 
     monkeypatch.setattr(Scheduler, "preempt", spy)
 
