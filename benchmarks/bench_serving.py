@@ -27,6 +27,13 @@ chunked token-budget mixed step and the legacy whole-prompt prefill;
 request) is the head-of-line-blocking number chunked prefill exists to
 bound, ``iter_ms_p99`` the per-iteration tail.
 
+Prefix-cache rows (``serve_prefix_chatbot`` / ``serve_prefix_rag``)
+serve a shared-prefix workload — multi-turn chat sessions / shared RAG
+template — cache-on vs cache-off on identical prompts and arrivals:
+hit rate, cached/prompt token ratio, CoW copies, and the TTFT and
+throughput deltas radix-tree page reuse buys; greedy generations are
+asserted identical both ways (sharing must be token-exact).
+
     PYTHONPATH=src python -m benchmarks.bench_serving --smoke [--json F]
 """
 
@@ -190,6 +197,64 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         assert all(r.state == "finished" for r in reqs)
         rows.append((f"serve_longprompt_{tag}",
                      _serve_row(m, len(lens), cfg)))
+
+    # prefix-cache rows: one shared-prefix workload (identical prompts
+    # AND arrival schedule) served cache-on then cache-off — the
+    # TTFT/throughput delta is pure prefix reuse, and greedy decoding
+    # must produce identical tokens both ways (sharing + CoW are
+    # token-exact or they are wrong).  Two generators: multi-turn chat
+    # sessions (each turn's prompt extends the session history) and
+    # RAG-style shared template + unique suffix.
+    from repro.serving.prefix_cache.workloads import (chatbot_prompts,
+                                                      rag_prompts)
+    base = _cfg_for("socket", smoke)
+    ceiling = serving_ceiling(base)
+    top = ceiling - max_new
+    prefix_workloads = (
+        ("serve_prefix_chatbot",
+         chatbot_prompts(num_requests, sessions=2, max_prompt_len=top,
+                         vocab_size=base.vocab_size, seed=0)),
+        ("serve_prefix_rag",
+         rag_prompts(num_requests, prompt_len=top, overlap=0.6,
+                     vocab_size=base.vocab_size, seed=0)),
+    )
+    arrivals = [0.01 * i for i in range(num_requests)]
+    for name, prompts in prefix_workloads:
+        row: dict = {"requests": num_requests}
+        generations = {}
+        for on in (True, False):
+            cfg = base.replace(serving=base.serving.replace(
+                prefix_cache=on))
+            reqs, m, eng = run_continuous(
+                cfg, num_requests, rate_rps=50.0, prompt_lens=None,
+                max_new_tokens=max_new, seed=0, warmup=True,
+                arrivals=arrivals, prompts=prompts)
+            assert all(r.state == "finished" for r in reqs)
+            generations[on] = [r.generated for r in reqs]
+            tag = "cached" if on else "cold"
+            row[f"ttft_ms_mean_{tag}"] = float(m.ttft_s_mean * 1e3)
+            row[f"tput_tok_s_{tag}"] = float(m.throughput_tok_s)
+            row[f"preemptions_{tag}"] = m.preemptions
+            if on:
+                reg = eng.registry
+                hits = reg.value("prefix_cache_hits_total")
+                misses = reg.value("prefix_cache_misses_total")
+                ptoks = reg.value("prefix_cache_prompt_tokens_total")
+                ctoks = reg.value("prefix_cache_cached_tokens_total")
+                row.update({
+                    "hit_rate": hits / (hits + misses)
+                    if hits + misses else 0.0,
+                    "cached_tokens": int(ctoks),
+                    "prompt_tokens": int(ptoks),
+                    "cached_token_frac": ctoks / ptoks if ptoks else 0.0,
+                    "cow_copies": int(reg.value(
+                        "prefix_cache_cow_total")),
+                    "evicted_blocks": int(reg.value(
+                        "prefix_cache_evicted_total")),
+                })
+        assert generations[True] == generations[False], (
+            f"{name}: prefix cache changed greedy generations")
+        rows.append((name, row))
     return rows
 
 

@@ -130,6 +130,14 @@ class ServingSettings:
     prefill_buckets: Tuple[int, ...] = (128, 256, 512, 1024)
     max_prefill_per_iter: int = 1
     prefill_chunk: int = 256
+    # cross-request prefix cache (repro.serving.prefix_cache): radix-index
+    # committed prompt pages and admit matching prompts with the shared
+    # block-table prefix installed, chunk-prefilling only the tail.
+    # Requires the mixed step (prefill_chunk > 0) and an all-paged cache
+    # plan — configs with ring/Mamba layers fall back to no-share (the
+    # engine simply builds no cache).  Generations are token-exact vs
+    # cache-off (copy-on-write keeps shared pages immutable).
+    prefix_cache: bool = False
 
     def validate(self) -> None:
         assert self.num_blocks > 1, "need at least one non-trash block"

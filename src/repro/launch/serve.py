@@ -132,7 +132,8 @@ def serving_ceiling(cfg) -> int:
 def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
                    max_new_tokens: int, seed: int = 0, realtime=True,
                    warmup=False, temperature: float = 0.0,
-                   top_p: float = 1.0, arrivals=None, obs=None):
+                   top_p: float = 1.0, arrivals=None, obs=None,
+                   prompts=None):
     """Continuous-batching serve; returns (requests, ServeMetrics,
     engine) — the engine exposes the run's metrics registry
     (``engine.registry``) for snapshot / Prometheus exposition.
@@ -147,12 +148,29 @@ def run_continuous(cfg, num_requests: int, rate_rps: float, prompt_lens,
     (cycled over ``prompt_lens`` in order).  ``obs``: optional
     :class:`repro.serving.obs.Observability` bundle (event trace /
     selection probe / profiler) threaded into the engine.
+    ``prompts``: optional explicit token lists (e.g. from
+    :mod:`repro.serving.prefix_cache.workloads`) overriding the random
+    draw — the prefix-cache workloads need real shared prefixes, which
+    independent random prompts never have; ``prompt_lens`` is ignored.
     """
     from repro.serving.engine import ContinuousBatchingEngine
     engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(seed),
                                       temperature=temperature, top_p=top_p,
                                       sample_seed=seed, obs=obs)
-    if arrivals is None:
+    if prompts is not None:
+        from repro.serving import Request
+        assert len(prompts) == num_requests, (
+            f"prompts ({len(prompts)}) must match num_requests "
+            f"({num_requests})")
+        if arrivals is None:
+            rng = np.random.default_rng(seed)
+            t, arrivals = 0.0, []
+            for _ in range(num_requests):
+                t += float(rng.exponential(1.0 / rate_rps))
+                arrivals.append(t)
+        reqs = [Request(prompt=list(p), max_new_tokens=max_new_tokens,
+                        arrival=t) for p, t in zip(prompts, arrivals)]
+    elif arrivals is None:
         reqs = make_poisson_requests(cfg, num_requests, rate_rps,
                                      prompt_lens, max_new_tokens, seed=seed)
     else:
@@ -201,6 +219,23 @@ def main():
                          "iteration (continuous engine; 0 = legacy "
                          "whole-prompt bucketed prefill; default: the "
                          "config's serving.prefill_chunk)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the radix-tree prefix cache (continuous "
+                         "engine, chunked prefill, all-paged plans; "
+                         "hybrid/ring plans fall back to no sharing)")
+    ap.add_argument("--workload", default="mixed",
+                    choices=["mixed", "chatbot", "rag"],
+                    help="request generator: 'mixed' = independent "
+                         "random prompts of mixed lengths (default); "
+                         "'chatbot' = multi-turn sessions whose prompts "
+                         "share growing histories; 'rag' = shared "
+                         "template + unique suffix")
+    ap.add_argument("--overlap", type=float, default=0.6,
+                    help="shared-template fraction of each prompt "
+                         "(--workload rag)")
+    ap.add_argument("--sessions", type=int, default=2,
+                    help="number of concurrent chat sessions "
+                         "(--workload chatbot)")
     # observability (continuous engine)
     ap.add_argument("--trace", default=None, metavar="FILE",
                     help="stream a schema-validated JSONL event trace "
@@ -241,6 +276,14 @@ def main():
     if args.prefill_chunk is not None and args.engine != "continuous":
         ap.error("--prefill-chunk requires --engine continuous: chunked "
                  "prefill is the continuous engine's execution model")
+    if args.prefix_cache and args.engine != "continuous":
+        ap.error("--prefix-cache requires --engine continuous: the "
+                 "prefix cache shares pages of the continuous engine's "
+                 "paged pool")
+    if args.workload != "mixed" and args.engine != "continuous":
+        ap.error("--workload chatbot/rag requires --engine continuous")
+    if not 0.0 <= args.overlap < 1.0:
+        ap.error(f"--overlap must be in [0, 1), got {args.overlap}")
     obs_flags = (args.trace, args.perfetto, args.metrics_json,
                  args.metrics_prom, args.profile_dir)
     if (any(f is not None for f in obs_flags) or args.probe_every) \
@@ -258,6 +301,8 @@ def main():
     if args.prefill_chunk is not None:
         cfg = cfg.replace(serving=cfg.serving.replace(
             prefill_chunk=args.prefill_chunk))
+    if args.prefix_cache:
+        cfg = cfg.replace(serving=cfg.serving.replace(prefix_cache=True))
 
     if args.engine == "continuous":
         sv = cfg.serving
@@ -273,6 +318,20 @@ def main():
                      f"({ceiling} tokens)")
         lens = sorted({max(1, top // 4), max(1, top // 2),
                        max(1, (3 * top) // 4), top})
+        prompts = None
+        if args.workload == "chatbot":
+            from repro.serving.prefix_cache.workloads import chatbot_prompts
+            prompts = chatbot_prompts(args.num_requests,
+                                      sessions=args.sessions,
+                                      max_prompt_len=top,
+                                      vocab_size=cfg.vocab_size,
+                                      seed=args.seed)
+        elif args.workload == "rag":
+            from repro.serving.prefix_cache.workloads import rag_prompts
+            prompts = rag_prompts(args.num_requests, prompt_len=top,
+                                  overlap=args.overlap,
+                                  vocab_size=cfg.vocab_size,
+                                  seed=args.seed)
         obs = None
         if any(f is not None for f in obs_flags) or args.probe_every:
             from repro.serving.obs import Observability
@@ -283,18 +342,41 @@ def main():
                                          args.rate, lens,
                                          max_new, seed=args.seed,
                                          temperature=args.temperature,
-                                         top_p=args.top_p, obs=obs)
+                                         top_p=args.top_p, obs=obs,
+                                         prompts=prompts)
         report = {
             "arch": cfg.name, "backend": args.backend,
             "engine": "continuous",
             "prefill_chunk": sv.prefill_chunk,
-            "prompt_lens": lens,
+            "workload": args.workload,
+            "prompt_lens": lens if prompts is None else sorted(
+                {len(p) for p in prompts}),
             "max_new_tokens": max_new,
             "temperature": args.temperature,
             "top_p": args.top_p,
             "finished": sum(r.state == "finished" for r in reqs),
             **m.to_json(),
         }
+        if args.prefix_cache:
+            reg = engine.registry
+            hits = reg.value("prefix_cache_hits_total")
+            misses = reg.value("prefix_cache_misses_total")
+            report["prefix_cache"] = {
+                # engine.prefix_cache is None when the plan can't share
+                # (hybrid/ring/legacy prefill) — the flag degrades to a
+                # no-op and this block records that honestly
+                "active": engine.prefix_cache is not None,
+                "hits": hits, "misses": misses,
+                "hit_rate": hits / (hits + misses) if hits + misses
+                else None,
+                "cached_tokens": reg.value(
+                    "prefix_cache_cached_tokens_total"),
+                "prompt_tokens": reg.value(
+                    "prefix_cache_prompt_tokens_total"),
+                "cow_copies": reg.value("prefix_cache_cow_total"),
+                "evicted_blocks": reg.value(
+                    "prefix_cache_evicted_total"),
+            }
         if obs is not None:
             obs.close()
             if args.probe_every:

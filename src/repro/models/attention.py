@@ -430,9 +430,21 @@ def attention_prefill_chunk(cfg: ModelConfig, params: Dict, x: jax.Array,
                                   jnp.dtype(cfg.compute_dtype))
         mini = backend.prefill_build(cfg, params, mini, kc, vc)
         block0 = jnp.asarray(history, jnp.int32) // bs
+        spec = backend.cache_spec(cfg)
         for name in cache:
-            cache[name] = backends.write_chunk_blocks(
-                cache[name], mini[name], bt_row, block0)
+            if spec[name].granularity == 1:
+                # row-granular commit: supports a mid-page chunk start
+                # (prefix-cache hit resuming past the shared tail page)
+                # and routes final-chunk padding to the trash page.
+                cache[name] = backends.write_chunk_rows(
+                    cache[name], mini[name], bt_row, history, li[0])
+            else:
+                # page-granular metadata (Quest min/max): whole-block
+                # scatter — chunk starts are page-aligned here (the
+                # prefix cache only shares page-aligned prefixes when
+                # any leaf has granularity > 1).
+                cache[name] = backends.write_chunk_blocks(
+                    cache[name], mini[name], bt_row, block0)
         # prefix-extension attend over the paged logical view: the chunk's
         # own rows were just committed, so the causal si <= ti mask covers
         # both the earlier chunks' pages and in-chunk causality; trash

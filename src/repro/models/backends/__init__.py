@@ -22,7 +22,8 @@ from repro.models.backends.base import (ContiguousView, DecodeBackend,
                                         RingView, gather_block_leaf,
                                         gather_trace, gather_trace_reset,
                                         kv_leaf_specs, record_fused,
-                                        ring_write_page, write_chunk_blocks)
+                                        ring_write_page, write_chunk_blocks,
+                                        write_chunk_rows)
 
 __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "RingView", "LeafSpec", "LayerCacheSpec", "LayerCacheHandler",
@@ -31,7 +32,7 @@ __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "register", "get_backend", "registered_backends",
            "gather_block_leaf", "gather_trace", "gather_trace_reset",
            "record_fused", "ring_write_page", "write_chunk_blocks",
-           "socket_config_of"]
+           "write_chunk_rows", "socket_config_of"]
 
 _REGISTRY: Dict[str, DecodeBackend] = {}
 

@@ -44,7 +44,7 @@ __all__ = ["LeafSpec", "LayerCacheSpec", "KVView", "ContiguousView",
            "PagedKVCacheHandler", "kv_leaf_specs", "write_prefill_kv",
            "subset_attention", "gather_trace", "gather_trace_reset",
            "record_fused", "gather_block_leaf", "write_block_prefill",
-           "write_chunk_blocks", "ring_write_page"]
+           "write_chunk_blocks", "write_chunk_rows", "ring_write_page"]
 
 
 def gather_block_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
@@ -514,6 +514,27 @@ def write_chunk_blocks(pages: jax.Array, leaf: jax.Array,
     ids = jax.lax.dynamic_slice(bt_row, (jnp.asarray(block0, jnp.int32),),
                                 (nb,))
     return pages.at[ids].set(blocks.astype(pages.dtype))
+
+
+def write_chunk_rows(pages: jax.Array, leaf: jax.Array, bt_row: jax.Array,
+                     history, last_index) -> jax.Array:
+    """Row-granular variant of :func:`write_chunk_blocks`: chunk token
+    ``i`` lands at logical position ``history + i``, i.e. row
+    ``(history + i) % rows_per_block`` of block ``bt_row[(history + i) //
+    rows_per_block]``.  Needed when the chunk start is **not**
+    page-aligned — a prefix-cache hit resumes prefill mid-page after the
+    shared tail page is CoW-cloned — and only valid for granularity-1
+    leaves (per-token rows; page-granular stats can't be written by the
+    row).  Rows past ``last_index`` (final-chunk padding) are routed to
+    the trash page instead of committing junk into real blocks."""
+    rows = leaf.shape[2]
+    rows_pb = pages.shape[2]
+    i = jnp.arange(rows, dtype=jnp.int32)
+    ti = jnp.asarray(history, jnp.int32) + i
+    blk = jnp.where(i <= jnp.asarray(last_index, jnp.int32),
+                    bt_row[ti // rows_pb], 0)
+    vals = jnp.moveaxis(leaf[0], 1, 0)       # (rows, KVH, *rest)
+    return pages.at[blk, :, ti % rows_pb].set(vals.astype(pages.dtype))
 
 
 class LayerCacheHandler:

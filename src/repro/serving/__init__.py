@@ -3,18 +3,21 @@
 See :mod:`repro.serving.engine` for the engine,
 :mod:`repro.serving.scheduler` for the request lifecycle,
 :mod:`repro.serving.block_pool` / :mod:`repro.serving.paged` for the
-host- and device-side halves of the paged pool, and
+host- and device-side halves of the paged pool,
+:mod:`repro.serving.prefix_cache` for cross-request page reuse, and
 :mod:`repro.serving.obs` for the observability layer (event tracing,
 metrics registry, selection probe, profiling).  Design notes in
 ``src/repro/serving/README.md``.
 """
 
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
+from repro.serving.prefix_cache import PrefixCache, RadixIndex
 from repro.serving.scheduler import (DECODE, FINISHED, PREFILL, WAITING,
                                      PrefillChunk, Request, Scheduler)
 
 __all__ = ["BlockPool", "TRASH_BLOCK", "Request", "PrefillChunk",
            "Scheduler", "WAITING", "PREFILL", "DECODE", "FINISHED",
+           "PrefixCache", "RadixIndex",
            "ContinuousBatchingEngine", "ServeMetrics", "Observability"]
 
 

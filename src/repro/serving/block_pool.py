@@ -24,7 +24,17 @@ TRASH_BLOCK = 0
 
 
 class BlockPool:
-    """Free-list allocator over physical block ids ``1..num_blocks-1``."""
+    """Free-list allocator over physical block ids ``1..num_blocks-1``.
+
+    Blocks are **reference counted** so the prefix cache can share one
+    physical page between the radix index and any number of running
+    requests: :meth:`alloc` hands out blocks at refcount 1, each
+    additional holder calls :meth:`ref`, and :meth:`free` is a deref that
+    only returns the block to the free list when the count reaches zero.
+    The copy-on-write invariant lives one layer up (engine/scheduler): a
+    block with refcount > 1 is never written in place — writers clone it
+    first (see :mod:`repro.serving.prefix_cache`).
+    """
 
     def __init__(self, num_blocks: int):
         if num_blocks < 2:
@@ -32,7 +42,7 @@ class BlockPool:
         self.num_blocks = num_blocks
         # LIFO free list: recently freed blocks are reused first (warm).
         self._free: List[int] = list(range(num_blocks - 1, 0, -1))
-        self._allocated = [False] * num_blocks
+        self._refs = [0] * num_blocks
         # peak simultaneous allocation over the pool's lifetime — the
         # capacity-planning number (how many blocks this workload
         # actually needed)
@@ -57,24 +67,45 @@ class BlockPool:
             return None
         blocks = [self._free.pop() for _ in range(n)]
         for b in blocks:
-            self._allocated[b] = True
+            self._refs[b] = 1
         if self.num_used > self.high_water:
             self.high_water = self.num_used
         return blocks
 
+    def ref(self, block: int) -> None:
+        """Take an additional reference on an allocated block (page
+        sharing: the radix index and each matching request all hold one
+        ref on the same physical page)."""
+        if block == TRASH_BLOCK:
+            raise ValueError("attempt to ref the trash block")
+        if self._refs[block] == 0:
+            raise ValueError(f"ref of unallocated block {block}")
+        self._refs[block] += 1
+
     def stats(self) -> dict:
         """Occupancy snapshot for step records / gauges."""
         return {"free": self.num_free, "used": self.num_used,
+                "shared": sum(1 for r in self._refs if r > 1),
                 "high_water": self.high_water}
 
     def free(self, blocks: List[int]) -> None:
+        """Drop one reference per listed block; blocks whose count hits
+        zero return to the free list (others stay live for their
+        remaining holders)."""
         for b in blocks:
             if b == TRASH_BLOCK:
                 raise ValueError("attempt to free the trash block")
-            if not self._allocated[b]:
+            if self._refs[b] == 0:
                 raise ValueError(f"double free of block {b}")
-            self._allocated[b] = False
-            self._free.append(b)
+            self._refs[b] -= 1
+            if self._refs[b] == 0:
+                self._free.append(b)
+
+    def refcount(self, block: int) -> int:
+        return self._refs[block]
+
+    def is_shared(self, block: int) -> bool:
+        return self._refs[block] > 1
 
     def is_allocated(self, block: int) -> bool:
-        return self._allocated[block]
+        return self._refs[block] > 0

@@ -72,6 +72,7 @@ from repro.serving import paged, sampling
 from repro.serving.block_pool import TRASH_BLOCK, BlockPool
 from repro.serving.obs import Observability
 from repro.serving.obs.metrics import Registry
+from repro.serving.prefix_cache import PrefixCache
 from repro.serving.scheduler import (PREFILL, PrefillChunk, Request,
                                      Scheduler)
 
@@ -155,6 +156,39 @@ class ContinuousBatchingEngine:
         self._mixed_fn = self._build_mixed() if self.chunked else None
         self._prefilling: Optional[Request] = None
         self._prefill_fns: Dict[int, callable] = {}
+        # ---- prefix cache ------------------------------------------------
+        # Cross-request page reuse is valid exactly when (a) chunked
+        # prefill is on (a hit IS a prefill starting at a nonzero
+        # cursor — legacy bucketed prefill has no cursor), and (b) every
+        # layer is paged: ring layers recycle their block-table prefix
+        # circularly (a "shared prefix" would be rewritten in place) and
+        # Mamba state is per-slot, not per-page, so a cached prefix
+        # would resume with the wrong recurrent state.  Hybrids fall
+        # back to no-share cleanly — the flag stays on, no cache is
+        # built, serving is unchanged.
+        self.prefix_cache = None
+        self._cow_fn = None
+        if self.serving.prefix_cache and self.chunked and has_paged \
+                and ring_blocks == 0 and not self._has_state:
+            spec = self.backend.cache_spec(cfg)
+            # granularity>1 leaves (Quest per-page stats) summarize every
+            # row of a page: partial-page sharing or a partial CoW keep
+            # would score junk keys, so such plans share page-aligned
+            # prefixes only (and structurally never hit the CoW path).
+            tail_ok = all(s.granularity == 1 for s in spec.values())
+            self.prefix_cache = PrefixCache(
+                self.pool, block_size=self.serving.block_size,
+                tail_shareable=tail_ok)
+            self.scheduler.prefix_cache = self.prefix_cache
+
+            def _clone(pages, src, dst, keep):
+                return paged.clone_block(self.cfg, pages, src, dst, keep)
+
+            self._cow_fn = jax.jit(_clone, donate_argnums=(0,))
+        # test hook: called as iter_hook(engine, iteration) at the end of
+        # every engine iteration (CoW invariant property tests snapshot
+        # shared pages here); None in production.
+        self.iter_hook = None
         # (iteration, rid, chunk.start, chunk.tokens) per chunk co-run —
         # lets tests pin "never more than one chunk per decode iteration"
         self.chunk_trace: List[Tuple[int, int, int, int]] = []
@@ -179,7 +213,8 @@ class ContinuousBatchingEngine:
                 arch=cfg.name, backend=cfg.attention_backend,
                 prefill_chunk=self.serving.prefill_chunk,
                 layers_paged=counts["paged"], layers_ring=counts["ring"],
-                layers_state=counts["state"])
+                layers_state=counts["state"],
+                prefix_cache=self.prefix_cache is not None)
 
     @property
     def chunked(self) -> bool:
@@ -207,6 +242,11 @@ class ContinuousBatchingEngine:
         reg.gauge("batch_running").set(len(sched.running))
         reg.gauge("batch_prefilling").set(len(sched.prefilling))
         reg.gauge("batch_waiting").set(len(sched.waiting))
+        if self.prefix_cache is not None:
+            reg.gauge("prefix_cache_shared_blocks").set(
+                self.prefix_cache.shared_blocks)
+            reg.gauge("prefix_cache_evictable_blocks").set(
+                self.prefix_cache.evictable_blocks())
 
     def _note_call(self, tag: str, seconds: float) -> None:
         """First dispatch of a jitted shape = trace + compile + run;
@@ -382,6 +422,14 @@ class ContinuousBatchingEngine:
                 jnp.int32(0), jnp.int32(0), jnp.zeros((1,), jnp.int32),
                 jnp.asarray(False), tokens, bt, pos, active)
             self._note_call("mixed", time.perf_counter() - t_w)
+            if self._cow_fn is not None:
+                # clone trash onto trash: compiles the CoW kernel without
+                # touching any real page (keep=0 scrubs block 0, whose
+                # contents are never read unmasked anyway)
+                t_w = time.perf_counter()
+                self.pages = self._cow_fn(self.pages, jnp.int32(0),
+                                          jnp.int32(0), jnp.int32(0))
+                self._note_call("cow_clone", time.perf_counter() - t_w)
             return
         buckets = sv.prefill_buckets if requests is None else sorted(
             {self._bucket_for(len(r.prefill_tokens)) for r in requests})
@@ -468,11 +516,14 @@ class ContinuousBatchingEngine:
                 # which must not happen after a chunk has been granted —
                 # the granted chunk's block ids would be dangling)...
                 runnable = sched.ensure_decode_blocks()
+                if self.prefix_cache is not None:
+                    self._resolve_decode_cow(runnable)
                 if self._prefilling is not None and \
                         self._prefilling.state != PREFILL:
-                    self._prefilling = None  # evicted by decode growth
-                # ...then the chunk grant (alloc-only: cannot invalidate
-                # the runnable snapshot)
+                    self._prefilling = None  # evicted by decode growth/CoW
+                # ...then the chunk grant (alloc-only — its cache-evict
+                # tier frees refcount-1 pages, never a live request — so
+                # it cannot invalidate the runnable snapshot)
                 if self._prefilling is None:
                     req = sched.try_admit(now())
                     if req is not None:
@@ -483,6 +534,18 @@ class ContinuousBatchingEngine:
                     if chunk is None and \
                             self._prefilling.state != PREFILL:
                         self._prefilling = None   # safety self-preempt
+                if chunk is not None and self.prefix_cache is not None \
+                        and not self._resolve_chunk_cow(self._prefilling,
+                                                        chunk):
+                    # the prefiller itself was preempted making room for
+                    # its CoW clone — the granted chunk is void
+                    chunk = None
+                    self._prefilling = None
+                if self.prefix_cache is not None:
+                    # CoW allocation may have LRU-preempted decoders out
+                    # of the snapshot taken above
+                    runnable = [r for r in runnable
+                                if sched.running.get(r.slot) is r]
             else:
                 # legacy order: whole-prompt prefill phase, then growth —
                 # a request admitted this iteration decodes this
@@ -578,6 +641,8 @@ class ContinuousBatchingEngine:
                     prefilling=len(sched.prefilling),
                     running=len(sched.running))
             decode_iters += 1
+            if self.iter_hook is not None:
+                self.iter_hook(self, decode_iters)
             if profiler is not None:
                 profiler.maybe_stop(decode_iters, tracer)
 
@@ -590,6 +655,62 @@ class ContinuousBatchingEngine:
                            generated=m.total_generated,
                            wall_s=round(wall_total, 6))
         return m
+
+    # --------------------------------------------------------------- cow
+    def _cow(self, req: Request, idx: int, keep: int) -> bool:
+        """Un-share block ``idx`` of ``req`` before a write: allocate a
+        fresh block (cache-evict, then LRU-preempt tiers), device-clone
+        the page's first ``keep`` token rows across every paged leaf —
+        scrubbing the rest to init fill, so the donor's tokens past the
+        matched prefix (or its generated continuation) never leak into
+        the new owner — and swap it into the request's table.  The old
+        block is deref'd, never mutated: the CoW invariant.  Returns
+        False iff ``req`` itself was preempted to make room."""
+        old = req.blocks[idx]
+        new = self.scheduler.cow_alloc(req)
+        if new is None:
+            return False
+        t_c = time.perf_counter()
+        self.pages = self._cow_fn(self.pages, jnp.int32(old),
+                                  jnp.int32(new), jnp.int32(keep))
+        self._note_call("cow_clone", time.perf_counter() - t_c)
+        req.blocks[idx] = new
+        self.pool.free([old])
+        self.registry.counter("prefix_cache_cow_total").inc()
+        if self.obs is not None:
+            self.obs.tracer.emit("cow_copy", rid=req.rid, block=old,
+                                 clone=new, keep_tokens=keep)
+        return True
+
+    def _resolve_chunk_cow(self, req: Request,
+                           chunk: PrefillChunk) -> bool:
+        """Clone any shared block the granted chunk would write.  Only
+        the chunk's FIRST block can be shared — a cache hit's cursor may
+        sit mid-way through the matched tail page — but every touched
+        block is checked (cheap, and keeps the invariant local).  Returns
+        False iff ``req`` was preempted while allocating a clone."""
+        bs = self.serving.block_size
+        first = chunk.start // bs
+        last = (chunk.start + chunk.tokens - 1) // bs
+        for idx in range(first, min(last + 1, len(req.blocks))):
+            if self.pool.is_shared(req.blocks[idx]):
+                if not self._cow(req, idx,
+                                 keep=max(0, chunk.start - idx * bs)):
+                    return False
+        return True
+
+    def _resolve_decode_cow(self, runnable: List[Request]) -> None:
+        """Enforce the CoW invariant for the decode batch.  Structurally
+        a decode write position (``pos >= prompt_len``) can never sit in
+        a shared page — the cache indexes prompt-pure pages only, and a
+        hit's tail page is un-shared by the first chunk write — but the
+        invariant is cheap to enforce locally rather than by global
+        argument, and it stays correct under future insert policies."""
+        bs = self.serving.block_size
+        for r in runnable:
+            idx = r.pos // bs
+            if idx < len(r.blocks) and self.pool.is_shared(r.blocks[idx]):
+                self._cow(r, idx, keep=r.pos % bs)
 
     # ------------------------------------------------------------- chunk
     def _run_mixed(self, chunk: PrefillChunk, tokens, bt, pos, active):

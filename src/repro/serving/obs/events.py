@@ -26,21 +26,28 @@ import json
 import math
 from typing import Any, Dict, Iterable, List
 
-__all__ = ["SCHEMA_VERSION", "EVENT_SCHEMA", "validate_event",
-           "validate_jsonl", "sanitize", "strict_dumps", "strict_loads"]
+__all__ = ["SCHEMA_VERSION", "SUPPORTED_SCHEMAS", "EVENT_SCHEMA",
+           "EVENT_SCHEMA_V1", "validate_event", "validate_jsonl",
+           "sanitize", "strict_dumps", "strict_loads"]
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # Field type specs: int / float / str / bool.  ``float`` accepts ints
 # (JSON has one number type) and ``None`` (a sanitized non-finite value);
 # every other type is exact.  ``?`` prefix marks the field optional.
+#
+# This dict is the CURRENT (v2) schema; v1 — before the prefix-cache
+# events — is frozen below as :data:`EVENT_SCHEMA_V1`, and
+# :func:`validate_jsonl` checks each trace against the schema its
+# handshake declares, so both generations of traces stay readable.
 EVENT_SCHEMA: Dict[str, Dict[str, type]] = {
     # one per trace file — version handshake + engine metadata (warmup
     # compiles may precede the first run, so runs are bracketed by
     # run_start/run_end instead)
     "trace_start": {"schema": int, "?arch": str, "?backend": str,
                     "?prefill_chunk": int, "?layers_paged": int,
-                    "?layers_ring": int, "?layers_state": int},
+                    "?layers_ring": int, "?layers_state": int,
+                    "?prefix_cache": bool},
     "run_start": {"run": int, "requests": int},
     "run_end": {"run": int, "requests": int, "generated": int,
                 "wall_s": float},
@@ -71,7 +78,34 @@ EVENT_SCHEMA: Dict[str, Dict[str, type]] = {
     # ---- profiler lifecycle ----------------------------------------------
     "profile_start": {"dir": str, "steps": int},
     "profile_stop": {"dir": str},
+    # ---- prefix cache (v2) -----------------------------------------------
+    # admission-time match result (one per admission when the cache is on)
+    "cache_hit": {"rid": int, "cached_tokens": int, "prompt_tokens": int,
+                  "shared_blocks": int},
+    "cache_miss": {"rid": int, "prompt_tokens": int},
+    # a request's committed pages adopted by the radix index
+    "page_share": {"rid": int, "blocks": int, "tail": bool},
+    # copy-on-write un-share: ``block`` cloned into ``clone``, first
+    # ``keep_tokens`` rows kept, the rest scrubbed to init fill
+    "cow_copy": {"rid": int, "block": int, "clone": int,
+                 "keep_tokens": int},
+    # LRU reclamation of tree-only pages (the first eviction tier)
+    "cache_evict": {"blocks": int, "remaining_blocks": int},
 }
+
+_V2_EVENTS = ("cache_hit", "cache_miss", "page_share", "cow_copy",
+              "cache_evict")
+
+# v1, frozen: no prefix-cache events, no trace_start.prefix_cache field.
+EVENT_SCHEMA_V1: Dict[str, Dict[str, type]] = {
+    ev: dict(fields) for ev, fields in EVENT_SCHEMA.items()
+    if ev not in _V2_EVENTS}
+EVENT_SCHEMA_V1["trace_start"] = {
+    k: v for k, v in EVENT_SCHEMA["trace_start"].items()
+    if k != "?prefix_cache"}
+
+SUPPORTED_SCHEMAS: Dict[int, Dict[str, Dict[str, type]]] = {
+    1: EVENT_SCHEMA_V1, 2: EVENT_SCHEMA}
 
 
 def sanitize(obj: Any) -> Any:
@@ -114,14 +148,18 @@ def _type_ok(value: Any, spec: type) -> bool:
     return isinstance(value, spec)
 
 
-def validate_event(event: Dict[str, Any]) -> None:
-    """Raise ``ValueError`` unless ``event`` conforms to the schema."""
+def validate_event(event: Dict[str, Any], version: int = SCHEMA_VERSION,
+                   ) -> None:
+    """Raise ``ValueError`` unless ``event`` conforms to the schema of
+    ``version`` (the current one by default — what the tracer enforces
+    at emit time)."""
+    schema = SUPPORTED_SCHEMAS[version]
     ev = event.get("ev")
-    if ev not in EVENT_SCHEMA:
-        raise ValueError(f"unknown event type {ev!r}")
+    if ev not in schema:
+        raise ValueError(f"unknown event type {ev!r} (schema v{version})")
     if not _type_ok(event.get("ts"), float) or event.get("ts") is None:
         raise ValueError(f"{ev}: missing/invalid ts: {event.get('ts')!r}")
-    fields = EVENT_SCHEMA[ev]
+    fields = schema[ev]
     known = {"ev", "ts"}
     for name, spec in fields.items():
         optional = name.startswith("?")
@@ -143,7 +181,9 @@ def validate_event(event: Dict[str, Any]) -> None:
 def validate_jsonl(lines: Iterable[str]) -> List[Dict[str, Any]]:
     """Validate a trace (an iterable of JSONL lines); returns the parsed
     events.  The first event must be a ``trace_start`` carrying a known
-    schema version; parsing is strict (no NaN tokens)."""
+    schema version; every event then validates against **that** version's
+    schema — a v1 trace stays valid, a v1 trace containing v2-only
+    events does not.  Parsing is strict (no NaN tokens)."""
     events = []
     for i, line in enumerate(lines):
         if not line.strip():
@@ -152,16 +192,18 @@ def validate_jsonl(lines: Iterable[str]) -> List[Dict[str, Any]]:
             event = strict_loads(line)
         except ValueError as e:
             raise ValueError(f"line {i + 1}: {e}") from None
-        validate_event(event)
         events.append(event)
     if not events:
         raise ValueError("empty trace")
     head = events[0]
-    if head["ev"] != "trace_start":
+    if head.get("ev") != "trace_start":
         raise ValueError(
-            f"trace must open with trace_start, got {head['ev']!r}")
-    if head["schema"] != SCHEMA_VERSION:
+            f"trace must open with trace_start, got {head.get('ev')!r}")
+    version = head.get("schema")
+    if version not in SUPPORTED_SCHEMAS:
         raise ValueError(
-            f"unsupported trace schema {head['schema']} "
-            f"(this reader understands {SCHEMA_VERSION})")
+            f"unsupported trace schema {version} (this reader "
+            f"understands {sorted(SUPPORTED_SCHEMAS)})")
+    for event in events:
+        validate_event(event, version=version)
     return events

@@ -102,6 +102,20 @@ def chrome_trace(events: List[Dict]) -> Dict:
             elif kind == "chunk_withheld":
                 out.append(_instant("chunk withheld", ts, 1, tid,
                                     {"free_blocks": e["free_blocks"]}))
+            elif kind == "cache_hit":
+                out.append(_instant(
+                    f"cache hit +{e['cached_tokens']}", ts, 1, tid,
+                    {"cached_tokens": e["cached_tokens"],
+                     "prompt_tokens": e["prompt_tokens"],
+                     "shared_blocks": e["shared_blocks"]}))
+            elif kind == "page_share":
+                out.append(_instant(f"share {e['blocks']}p", ts, 1, tid,
+                                    {"tail": e["tail"]}))
+            elif kind == "cow_copy":
+                out.append(_instant("cow copy", ts, 1, tid,
+                                    {"block": e["block"],
+                                     "clone": e["clone"],
+                                     "keep_tokens": e["keep_tokens"]}))
         if open_name:                    # run ended mid-phase
             out.append(_span(open_name, open_ts, last_ts - open_ts, 1,
                              tid))
@@ -122,6 +136,10 @@ def chrome_trace(events: List[Dict]) -> Dict:
         elif kind == "probe":
             out.append(_counter(f"probe_recall_l{e['layer']}", ts,
                                 {"recall": e["recall"]}))
+        elif kind == "cache_evict":
+            out.append(_instant(f"cache evict {e['blocks']}p", ts, 0, 0,
+                                {"remaining_blocks":
+                                 e["remaining_blocks"]}))
     return {"traceEvents": out, "displayTimeUnit": "ms"}
 
 

@@ -51,8 +51,8 @@ from repro.models import backends as bk
 from repro.models import transformer as tfm
 
 __all__ = ["init_paged_caches", "gather_views", "scatter_token",
-           "write_prefill", "keep_state_rows", "gather_footprint",
-           "cache_kind_counts"]
+           "write_prefill", "keep_state_rows", "clone_block",
+           "gather_footprint", "cache_kind_counts"]
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
@@ -136,6 +136,49 @@ def keep_state_rows(cfg: ModelConfig, before, after, active: jax.Array):
             active.reshape((-1,) + (1,) * (new[name].ndim - 1)),
             new[name], old[name]) for name in new}
     return _map_slots(cfg, sel, before, after)
+
+
+def clone_block(cfg: ModelConfig, pages, src, dst, keep_tokens):
+    """Copy-on-write clone: duplicate physical page ``src`` into ``dst``
+    across every **paged**-kind leaf, keeping only the rows covering the
+    first ``keep_tokens`` tokens and resetting the rest to the leaf's
+    init fill value.  The scrub is what makes sharing safe: a shared tail
+    page's rows past the matched prefix hold the *donor's* tokens (or its
+    generated continuation), and — the PR 2 lesson — the pool never
+    scrubs device memory on free, so without it stale rows would leak
+    into the clone's owner.
+
+    Ring/state leaves pass through untouched (the prefix cache is gated
+    off for plans that have any); leaves with ``granularity > 1``
+    (Quest's per-page stats) cannot keep a partial page soundly, so this
+    raises at trace time if one is present with ``keep_tokens`` possibly
+    nonzero — the cache policy page-aligns matches for such plans,
+    making the CoW path unreachable.
+
+    ``src``/``dst``/``keep_tokens`` are traced int32 scalars — one
+    compile serves every clone.
+    """
+    def fn(h, p):
+        if h.kind != "paged":
+            return p
+        leaves = h.spec(cfg).leaves
+        out = {}
+        for name, leaf in p.items():
+            s = leaves[name]
+            if s.granularity != 1:
+                raise ValueError(
+                    f"CoW clone of page-granular leaf {name!r} is unsound "
+                    "(partial-page stats would cover scrubbed rows); the "
+                    "prefix cache must page-align matches for this plan")
+            page = leaf[src]                      # (KVH, rows, *suffix)
+            row = jnp.arange(leaf.shape[2], dtype=jnp.int32)
+            keepmask = (row < jnp.asarray(keep_tokens, jnp.int32)).reshape(
+                (1, -1) + (1,) * len(s.suffix))
+            page = jnp.where(keepmask, page,
+                             jnp.asarray(s.fill, leaf.dtype))
+            out[name] = leaf.at[dst].set(page)
+        return out
+    return _map_slots(cfg, fn, pages)
 
 
 # -------------------------------------------------------------- accounting

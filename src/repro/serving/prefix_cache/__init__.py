@@ -1,0 +1,10 @@
+"""Cross-request KV prefix reuse: radix-indexed, refcounted, copy-on-write.
+
+See :mod:`repro.serving.prefix_cache.cache` for the subsystem contract.
+"""
+
+from repro.serving.prefix_cache.cache import PrefixCache
+from repro.serving.prefix_cache.radix import RadixIndex
+from repro.serving.prefix_cache.workloads import chatbot_prompts, rag_prompts
+
+__all__ = ["PrefixCache", "RadixIndex", "chatbot_prompts", "rag_prompts"]

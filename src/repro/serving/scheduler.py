@@ -78,6 +78,9 @@ class Request:
     generated: List[int] = dataclasses.field(default_factory=list)
     pos: int = 0                           # next cache index to write
     prefill_pos: int = 0                   # chunked-prefill cursor
+    # prefix-cache hit length at the latest admission (0 = miss/disabled):
+    # the prefill cursor starts here instead of 0
+    cached_tokens: int = 0
     last_used: int = 0                     # scheduler clock, for LRU
     preemptions: int = 0
     # per-request sampling PRNG key (np.ndarray (2,) uint32), assigned by
@@ -159,6 +162,16 @@ class Scheduler:
         self.running: Dict[int, Request] = {}  # slot -> request
         self._free_slots = list(range(max_batch - 1, -1, -1))
         self._clock = 0
+        # cross-request prefix cache (set by the engine when enabled and
+        # the config supports it: chunked prefill + all-paged plan).
+        # When present it changes three things here: admission matches
+        # prompts against the radix index and starts the prefill cursor
+        # past the cached prefix; block allocation gains a first
+        # reclamation tier (LRU cache eviction) ahead of
+        # recompute-preemption; and committed prompt pages are indexed at
+        # activation / finish / preemption so later requests can share
+        # them.
+        self.prefix_cache = None
         # observability (bound by the engine per run; None = standalone)
         self.registry = None
         self.tracer = None
@@ -172,6 +185,8 @@ class Scheduler:
         their engine-side consequences."""
         self.registry = registry
         self.tracer = tracer
+        if self.prefix_cache is not None:
+            self.prefix_cache.bind_obs(registry, tracer)
 
     def _emit(self, event_type: str, **fields) -> None:
         if self.tracer is not None:
@@ -209,6 +224,18 @@ class Scheduler:
             return min(full, self.ring_blocks)
         return 0
 
+    def _alloc(self, n: int):
+        """Pool allocation with the prefix-cache reclamation tier: when
+        the free list cannot cover ``n``, LRU-evict unpinned cached pages
+        (tree-only, refcount 1) to make up the deficit before reporting
+        failure — cached-but-idle data is always cheaper to drop than
+        preempting a live request (recompute) or stalling a prefill."""
+        got = self.pool.alloc(n)
+        if got is None and self.prefix_cache is not None:
+            self.prefix_cache.evict(n - self.pool.num_free)
+            got = self.pool.alloc(n)
+        return got
+
     # ---------------------------------------------------------- admission
     def try_admit(self, now: float) -> Optional[Request]:
         """Pop the first arrived waiting request that fits (free slot AND
@@ -225,25 +252,58 @@ class Scheduler:
             if req.arrival > now:
                 break                       # sorted: nothing arrived yet
             p = len(req.prefill_tokens)
-            first = min(self.prefill_chunk, p) if self.prefill_chunk else p
-            need = self._blocks_for(first)
+            # prefix-cache match: pin (ref) the shared blocks BEFORE any
+            # eviction below can run — matched pages are refcount-1
+            # (tree-only) until pinned, i.e. themselves evictable.
+            shared, cached = [], 0
+            if self.prefix_cache is not None:
+                shared, cached = self.prefix_cache.match(req.prefill_tokens)
+                for b in shared:
+                    self.pool.ref(b)
+            first = min(cached + self.prefill_chunk, p) \
+                if self.prefill_chunk else p
+            first_blocks = self._blocks_for(first)
+            need = first_blocks - len(shared)
             lifetime = self._blocks_for(
                 len(req.effective_prompt) + req.num_remaining)
             # decode headroom only if the request will ever grow past its
             # first-grant blocks — otherwise a prompt filling the whole
             # pool could pass submit() yet never admit (engine would spin).
-            headroom = 1 if lifetime > need else 0
+            headroom = 1 if lifetime > first_blocks else 0
+            deficit = need + headroom - self.pool.num_free
+            if deficit > 0 and self.prefix_cache is not None and \
+                    self.prefix_cache.evictable_blocks() >= deficit:
+                self.prefix_cache.evict(deficit)
             if need + headroom > self.pool.num_free:
+                if shared:
+                    self.pool.free(shared)  # unpin: admission failed
                 continue                    # try a smaller request behind it
             blocks = self.pool.alloc(need)
             assert blocks is not None
             self.waiting.pop(i)
-            req.blocks = blocks
+            req.blocks = shared + blocks
             req.slot = self._free_slots.pop()
             req.state = PREFILL
             req.pos = len(req.prefill_tokens)
-            req.prefill_pos = 0
+            req.prefill_pos = cached        # a hit is a prefill starting
+            req.cached_tokens = cached      # at a nonzero cursor
             self.prefilling.append(req)
+            if self.prefix_cache is not None:
+                if cached > 0:
+                    self._count("prefix_cache_hits_total")
+                    if self.registry is not None:
+                        self.registry.counter(
+                            "prefix_cache_cached_tokens_total").inc(cached)
+                        self.registry.histogram(
+                            "prefix_cache_cached_tokens").record(cached)
+                    self._emit("cache_hit", rid=req.rid, cached_tokens=cached,
+                               prompt_tokens=p, shared_blocks=len(shared))
+                else:
+                    self._count("prefix_cache_misses_total")
+                    self._emit("cache_miss", rid=req.rid, prompt_tokens=p)
+                if self.registry is not None:
+                    self.registry.counter(
+                        "prefix_cache_prompt_tokens_total").inc(p)
             # admission-queue wait: only measurable under realtime
             # clocks (offline runs pass now=inf — everything "arrived")
             wait = now - req.arrival if math.isfinite(now) else None
@@ -277,7 +337,7 @@ class Scheduler:
         p = len(req.prefill_tokens)
         end = min(req.prefill_pos + self.prefill_chunk, p)
         while len(req.blocks) < self._blocks_for(end):
-            got = self.pool.alloc(1)
+            got = self._alloc(1)
             if got is not None:
                 req.blocks.extend(got)
                 continue
@@ -302,11 +362,20 @@ class Scheduler:
         req.prefill_pos += chunk.tokens
 
     def activate(self, req: Request) -> None:
-        """Prefill done; request joins the ragged decode batch."""
+        """Prefill done; request joins the ragged decode batch.  With the
+        prefix cache, this is where the prompt's **full** pages become
+        shareable: they are immutable from here on (decode writes land
+        strictly past the prompt).  The partial tail page — which decode
+        *does* keep writing — is only indexed once the owner stops
+        touching it (:meth:`finish` / preemption after prefill)."""
         assert req.state == PREFILL
         self.prefilling.remove(req)
         req.state = DECODE
         self.running[req.slot] = req
+        if self.prefix_cache is not None:
+            self.prefix_cache.insert(req.prefill_tokens, req.blocks,
+                                     committed=len(req.prefill_tokens),
+                                     include_tail=False, rid=req.rid)
 
     # ----------------------------------------------------------- stepping
     def ensure_decode_blocks(self) -> List[Request]:
@@ -324,7 +393,7 @@ class Scheduler:
                 continue
             req.last_used = self._clock
             while len(req.blocks) < self._blocks_for(req.pos + 1):
-                got = self.pool.alloc(1)
+                got = self._alloc(1)
                 if got is not None:
                     req.blocks.extend(got)
                     continue
@@ -358,6 +427,18 @@ class Scheduler:
         self._count("serve_preemptions_total", cause=cause)
         self._emit("preempt", rid=req.rid, cause=cause, state=req.state,
                    blocks_freed=len(req.blocks))
+        if self.prefix_cache is not None and req.blocks:
+            # Index the committed prefix before freeing: the pages stay
+            # alive under the tree's ref (evictable, but often still
+            # there at re-admission — the preempted request re-matches
+            # its own pages and resumes its prefill near where it left
+            # off instead of recomputing from cursor 0).
+            committed = len(req.prefill_tokens) if req.state == DECODE \
+                else req.prefill_pos
+            self.prefix_cache.insert(req.prefill_tokens, req.blocks,
+                                     committed=committed,
+                                     include_tail=req.state == DECODE,
+                                     rid=req.rid)
         self.pool.free(req.blocks)
         req.blocks = []
         if req in self.prefilling:
@@ -369,11 +450,32 @@ class Scheduler:
         req.preemptions += 1
         self.submit(req)
 
+    def cow_alloc(self, req: Request):
+        """One block for a copy-on-write clone (the engine needs it to
+        un-share a page ``req`` is about to write).  Escalates through
+        the same tiers as decode growth — cache eviction, then LRU
+        preemption — and returns None if ``req`` itself ended up the
+        victim (then there is nothing left to clone for)."""
+        while True:
+            got = self._alloc(1)
+            if got is not None:
+                return got[0]
+            victim = self._lru_victim()
+            self.preempt(victim, cause="cow")
+            if victim is req:
+                return None
+
     def finish(self, req: Request, now: float) -> None:
         assert req.state == DECODE
         self._count("serve_requests_total")
         self._emit("finish", rid=req.rid, generated=len(req.generated),
                    preemptions=req.preemptions)
+        if self.prefix_cache is not None and req.blocks:
+            # full pages + the now-quiescent partial tail page become
+            # shareable; the tree's refs keep them alive past the free.
+            self.prefix_cache.insert(req.prefill_tokens, req.blocks,
+                                     committed=len(req.prefill_tokens),
+                                     include_tail=True, rid=req.rid)
         self.pool.free(req.blocks)
         req.blocks = []
         self.running.pop(req.slot)

@@ -223,11 +223,13 @@ def test_registry_snapshot_is_strict_json():
 
 def test_block_pool_tracks_high_water():
     pool = BlockPool(num_blocks=8)
-    assert pool.stats() == {"free": 7, "used": 0, "high_water": 0}
+    assert pool.stats() == {"free": 7, "used": 0, "high_water": 0,
+                            "shared": 0}
     a = pool.alloc(3)
     b = pool.alloc(2)
     pool.free(b)
-    assert pool.stats() == {"free": 4, "used": 3, "high_water": 5}
+    assert pool.stats() == {"free": 4, "used": 3, "high_water": 5,
+                            "shared": 0}
     pool.free(a)
     assert pool.stats()["high_water"] == 5                # sticky
     assert pool.alloc(99) is None

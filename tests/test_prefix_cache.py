@@ -1,0 +1,491 @@
+"""Prefix cache subsystem: refcounted pool units, radix-tree
+insert/match/split/evict units, facade policy (final-token cap,
+page-aligned matches for page-granular plans, live-sharer pinning),
+scheduler cache-eviction tier, and the engine-level guarantees — hit-vs-
+cold token parity per backend, CoW invariant (shared pages bitwise
+frozen), tail-page CoW with scrub (poisoned pool), preemption with
+shared pages, hybrid fallback, and cache events in the trace."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.serving import FINISHED, BlockPool, Request, Scheduler
+from repro.serving.prefix_cache import PrefixCache, RadixIndex
+from repro.serving.prefix_cache.workloads import (chatbot_prompts,
+                                                  rag_prompts)
+
+
+def _smoke(backend="socket"):
+    return get_config("stablelm-12b").smoke().replace(
+        attention_backend=backend)
+
+
+def _with_cache(cfg, on=True, **sv):
+    return cfg.replace(serving=cfg.serving.replace(prefix_cache=on, **sv))
+
+
+def _run(cfg, prompts, steps, engine=None, seed=0):
+    from repro.serving.engine import ContinuousBatchingEngine
+    if engine is None:
+        engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0),
+                                          sample_seed=seed)
+    reqs = [Request(prompt=list(p), max_new_tokens=steps, arrival=0.0)
+            for p in prompts]
+    metrics = engine.run(reqs, realtime=False)
+    return engine, reqs, metrics
+
+
+def _shared_prefix_prompts(rng, share=17, uniques=(7, 7, 11), vocab=256):
+    base = rng.integers(0, vocab, size=share).tolist()
+    return [base + rng.integers(0, vocab, size=u).tolist()
+            for u in uniques]
+
+
+# ------------------------------------------------------------ pool units
+
+
+def test_pool_refcount_lifecycle():
+    pool = BlockPool(6)
+    (b,) = pool.alloc(1)
+    assert pool.refcount(b) == 1 and not pool.is_shared(b)
+    pool.ref(b)
+    assert pool.refcount(b) == 2 and pool.is_shared(b)
+    assert pool.stats()["shared"] == 1
+    free_before = pool.num_free
+    pool.free([b])                       # deref: still held by one owner
+    assert pool.refcount(b) == 1 and pool.num_free == free_before
+    pool.free([b])                       # last holder: back on free list
+    assert pool.refcount(b) == 0 and pool.num_free == free_before + 1
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([b])
+    with pytest.raises(ValueError, match="unallocated"):
+        pool.ref(b)
+    with pytest.raises(ValueError, match="trash"):
+        pool.ref(0)
+
+
+# ----------------------------------------------------------- radix units
+
+
+def _toks(rng, n):
+    return rng.integers(0, 256, size=n).tolist()
+
+
+def test_radix_insert_match_roundtrip():
+    idx = RadixIndex(4)
+    rng = np.random.default_rng(0)
+    t = _toks(rng, 11)                   # 2 full pages + 3 spare tokens
+    assert idx.insert(t, [5, 6]) == [5, 6]
+    blocks, full, tail = idx.match(t)
+    assert (blocks, full, tail) == ([5, 6], 2, None)
+    # re-inserting the same pages under different blocks adopts nothing —
+    # existing physical pages win
+    assert idx.insert(t, [7, 8]) == []
+    assert idx.match(t)[0] == [5, 6]
+    assert idx.num_blocks == 2
+    # an unrelated prompt matches nothing
+    assert idx.match(_toks(rng, 8)) == ([], 0, None)
+
+
+def test_radix_split_on_mid_edge_divergence():
+    idx = RadixIndex(4)
+    rng = np.random.default_rng(1)
+    a, b, c, d = (_toks(rng, 4) for _ in range(4))
+    idx.insert(a + b + c, [1, 2, 3])     # one compressed 3-page edge
+    assert idx.insert(a + b + d, [9, 9, 4]) == [4]   # a+b reused
+    assert idx.match(a + b + c) == ([1, 2, 3], 3, None)
+    assert idx.match(a + b + d) == ([1, 2, 4], 3, None)
+    # the shared prefix is now its own (split) edge
+    assert idx.match(a + b) == ([1, 2], 2, None)
+    # diverging INSIDE the split-off deep edge still returns the prefix
+    blocks, full, _ = idx.match(a + b + c[:len(c)] + _toks(rng, 4))
+    assert blocks == [1, 2, 3] and full == 3
+
+
+def test_radix_tail_insert_and_match():
+    idx = RadixIndex(4)
+    rng = np.random.default_rng(2)
+    t = _toks(rng, 10)                   # 2 full pages + 2-row tail
+    # tail without its full pages indexed is refused
+    assert not idx.insert_tail(t, 30, 10)
+    idx.insert(t, [1, 2])
+    assert idx.insert_tail(t, 30, 10)
+    assert not idx.insert_tail(t, 31, 10)     # identical run: dedup
+    assert idx.num_tail_blocks == 1
+    # a prompt sharing the pages + 1 tail row matches into the tail
+    probe = t[:9] + _toks(rng, 4)
+    blocks, full, tail = idx.match(probe)
+    assert blocks == [1, 2] and full == 2
+    entry, rows = tail
+    assert entry.block == 30 and rows == 1
+    # mid-edge stop returns no tail (no node sits there)
+    half = t[:2] + _toks(rng, 6)
+    assert idx.match(half) == ([], 0, None)
+
+
+def test_radix_evict_lru_leaves_inward():
+    idx = RadixIndex(4)
+    rng = np.random.default_rng(3)
+    a, b, c = (_toks(rng, 4) for _ in range(3))
+    idx.insert(a + b, [1, 2])
+    idx.insert(a + c, [1, 3])            # branch: [a] -> {b: 2, c: 3}
+    idx.match(a + b)                     # refresh the b-branch
+    freed = idx.evict(1, can_evict=lambda blk: True)
+    assert freed == [3]                  # LRU leaf (c-branch) goes first
+    # trimming proceeds deep-end-first and never drops a page a longer
+    # cached prefix still needs before that deeper page is gone
+    freed = idx.evict(2, can_evict=lambda blk: True)
+    assert freed == [2, 1] and idx.num_blocks == 0
+    assert idx.match(a + b) == ([], 0, None)
+
+
+def test_radix_evict_stops_at_pinned_blocks():
+    idx = RadixIndex(4)
+    rng = np.random.default_rng(4)
+    a, b = _toks(rng, 4), _toks(rng, 4)
+    idx.insert(a + b, [1, 2])
+    # block 1 pinned (a live request shares it): the deep page 2 can go,
+    # but the edge trim must stop at the pinned shallow page
+    freed = idx.evict(5, can_evict=lambda blk: blk != 1)
+    assert freed == [2]
+    assert idx.match(a) == ([1], 1, None)
+    assert idx.evict(5, can_evict=lambda blk: True) == [1]
+
+
+# ---------------------------------------------------------- facade units
+
+
+def test_prefix_cache_match_caps_at_final_token():
+    pool = BlockPool(12)
+    pc = PrefixCache(pool, block_size=4)
+    rng = np.random.default_rng(5)
+    t = _toks(rng, 8)                    # exact page multiple
+    blocks = pool.alloc(2)
+    pc.insert(t, blocks, committed=8)
+    pool.free(blocks)                    # tree refs keep them alive
+    got, cached = pc.match(t)
+    assert cached == 7 and got == blocks     # final token always prefills
+    got, cached = pc.match(t + _toks(rng, 3))
+    assert cached == 8 and got == blocks     # longer prompt: full pages
+
+
+def test_prefix_cache_page_aligns_without_tail_sharing():
+    pool = BlockPool(12)
+    pc = PrefixCache(pool, block_size=4, tail_shareable=False)
+    rng = np.random.default_rng(6)
+    t = _toks(rng, 10)
+    blocks = pool.alloc(3)
+    pc.insert(t, blocks, committed=10, include_tail=True)
+    assert pc.index.num_tail_blocks == 0     # tail page never indexed
+    got, cached = pc.match(t[:8])            # would cap to 7 mid-page
+    assert cached == 4 and got == blocks[:1]  # aligned down to page edge
+
+
+def test_prefix_cache_insert_tail_only_when_owner_quiesces():
+    pool = BlockPool(12)
+    pc = PrefixCache(pool, block_size=4)
+    rng = np.random.default_rng(7)
+    t = _toks(rng, 10)
+    blocks = pool.alloc(3)
+    pc.insert(t, blocks, committed=10, include_tail=False)  # activate()
+    assert pc.index.num_tail_blocks == 0
+    assert pool.refcount(blocks[2]) == 1
+    pc.insert(t, blocks, committed=10, include_tail=True)   # finish()
+    assert pc.index.num_tail_blocks == 1
+    assert pool.refcount(blocks[2]) == 2
+
+
+def test_prefix_cache_evict_skips_live_sharers():
+    pool = BlockPool(12)
+    pc = PrefixCache(pool, block_size=4)
+    rng = np.random.default_rng(8)
+    t = _toks(rng, 12)
+    blocks = pool.alloc(3)
+    pc.insert(t, blocks, committed=12)
+    pool.free(blocks)                    # owner gone: tree-only, rc 1
+    pool.ref(blocks[0])                  # a "live request" pins page 0
+    assert pc.evictable_blocks() == 2
+    assert pc.evict(3) == 2              # deep pages drop, pinned stays
+    assert pool.is_allocated(blocks[0])
+    assert not pool.is_allocated(blocks[2])
+    got, cached = pc.match(t)
+    assert got == [blocks[0]] and cached == 4
+
+
+def test_scheduler_alloc_uses_cache_eviction_tier():
+    """Cache eviction is the first reclamation tier: an admission whose
+    deficit is covered by tree-only pages evicts them instead of failing
+    (and never preempts anyone)."""
+    pool = BlockPool(8)                  # 7 usable blocks
+    s = Scheduler(pool, max_batch=2, max_blocks_per_seq=8, block_size=4,
+                  prefill_chunk=8)
+    pc = s.prefix_cache = PrefixCache(pool, block_size=4)
+    rng = np.random.default_rng(9)
+    stale = _toks(rng, 20)
+    blocks = pool.alloc(5)
+    pc.insert(stale, blocks, committed=20)
+    pool.free(blocks)                    # 5 tree-only pages, 2 free
+    r = Request(prompt=_toks(rng, 16), max_new_tokens=4, arrival=0.0)
+    s.submit(r)
+    assert s.try_admit(0.0) is r         # needs 2 + headroom: evicts 1
+    assert pool.is_allocated(r.blocks[0])
+    assert pc.shared_blocks < 5
+
+
+# --------------------------------------------------- engine: parity
+
+
+@pytest.mark.parametrize("backend", ["socket", "dense", "hard_lsh",
+                                     "quest"])
+def test_hit_vs_cold_token_parity(backend):
+    """Cache-on serving of a shared-prefix workload must generate the
+    exact cold-path tokens for every paged backend and the dense
+    fallback — and must actually hit (the shared prefix spans 2 full
+    pages; admissions serialize with prefill completion, so every
+    later request sees the first one's pages)."""
+    cfg = _smoke(backend)
+    rng = np.random.default_rng(10)
+    prompts = _shared_prefix_prompts(rng, vocab=cfg.vocab_size)
+    _, cold, _ = _run(_with_cache(cfg, False), prompts, steps=6)
+    eng, warm, _ = _run(_with_cache(cfg, True), prompts, steps=6)
+    assert eng.prefix_cache is not None
+    reg = eng.registry
+    assert reg.value("prefix_cache_hits_total") >= 2
+    assert reg.value("prefix_cache_cached_tokens_total") >= 2 * 16
+    for w, c in zip(warm, cold):
+        assert w.state == FINISHED and w.generated == c.generated, backend
+
+
+def test_quest_shares_page_aligned_only():
+    """Quest's per-page min/max stats summarize every row of a page, so
+    its plan shares page-aligned prefixes only (no tail entries, CoW
+    structurally unreachable) — and a direct CoW clone on such a plan
+    refuses at trace time."""
+    from repro.serving import paged
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _with_cache(_smoke("quest"))
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    assert eng.prefix_cache is not None
+    assert not eng.prefix_cache.tail_shareable
+    with pytest.raises(ValueError, match="page-granular"):
+        paged.clone_block(cfg, eng.pages, 1, 2, 3)
+
+
+def test_warm_engine_tail_hit_triggers_cow_and_stays_exact():
+    """Second batch on a warm engine: its prompt extends a finished
+    request's prompt past the partial tail page, so admission installs
+    the shared tail, the first chunk starts mid-page, and the engine
+    must CoW-clone (with scrub) before writing — token output identical
+    to a cold engine."""
+    cfg = _with_cache(_smoke("socket"))
+    rng = np.random.default_rng(11)
+    first = rng.integers(0, cfg.vocab_size, size=21).tolist()
+    ext = first + rng.integers(0, cfg.vocab_size, size=11).tolist()
+
+    _, cold, _ = _run(_with_cache(cfg, False), [ext], steps=5)
+    eng, _, _ = _run(cfg, [first], steps=5)
+    assert eng.prefix_cache.index.num_tail_blocks == 1
+    eng, warm, _ = _run(cfg, [ext], steps=5, engine=eng)
+    reg = eng.registry
+    assert reg.value("prefix_cache_hits_total") == 1
+    # 2 full pages + 5 tail rows matched; the chunk write un-shares the
+    # tail page via exactly one CoW clone
+    assert reg.value("prefix_cache_cached_tokens_total") == 21
+    assert reg.value("prefix_cache_cow_total") == 1
+    assert warm[0].generated == cold[0].generated
+
+
+def test_cow_invariant_shared_pages_bitwise_frozen():
+    """Property test for the CoW contract: across an entire warm serve,
+    any physical page with pool refcount > 1 is bitwise unchanged from
+    one engine iteration to the next (writers must clone, never mutate
+    in place)."""
+    cfg = _with_cache(_smoke("socket"))
+    rng = np.random.default_rng(12)
+    prompts = _shared_prefix_prompts(rng, share=21, uniques=(9, 13, 7),
+                                     vocab=cfg.vocab_size)
+    eng, _, _ = _run(cfg, [prompts[0]], steps=6)   # seed the cache
+
+    def paged_leaves(pages):
+        return [lf for lf in jax.tree_util.tree_leaves(pages)
+                if hasattr(lf, "shape") and lf.ndim >= 1
+                and lf.shape[0] == eng.pool.num_blocks]
+
+    prev = {}
+    checked = [0]
+
+    def hook(engine, _it):
+        shared = {b for b in range(1, engine.pool.num_blocks)
+                  if engine.pool.is_shared(b)}
+        snap = {b: [np.asarray(lf[b]) for lf in paged_leaves(engine.pages)]
+                for b in shared}
+        for b in shared & set(prev):
+            for old, new in zip(prev[b], snap[b]):
+                np.testing.assert_array_equal(old, new, err_msg=(
+                    f"shared block {b} mutated in place"))
+            checked[0] += 1
+        prev.clear()
+        prev.update(snap)
+
+    eng.iter_hook = hook
+    eng, warm, _ = _run(cfg, prompts[1:], steps=6, engine=eng)
+    eng.iter_hook = None
+    assert checked[0] > 0, "no shared pages were ever live across steps"
+    assert eng.registry.value("prefix_cache_hits_total") >= 2
+    assert all(r.state == FINISHED for r in warm)
+
+
+def test_poisoned_pool_shared_prefix_parity():
+    """Scrub-on-clone: with every paged leaf pre-poisoned, a warm serve
+    through shared pages + tail CoW must still match a clean cold
+    engine bit-for-bit — if the clone path kept (or the share path
+    exposed) any non-written row, the poison would surface in the
+    logits."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _with_cache(_smoke("socket"))
+    rng = np.random.default_rng(13)
+    first = rng.integers(0, cfg.vocab_size, size=21).tolist()
+    ext = first + rng.integers(0, cfg.vocab_size, size=11).tolist()
+    _, cold, _ = _run(_with_cache(cfg, False), [ext], steps=5)
+
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    # poison every allocatable page (block 0 — the trash page — keeps its
+    # init fill; its masking is a separate, pre-existing guarantee)
+    eng.pages = jax.tree_util.tree_map(
+        lambda lf: lf.at[1:].set(jnp.asarray(1e4).astype(lf.dtype)),
+        eng.pages)
+    eng, _, _ = _run(cfg, [first], steps=5, engine=eng)
+    eng, warm, _ = _run(cfg, [ext], steps=5, engine=eng)
+    assert eng.registry.value("prefix_cache_cow_total") >= 1
+    assert warm[0].generated == cold[0].generated
+
+
+# ------------------------------------------- engine: pressure + fallback
+
+
+def test_preemption_with_shared_pages_token_exact():
+    """Pool pressure on a cache-on shared-prefix workload: preemptions
+    (of requests holding shared pages) and cache evictions interleave,
+    and the run must still reproduce the calm cache-off tokens."""
+    cfg = _with_cache(_smoke("socket"))
+    rng = np.random.default_rng(14)
+    prompts = _shared_prefix_prompts(rng, share=17, uniques=(7, 7),
+                                     vocab=cfg.vocab_size)
+    _, calm, mc = _run(_with_cache(cfg, False, num_blocks=48), prompts,
+                       steps=20)
+    hot_cfg = _with_cache(cfg, True, num_blocks=10, max_batch=2)
+    eng, hot, mh = _run(hot_cfg, prompts, steps=20)
+    assert mh.preemptions > 0 and mc.preemptions == 0
+    for h, c in zip(hot, calm):
+        assert h.state == FINISHED and len(h.generated) == 20
+        assert h.generated == c.generated
+
+
+def test_eviction_under_pressure_never_frees_live_sharers():
+    """While the pressured run above executes, every cache eviction must
+    leave shared (refcount > 1) pages allocated — checked continuously
+    via the iteration hook."""
+    cfg = _with_cache(_smoke("socket"), num_blocks=10, max_batch=2)
+    rng = np.random.default_rng(15)
+    prompts = _shared_prefix_prompts(rng, share=17, uniques=(7, 7),
+                                     vocab=cfg.vocab_size)
+
+    def hook(engine, _it):
+        for r in list(engine.scheduler.running.values()) + \
+                engine.scheduler.prefilling:
+            for b in r.blocks:
+                assert engine.pool.is_allocated(b), (
+                    f"request {r.rid} holds freed block {b}")
+
+    from repro.serving.engine import ContinuousBatchingEngine
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    eng.iter_hook = hook
+    _, reqs, m = _run(cfg, prompts, steps=20, engine=eng)
+    assert all(r.state == FINISHED for r in reqs)
+    assert eng.registry.value("prefix_cache_evicted_total") >= 0
+    assert m.preemptions > 0
+
+
+def test_hybrid_plans_fall_back_to_no_share():
+    """gemma3's ring layers recycle their page prefix in place, so the
+    prefix-cache flag must degrade to a plain serve (no cache object,
+    tokens unchanged) rather than sharing unsoundly."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = get_config("gemma3-27b").smoke().replace(num_groups=1)
+    rng = np.random.default_rng(16)
+    prompts = [rng.integers(0, cfg.vocab_size, size=n).tolist()
+               for n in (12, 20)]
+    _, off, _ = _run(_with_cache(cfg, False), prompts, steps=4)
+    eng = ContinuousBatchingEngine(_with_cache(cfg, True),
+                                   rng=jax.random.PRNGKey(0))
+    assert eng.prefix_cache is None
+    _, on, _ = _run(_with_cache(cfg, True), prompts, steps=4, engine=eng)
+    for a, b in zip(on, off):
+        assert a.state == FINISHED and a.generated == b.generated
+
+
+def test_legacy_prefill_falls_back_to_no_share():
+    """Whole-bucket prefill has no chunk cursor, so a cache hit cannot
+    resume mid-prompt: the flag degrades to no cache."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _with_cache(_smoke("socket"), prefill_chunk=0)
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    assert eng.prefix_cache is None
+
+
+# --------------------------------------------------- workloads + events
+
+
+def test_workload_generators_shape_and_overlap():
+    chat = chatbot_prompts(6, sessions=2, system_len=16, turn_len=12,
+                           max_prompt_len=48, vocab_size=256, seed=0)
+    assert len(chat) == 6 and all(len(p) <= 48 for p in chat)
+    # consecutive turns of one session extend the previous turn's prompt
+    assert chat[2][:len(chat[0])] == chat[0]
+    assert chat[3][:len(chat[1])] == chat[1]
+    # sessions differ past the shared system prompt
+    assert chat[0][:16] == chat[1][:16] and chat[0] != chat[1]
+
+    rag = rag_prompts(5, prompt_len=40, overlap=0.6, vocab_size=256,
+                      seed=0)
+    assert all(len(p) == 40 for p in rag)
+    shared = rag[0][:24]
+    assert all(p[:24] == shared for p in rag)
+    assert len({tuple(p) for p in rag}) == 5
+    with pytest.raises(ValueError, match="overlap"):
+        rag_prompts(2, overlap=1.5)
+
+
+def test_trace_carries_cache_events_and_validates(tmp_path):
+    from repro.serving.obs import (Observability, events,
+                                   write_chrome_trace)
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _with_cache(_smoke("socket"))
+    rng = np.random.default_rng(17)
+    first = rng.integers(0, cfg.vocab_size, size=21).tolist()
+    ext = first + rng.integers(0, cfg.vocab_size, size=11).tolist()
+    path = tmp_path / "trace.jsonl"
+    obs = Observability(str(path))
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0),
+                                   obs=obs)
+    _run(cfg, [first], steps=5, engine=eng)
+    _run(cfg, [ext], steps=5, engine=eng)
+    obs.close()
+    with open(path) as f:
+        evs = events.validate_jsonl(f)
+    kinds = {e["ev"] for e in evs}
+    assert {"cache_hit", "cache_miss", "page_share", "cow_copy"} <= kinds
+    assert evs[0]["prefix_cache"] is True
+    out = tmp_path / "chrome.json"
+    trace = write_chrome_trace(str(path), str(out))
+    names = {t.get("name", "") for t in trace["traceEvents"]}
+    assert any(n.startswith("cache hit") for n in names)
+    assert "cow copy" in names
