@@ -8,16 +8,20 @@ gathered-bytes accounting (full contiguous views vs the paged top-k
 gather vs the fused paged kernel's zero-materialization pass) that the
 DecodeBackend/KVView redesign exists to win.
 
-The pseudo-backend ``socket_fused`` is SOCKET with
-``cfg.socket.use_paged_kernel``: the whole score → select → attend
-pipeline runs as one Pallas pass over the block table, so its
-``gathered_kb_per_step`` reports ≈ 0 vs the unfused paged path's
-O(top_k) rows (and the dense path's full views).
+The ``*_fused`` pseudo-backends (``socket_fused``, ``hard_lsh_fused``,
+``quest_fused``) set the corresponding ``cfg.*.use_paged_kernel``: the
+whole score → select → attend pipeline runs as one Pallas pass over the
+block table, so their ``gathered_kb_per_step`` reports ≈ 0 vs the
+unfused paged paths' O(top_k) rows (and the dense path's full views) —
+asserted here, so a routing regression fails the bench.
 
 Hybrid rows (``hybrid_gemma3`` / ``hybrid_jamba``) serve the
 heterogeneous per-layer cache-plan configs — 5:1 local:global and
 attn:mamba — where window layers report *bounded* gathered bytes
-(``window_kb_per_step``) and mamba layers ~0.
+(``window_kb_per_step``) and mamba layers ~0.  The
+``hybrid_gemma3_ringfused`` row additionally sets
+``cfg.use_ring_kernel`` so the local layers stream their circular page
+lists through the Pallas ring pass — ``window_kb_per_step`` asserted 0.
 
 Head-of-line rows (``serve_longprompt_chunked`` /
 ``serve_longprompt_unchunked``) replay the same workload — one
@@ -67,6 +71,7 @@ def _footprint_metrics(cfg):
         "state_kb_per_step": fp["state_bytes_per_step"] / 1024,
         "selected_kv_rows": fp["selected_rows"],
         "fused_paged_kernel": fp["fused_paged_kernel"],
+        "fused_ring_kernel": fp["fused_ring_kernel"],
     }
 
 
@@ -87,7 +92,8 @@ def _serve_row(m, num_requests, cfg):
 
 
 def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
-        backends=("socket", "socket_fused", "dense"),
+        backends=("socket", "socket_fused", "dense", "hard_lsh_fused",
+                  "quest_fused"),
         hybrids=tuple(HYBRID_ARCHS)):
     """Benchmark-harness entry point (see benchmarks/run.py).
 
@@ -131,12 +137,19 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
         row = _serve_row(m, num_requests, cfg)
         if obs is not None:
             row["probe"] = obs.probe_summary()
+        if backend.endswith("_fused"):
+            # the point of the fused kernels: zero gathered pool bytes
+            assert row["fused_paged_kernel"], (
+                f"{backend}: fused_paged() did not claim the kernel path")
+            assert row["gathered_kb_per_step"] == 0, (
+                f"{backend}: fused paged path gathered "
+                f"{row['gathered_kb_per_step']} KiB/step, expected 0")
         rows.append((f"serve_continuous_{backend}", row))
 
         # static lockstep baseline: same #sequences at the mean length
-        # (the fused kernel only exists on the paged path — its static
-        # run would duplicate plain socket's)
-        if backend == "socket_fused":
+        # (the fused kernels only exist on the paged path — their static
+        # runs would duplicate the unfused backends')
+        if backend.endswith("_fused"):
             continue
         mean_len = int(sum(lens) / len(lens))
         _, prefill_s, decode_s = run_serve(
@@ -155,8 +168,17 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
     # jamba's attn:mamba patterns on the continuous engine (window
     # layers ring-paged, mamba layers per-slot state, global layers
     # socket-paged); fewer requests — they are deeper stacks.
-    for name in hybrids:
-        cfg = _cfg_for("socket", smoke, arch=HYBRID_ARCHS[name])
+    hybrid_rows = [(name, HYBRID_ARCHS[name], False) for name in hybrids]
+    if "hybrid_gemma3" in hybrids:
+        # the same 5:1 local:global stack with the Pallas ring pass on
+        # its local layers: bounded window gathers drop to 0 outright
+        hybrid_rows.append(
+            ("hybrid_gemma3_ringfused", HYBRID_ARCHS["hybrid_gemma3"],
+             True))
+    for name, arch, ring_fused in hybrid_rows:
+        cfg = _cfg_for("socket", smoke, arch=arch)
+        if ring_fused:
+            cfg = cfg.replace(use_ring_kernel=True)
         ceiling = serving_ceiling(cfg)
         top = ceiling - max_new
         if top < 1:
@@ -170,7 +192,13 @@ def run(smoke: bool = True, num_requests: int = 8, max_new: int = 8,
                                     max_new_tokens=max_new, seed=0,
                                     warmup=True)
         assert all(r.state == "finished" for r in reqs)
-        rows.append((f"serve_continuous_{name}", _serve_row(m, n, cfg)))
+        row = _serve_row(m, n, cfg)
+        if ring_fused:
+            assert row["window_kb_per_step"] == 0, (
+                f"{name}: ring-fused local layers gathered "
+                f"{row['window_kb_per_step']} KiB/step of window view, "
+                "expected 0")
+        rows.append((f"serve_continuous_{name}", row))
 
     # head-of-line rate sweep: one maximal prompt lands while short
     # requests stream tokens; the legacy engine stalls every decode for

@@ -99,6 +99,11 @@ class QuestSettings:
 
     page_size: int = 16
     min_pages: int = 4
+    # Route PagedView decode through the fused kernels/paged_attention
+    # quest pass: page-bound scoring from the kmin/kmax leaves +
+    # page-granular radix select + attend in one sweep over the block
+    # table, zero XLA gathers on the K/V pool.
+    use_paged_kernel: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -219,6 +224,11 @@ class ModelConfig:
     attention_backend: str = "socket"
     socket: SocketSettings = SocketSettings()
     quest: QuestSettings = QuestSettings()
+    # Route sliding-window (ring) layer decode through the Pallas
+    # kernels/paged_attention ring pass: stream the circular page list
+    # straight from the pool with the window mask applied in-kernel
+    # instead of gathering the ring K/V via XLA.
+    use_ring_kernel: bool = False
     # --- continuous-batching serving engine (repro.serving) ----------------
     serving: ServingSettings = ServingSettings()
     # context-parallel SOCKET decode: shard_map local-topk + psum merge over
@@ -249,6 +259,51 @@ class ModelConfig:
     def ssm_heads(self) -> int:
         return self.d_inner // self.ssm_head_dim
 
+    # ----------------------------------------------------------- validation
+    def validate(self) -> None:
+        """Config-time fused-kernel eligibility: every combination the
+        Pallas paged kernels would reject at trace time (deep inside a
+        jitted serving step, with a Pallas traceback) is rejected here
+        with the offending flag pair named.  Called from
+        :meth:`cache_plan`, so any serving-engine construction fails
+        before the first step is traced."""
+        if self.socket.use_paged_kernel:
+            if self.socket.bits_storage != "packed":
+                raise ValueError(
+                    "socket.use_paged_kernel=True is incompatible with "
+                    "socket.bits_storage='int8': the fused paged kernel "
+                    "streams packed uint32 hash words — set "
+                    "bits_storage='packed' or disable use_paged_kernel")
+            if self.socket.selection not in ("kvhead", "pooled"):
+                raise ValueError(
+                    f"socket.use_paged_kernel=True is incompatible with "
+                    f"socket.selection='{self.socket.selection}': the "
+                    "fused paged kernel group-sums scores — use "
+                    "selection='kvhead'/'pooled' or disable "
+                    "use_paged_kernel")
+            if self.serving.block_size % 8:
+                raise ValueError(
+                    f"socket.use_paged_kernel=True needs "
+                    f"serving.block_size % 8 == 0 (f32 sublane tiling), "
+                    f"got block_size={self.serving.block_size}")
+        if self.quest.use_paged_kernel:
+            if self.serving.block_size % 8:
+                raise ValueError(
+                    f"quest.use_paged_kernel=True needs "
+                    f"serving.block_size % 8 == 0 (f32 sublane tiling), "
+                    f"got block_size={self.serving.block_size}")
+            if self.serving.block_size % self.quest.page_size:
+                raise ValueError(
+                    f"quest.use_paged_kernel=True needs quest.page_size "
+                    f"({self.quest.page_size}) to divide "
+                    f"serving.block_size ({self.serving.block_size}) so "
+                    "each pool block carries whole min/max pages")
+        if self.use_ring_kernel and self.serving.block_size % 8:
+            raise ValueError(
+                f"use_ring_kernel=True needs serving.block_size % 8 == 0 "
+                f"(f32 sublane tiling), got "
+                f"block_size={self.serving.block_size}")
+
     # ------------------------------------------------------ cache planning
     def ring_geometry(self) -> Tuple[int, int]:
         """(blocks, rows) of the paged sliding-window ring: the circular
@@ -271,6 +326,7 @@ class ModelConfig:
     def cache_plan(self) -> Tuple[LayerCachePlan, ...]:
         """Per-layer heterogeneous cache plan (one entry per
         ``layer_specs``) for the paged continuous-batching engine."""
+        self.validate()
         return tuple(self.plan_for(s) for s in self.layer_specs)
 
     @property

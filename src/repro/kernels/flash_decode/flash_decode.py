@@ -69,12 +69,22 @@ def flash_decode_pallas(q: jax.Array, k: jax.Array, v: jax.Array,
                         mask: jax.Array, *, scale: float,
                         block_k: int = DEFAULT_BLOCK_K,
                         interpret: bool = True) -> jax.Array:
-    """q (BH, G, hd); k/v (BH, K, hd); mask (BH, K) -> f32 (BH, G, hd)."""
+    """q (BH, G, hd); k/v (BH, K, hd); mask (BH, K) -> f32 (BH, G, hd).
+
+    ``K`` need not divide ``block_k``: the tail (and a whole short
+    ``K < block_k`` buffer) is padded to the block boundary with
+    mask-off rows, which the kernel already scores as ``-inf``.
+    """
     bh, g, hd = q.shape
     kk = k.shape[1]
-    if kk % block_k:
-        raise ValueError(f"K={kk} not a multiple of block_k={block_k}")
-    nkb = kk // block_k
+    blk = max(1, min(block_k, kk))
+    pad = (-kk) % blk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    block_k = blk
+    nkb = (kk + pad) // block_k
     kernel = functools.partial(_decode_kernel, scale=float(scale),
                                num_k_blocks=nkb)
     return pl.pallas_call(

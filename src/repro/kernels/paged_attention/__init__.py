@@ -1,4 +1,13 @@
-from repro.kernels.paged_attention.ops import paged_socket_attend
-from repro.kernels.paged_attention.ref import paged_socket_attend_ref
+from repro.kernels.paged_attention.ops import (
+    paged_hard_lsh_attend, paged_quest_attend, paged_ring_attend,
+    paged_socket_attend)
+from repro.kernels.paged_attention.ref import (
+    paged_hard_lsh_attend_ref, paged_quest_attend_ref, paged_ring_attend_ref,
+    paged_socket_attend_ref)
 
-__all__ = ["paged_socket_attend", "paged_socket_attend_ref"]
+__all__ = [
+    "paged_socket_attend", "paged_socket_attend_ref",
+    "paged_hard_lsh_attend", "paged_hard_lsh_attend_ref",
+    "paged_quest_attend", "paged_quest_attend_ref",
+    "paged_ring_attend", "paged_ring_attend_ref",
+]

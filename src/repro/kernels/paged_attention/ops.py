@@ -17,6 +17,9 @@ import jax.numpy as jnp
 
 from repro.kernels.paged_attention.paged_attention import (
     paged_attention_pallas)
+from repro.kernels.paged_attention.paged_hard_lsh import paged_hard_lsh_pallas
+from repro.kernels.paged_attention.paged_quest import paged_quest_pallas
+from repro.kernels.paged_attention.paged_ring import paged_ring_pallas
 
 
 def _auto_interpret() -> bool:
@@ -80,3 +83,144 @@ def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     if orig5:
         out = out[:, :, :, None]                            # (B,KVH,G,1,hd)
     return (out, sel) if with_selection else out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "num_tables", "num_planes", "scale", "sink_tokens", "window_tokens",
+    "interpret", "with_selection"))
+def _hard_lsh_flat(q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs,
+                   bt, length, budget, *, num_tables, num_planes, scale,
+                   sink_tokens, window_tokens, interpret, with_selection):
+    return paged_hard_lsh_pallas(
+        q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs, bt, length,
+        budget, num_tables=num_tables, num_planes=num_planes, scale=scale,
+        sink_tokens=sink_tokens, window_tokens=window_tokens,
+        interpret=interpret, with_selection=with_selection)
+
+
+def paged_hard_lsh_attend(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, bits_pages: jax.Array,
+                          vnorm_pages: jax.Array, u_signs: jax.Array,
+                          block_table: jax.Array, *, length, budget,
+                          num_tables: int, num_planes: int, scale: float,
+                          sink_tokens: int, window_tokens: int,
+                          interpret: Optional[bool] = None,
+                          with_selection: bool = False):
+    """Fused hard-collision score→select→attend for one decode step.
+
+    Same shapes as :func:`paged_socket_attend` except the query-side
+    hash is ``u_signs`` — f32 ±1 plane signs ``(B, KVH, GS, L, P)``
+    (``where(u >= 0, +1, -1)`` of the soft hash).
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    orig5 = q.ndim == 5
+    if orig5:
+        b, kvh, g, t, hd = q.shape
+        assert t == 1
+        q = q.reshape(b, kvh, g, hd)
+    b = q.shape[0]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
+    out = _hard_lsh_flat(
+        q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs, block_table,
+        length, budget, num_tables=num_tables, num_planes=num_planes,
+        scale=float(scale), sink_tokens=int(sink_tokens),
+        window_tokens=int(window_tokens), interpret=interpret,
+        with_selection=with_selection)
+    if with_selection:
+        out, sel = out
+        sel = sel.reshape(*sel.shape[:2], -1).astype(bool)  # (B,KVH,N)
+    if orig5:
+        out = out[:, :, :, None]                            # (B,KVH,G,1,hd)
+    return (out, sel) if with_selection else out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "page_size", "scale", "sink_tokens", "window_tokens", "interpret",
+    "with_selection"))
+def _quest_flat(q, k_pages, v_pages, kmin_pages, kmax_pages, bt, length,
+                page_budget, *, page_size, scale, sink_tokens,
+                window_tokens, interpret, with_selection):
+    return paged_quest_pallas(
+        q, k_pages, v_pages, kmin_pages, kmax_pages, bt, length,
+        page_budget, page_size=page_size, scale=scale,
+        sink_tokens=sink_tokens, window_tokens=window_tokens,
+        interpret=interpret, with_selection=with_selection)
+
+
+def paged_quest_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       kmin_pages: jax.Array, kmax_pages: jax.Array,
+                       block_table: jax.Array, *, length, page_budget,
+                       page_size: int, scale: float, sink_tokens: int,
+                       window_tokens: int,
+                       interpret: Optional[bool] = None,
+                       with_selection: bool = False):
+    """Fused page-granular Quest select→attend for one decode step.
+
+    Shapes:
+      q              (B, KVH, G, 1, hd) or (B, KVH, G, hd)
+      k/v_pages      (NB, KVH, bs, hd)
+      kmin/kmax      (NB, KVH, bs / page_size, hd) per-page key bounds
+      block_table    int32 (B, nb)
+      length         int32 scalar or (B,)
+      page_budget    int scalar or (B,) — pages to attend (the static
+                     ``baselines.quest.page_budget``)
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    orig5 = q.ndim == 5
+    if orig5:
+        b, kvh, g, t, hd = q.shape
+        assert t == 1
+        q = q.reshape(b, kvh, g, hd)
+    b = q.shape[0]
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    page_budget = jnp.broadcast_to(jnp.asarray(page_budget, jnp.int32), (b,))
+    out = _quest_flat(
+        q, k_pages, v_pages, kmin_pages, kmax_pages, block_table, length,
+        page_budget, page_size=int(page_size), scale=float(scale),
+        sink_tokens=int(sink_tokens), window_tokens=int(window_tokens),
+        interpret=interpret, with_selection=with_selection)
+    if with_selection:
+        out, sel = out
+        sel = sel.reshape(*sel.shape[:2], -1).astype(bool)  # (B,KVH,N)
+    if orig5:
+        out = out[:, :, :, None]                            # (B,KVH,G,1,hd)
+    return (out, sel) if with_selection else out
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "scale", "interpret"))
+def _ring_flat(q, k_pages, v_pages, bt, pos, *, window, softcap, scale,
+               interpret):
+    return paged_ring_pallas(q, k_pages, v_pages, bt, pos, window=window,
+                             softcap=softcap, scale=scale,
+                             interpret=interpret)
+
+
+def paged_ring_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      block_table: jax.Array, *, pos, window: int,
+                      softcap: float, scale: float,
+                      interpret: Optional[bool] = None):
+    """Fused sliding-window decode over the circular page list.
+
+    Shapes:
+      q            (B, KVH, G, 1, hd) or (B, KVH, G, hd)
+      k/v_pages    (NB, KVH, bs, hd)
+      block_table  int32 (B, ring_blocks) — the ring slice of the table
+      pos          int32 scalar or (B,) — the decode token's position
+                   (already written to its ring slot)
+    """
+    interpret = _auto_interpret() if interpret is None else interpret
+    orig5 = q.ndim == 5
+    if orig5:
+        b, kvh, g, t, hd = q.shape
+        assert t == 1
+        q = q.reshape(b, kvh, g, hd)
+    b = q.shape[0]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    out = _ring_flat(q, k_pages, v_pages, block_table, pos,
+                     window=int(window), softcap=float(softcap),
+                     scale=float(scale), interpret=interpret)
+    if orig5:
+        out = out[:, :, :, None]                            # (B,KVH,G,1,hd)
+    return out

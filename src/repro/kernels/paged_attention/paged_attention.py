@@ -70,7 +70,8 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
                   q_ref, bits_ref, vnorm_ref, u_ref, logz_ref, k_ref, v_ref,
                   *rest, num_planes: int, l_pad: int, tau: float,
                   scale: float, sink: int, window: int, block_size: int,
-                  num_seq_blocks: int, with_selection: bool):
+                  num_seq_blocks: int, with_selection: bool,
+                  mode: str = "socket"):
     if with_selection:
         out_ref, sel_ref = rest[0], rest[1]
         eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[2:]
@@ -94,12 +95,21 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
         signs = signs.reshape(bs, l_pad, num_planes)
 
         u = u_ref[0, 0]                           # (GS, l_pad, P) f32
-        logz = logz_ref[0, 0]                     # (GS, l_pad)
-        # factorized score, same reduction order as the XLA reference:
-        # exp(logits - logZ) summed over tables first, then the group
-        logits = jnp.einsum("nlp,glp->gnl", signs, u) / tau
-        z = jnp.exp(logits - logz[:, None, :])    # (GS, bs, l_pad)
-        scores = jnp.sum(jnp.sum(z, axis=-1), axis=0)           # (bs,)
+        if mode == "socket":
+            logz = logz_ref[0, 0]                 # (GS, l_pad)
+            # factorized score, same reduction order as the XLA reference:
+            # exp(logits - logZ) summed over tables first, then the group
+            logits = jnp.einsum("nlp,glp->gnl", signs, u) / tau
+            z = jnp.exp(logits - logz[:, None, :])   # (GS, bs, l_pad)
+            scores = jnp.sum(jnp.sum(z, axis=-1), axis=0)       # (bs,)
+        else:                                     # hard_lsh
+            # u holds the query's ±1 plane signs (0 in the padded table
+            # slots, so agree < P there and padding never counts); a key
+            # collides in a table iff every plane sign agrees — the ±1
+            # inner product attains P exactly in that case.
+            agree = jnp.einsum("nlp,glp->gnl", signs, u)
+            hits = (agree >= jnp.float32(num_planes)).astype(jnp.float32)
+            scores = jnp.sum(jnp.sum(hits, axis=-1), axis=0)    # (bs,)
         eff = scores * vnorm_ref[0, 0].astype(jnp.float32)
 
         pos = (jax.lax.broadcasted_iota(jnp.int32, (bs, 1), 0).reshape(bs)
@@ -180,58 +190,16 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
                              ).astype(out_ref.dtype)
 
 
-def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
-                           v_pages: jax.Array, bits_pages: jax.Array,
-                           vnorm_pages: jax.Array, u: jax.Array,
-                           block_table: jax.Array, length: jax.Array,
-                           budget: jax.Array, *, num_tables: int,
-                           num_planes: int, tau: float, scale: float,
-                           sink_tokens: int, window_tokens: int,
-                           interpret: bool = True,
-                           with_selection: bool = False):
-    """Launch the fused kernel.
-
-    Args:
-      q:           (B, KVH, G, hd) query heads for this KV head group.
-      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
-      bits_pages:  uint32 (NB, KVH, bs, W) packed sign bits.
-      vnorm_pages: (NB, KVH, bs) value norms (any float dtype).
-      u:           f32 (B, KVH, GS, L, P) query soft-hash (GS=1 pooled).
-      block_table: int32 (B, nb) physical block ids (trash-padded).
-      length:      int32 (B,) live context length per request.
-      budget:      int32 (B,) dynamic top-k budget per request.
-
-    Returns:
-      f32 (B, KVH, G, hd) attention output; with ``with_selection`` also
-      an int32 (B, KVH, nb, bs) selection mask (test/debug only — it is
-      exactly the HBM materialization the production path avoids).
-    """
+def _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
+                k_pages, v_pages, block_table, length, budget, *,
+                with_selection: bool, interpret: bool):
+    """Shared launch plumbing for the socket/hard_lsh fused kernels: the
+    two-phase (score, attend) grid with dual scalar-prefetch index maps
+    and the VMEM score ring + online-softmax scratch layout."""
     b, kvh, g, hd = q.shape
-    nblocks, _, bs, w = bits_pages.shape
+    bs, w = bits_pages.shape[2], bits_pages.shape[3]
     nb = block_table.shape[1]
-    _, _, gs, l, p = u.shape
-    if l != num_tables or p != num_planes:
-        raise ValueError("u shape mismatch")
-    if (w * 32) % num_planes:
-        raise ValueError(
-            f"packed width {w*32} bits not a multiple of P={num_planes}")
-    if k_pages.shape[2] != bs or v_pages.shape[2] != bs \
-            or vnorm_pages.shape[2] != bs:
-        raise ValueError("page pools disagree on block_size")
-    l_pad = (w * 32) // num_planes
-
-    from repro.core import socket as sk
-    logz = sk.log_normalizer(u.astype(jnp.float32), tau)   # (B,KVH,GS,L)
-    pad_l = l_pad - l
-    u_pad = jnp.pad(u.astype(jnp.float32),
-                    ((0, 0), (0, 0), (0, 0), (0, pad_l), (0, 0)))
-    logz_pad = jnp.pad(logz, ((0, 0), (0, 0), (0, 0), (0, pad_l)),
-                       constant_values=jnp.float32(1e30))
-
-    kernel = functools.partial(
-        _fused_kernel, num_planes=num_planes, l_pad=l_pad, tau=float(tau),
-        scale=float(scale), sink=int(sink_tokens), window=int(window_tokens),
-        block_size=bs, num_seq_blocks=nb, with_selection=with_selection)
+    gs, l_pad, num_planes = u_pad.shape[2:]
 
     # K/V pages are pinned to bt[b, 0] during the score phase (and
     # bits/vnorm during the attend phase) so the revisiting pipeline
@@ -283,3 +251,61 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
       budget.astype(jnp.int32), q, bits_pages, vnorm_pages, u_pad, logz_pad,
       k_pages, v_pages)
     return tuple(out) if with_selection else out[0]
+
+
+def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, bits_pages: jax.Array,
+                           vnorm_pages: jax.Array, u: jax.Array,
+                           block_table: jax.Array, length: jax.Array,
+                           budget: jax.Array, *, num_tables: int,
+                           num_planes: int, tau: float, scale: float,
+                           sink_tokens: int, window_tokens: int,
+                           interpret: bool = True,
+                           with_selection: bool = False):
+    """Launch the fused kernel.
+
+    Args:
+      q:           (B, KVH, G, hd) query heads for this KV head group.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      bits_pages:  uint32 (NB, KVH, bs, W) packed sign bits.
+      vnorm_pages: (NB, KVH, bs) value norms (any float dtype).
+      u:           f32 (B, KVH, GS, L, P) query soft-hash (GS=1 pooled).
+      block_table: int32 (B, nb) physical block ids (trash-padded).
+      length:      int32 (B,) live context length per request.
+      budget:      int32 (B,) dynamic top-k budget per request.
+
+    Returns:
+      f32 (B, KVH, G, hd) attention output; with ``with_selection`` also
+      an int32 (B, KVH, nb, bs) selection mask (test/debug only — it is
+      exactly the HBM materialization the production path avoids).
+    """
+    b, kvh, g, hd = q.shape
+    nblocks, _, bs, w = bits_pages.shape
+    nb = block_table.shape[1]
+    _, _, gs, l, p = u.shape
+    if l != num_tables or p != num_planes:
+        raise ValueError("u shape mismatch")
+    if (w * 32) % num_planes:
+        raise ValueError(
+            f"packed width {w*32} bits not a multiple of P={num_planes}")
+    if k_pages.shape[2] != bs or v_pages.shape[2] != bs \
+            or vnorm_pages.shape[2] != bs:
+        raise ValueError("page pools disagree on block_size")
+    l_pad = (w * 32) // num_planes
+
+    from repro.core import socket as sk
+    logz = sk.log_normalizer(u.astype(jnp.float32), tau)   # (B,KVH,GS,L)
+    pad_l = l_pad - l
+    u_pad = jnp.pad(u.astype(jnp.float32),
+                    ((0, 0), (0, 0), (0, 0), (0, pad_l), (0, 0)))
+    logz_pad = jnp.pad(logz, ((0, 0), (0, 0), (0, 0), (0, pad_l)),
+                       constant_values=jnp.float32(1e30))
+
+    kernel = functools.partial(
+        _fused_kernel, num_planes=num_planes, l_pad=l_pad, tau=float(tau),
+        scale=float(scale), sink=int(sink_tokens), window=int(window_tokens),
+        block_size=bs, num_seq_blocks=nb, with_selection=with_selection,
+        mode="socket")
+    return _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
+                       k_pages, v_pages, block_table, length, budget,
+                       with_selection=with_selection, interpret=interpret)

@@ -1,0 +1,242 @@
+"""Pallas TPU kernel: fused Quest paged decode attention.
+
+One decode step of the Quest baseline over the serving engine's paged
+pool, streaming each request's pages once through VMEM via the block
+table (the same two-phase scalar-prefetch layout as the fused SOCKET
+kernel) with **page-granular** selection:
+
+1. **Score pass** (grid phase 0): each pool block carries ``block_size /
+   page_size`` min/max stat rows (the ``kmin``/``kmax`` leaves); the
+   per-page upper bound ``sum_d max(q_d * kmin_d, q_d * kmax_d)`` is
+   summed over the GQA group and appended to a VMEM page-score ring
+   ``eff (nb, pages_per_block)`` with the sink/window ``+FLT_MAX``
+   forcing and past-``length`` ``-1e30`` overlays of
+   :func:`repro.baselines.quest.select_tokens`.
+2. **Select** (phase 1, first block): the 32-step radix descent finds
+   the exact ``page_budget``-th largest page score (the shared
+   :func:`repro.baselines.quest.page_budget`), ties resolved in flat
+   page order to replicate ``jax.lax.top_k``'s stable semantics.
+3. **Attend pass** (phase 1): each block's page-selection mask is
+   reconstructed from the threshold (+ SMEM tie counter), expanded to
+   rows (a row attends iff its page is selected AND its position is
+   live), and the selected rows fold into the flash-style online
+   softmax.
+
+Unlike SOCKET's token selection, pages past ``length`` are *not*
+filtered out of the selection itself — ``lax.top_k`` in the reference
+takes ``page_budget`` pages unconditionally and row validity is applied
+afterwards (``idx < length``), which the kernel mirrors exactly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged_attention.paged_attention import (
+    FLT_MAX, NEG_INF, _sort_key)
+
+__all__ = ["paged_quest_pallas"]
+
+
+def _quest_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
+                  q_ref, kmin_ref, kmax_ref, k_ref, v_ref,
+                  *rest, page_size: int, scale: float, sink: int,
+                  window: int, block_size: int, num_seq_blocks: int,
+                  with_selection: bool):
+    if with_selection:
+        out_ref, sel_ref = rest[0], rest[1]
+        eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[2:]
+    else:
+        out_ref = rest[0]
+        eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[1:]
+
+    b = pl.program_id(0)
+    phase = pl.program_id(2)
+    i = pl.program_id(3)
+    length = len_ref[b]
+    ppb = block_size // page_size
+
+    # ---- phase 0: score this block's pages into the VMEM ring -----------
+    @pl.when(phase == 0)
+    def _score():
+        q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+        kmin = kmin_ref[0, 0].astype(jnp.float32)  # (ppb, hd)
+        kmax = kmax_ref[0, 0].astype(jnp.float32)
+        scores = jnp.zeros((ppb,), jnp.float32)
+        for gi in range(q_ref.shape[2]):          # static GQA group loop
+            qg = q[gi][None, :]                   # (1, hd)
+            scores = scores + jnp.sum(
+                jnp.maximum(kmin * qg, kmax * qg), axis=-1)
+        page_start = (jax.lax.broadcasted_iota(jnp.int32, (ppb, 1), 0)
+                      .reshape(ppb) * page_size + i * block_size)
+        forced = (page_start < sink) | \
+            (page_start >= length - window - page_size)
+        eff = jnp.where(forced, jnp.float32(FLT_MAX), scores)
+        eff = jnp.where(page_start < length, eff, jnp.float32(NEG_INF))
+        eff_scr[i] = eff
+        if with_selection:
+            sel_ref[0, 0, 0] = jnp.zeros((sel_ref.shape[-1],), jnp.int32)
+
+    # ---- phase 1, first block: radix-select the page-budget threshold ---
+    @pl.when((phase == 1) & (i == 0))
+    def _select():
+        keys = _sort_key(eff_scr[...])            # (nb, ppb)
+        bud = bud_ref[b]
+
+        def body(t, prefix):
+            shift = jnp.uint32(31) - t.astype(jnp.uint32)
+            cand = prefix | (jnp.uint32(1) << shift)
+            cnt = jnp.sum((keys >= cand).astype(jnp.int32))
+            return jnp.where(cnt >= bud, cand, prefix)
+
+        thr = jax.lax.fori_loop(0, 32, body, jnp.uint32(0))
+        thr_scr[0] = thr
+        ties_scr[0] = bud - jnp.sum((keys > thr).astype(jnp.int32))
+        cnt_scr[0] = 0
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # ---- phase 1: masked online-softmax over this K/V block -------------
+    @pl.when(phase == 1)
+    def _attend():
+        eff = eff_scr[i]                          # (ppb,)
+        keys = _sort_key(eff)
+        thr = thr_scr[0]
+        gt = keys > thr
+        eq = keys == thr
+        r = jax.lax.broadcasted_iota(jnp.int32, (ppb, ppb), 0)
+        c = jax.lax.broadcasted_iota(jnp.int32, (ppb, ppb), 1)
+        before = (r < c).astype(jnp.float32)
+        prior = jax.lax.dot_general(eq.astype(jnp.float32).reshape(1, ppb),
+                                    before, (((1,), (0,)), ((), ())))
+        tie_rank = cnt_scr[0] + prior.reshape(ppb).astype(jnp.int32)
+        sel_page = gt | (eq & (tie_rank < ties_scr[0]))
+        cnt_scr[0] = cnt_scr[0] + jnp.sum(eq.astype(jnp.int32))
+
+        # expand the page mask to rows via a one-hot matmul (row r belongs
+        # to local page r // page_size) — reshape-free for Mosaic
+        rr = jax.lax.broadcasted_iota(jnp.int32, (block_size, ppb), 0)
+        cc = jax.lax.broadcasted_iota(jnp.int32, (block_size, ppb), 1)
+        expand = ((rr // page_size) == cc).astype(jnp.float32)
+        row_sel = jax.lax.dot_general(
+            expand, sel_page.astype(jnp.float32).reshape(ppb, 1),
+            (((1,), (0,)), ((), ()))).reshape(block_size) > 0.5
+        pos = (jax.lax.broadcasted_iota(jnp.int32, (block_size, 1), 0)
+               .reshape(block_size) + i * block_size)
+        sel = row_sel & (pos < length)
+        if with_selection:
+            sel_ref[0, 0, 0] = sel.astype(jnp.int32)
+
+        q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
+        k = k_ref[0, 0].astype(jnp.float32)       # (bs, hd)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        s = jnp.where(sel[None, :], s, NEG_INF)   # (G, bs)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        p = jnp.where(sel[None, :], p, 0.0)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+        @pl.when(i == num_seq_blocks - 1)
+        def _done():
+            out_ref[0, 0] = (acc_scr[...] /
+                             jnp.maximum(l_scr[...], 1e-30)[:, None]
+                             ).astype(out_ref.dtype)
+
+
+def paged_quest_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       kmin_pages: jax.Array, kmax_pages: jax.Array,
+                       block_table: jax.Array, length: jax.Array,
+                       page_budget: jax.Array, *, page_size: int,
+                       scale: float, sink_tokens: int, window_tokens: int,
+                       interpret: bool = True,
+                       with_selection: bool = False):
+    """Launch the fused Quest kernel.
+
+    Args:
+      q:             (B, KVH, G, hd) query heads for this KV head group.
+      k/v_pages:     (NB, KVH, bs, hd) paged pool leaves.
+      kmin/kmax_pages: (NB, KVH, bs / page_size, hd) per-page key bounds.
+      block_table:   int32 (B, nb) physical block ids (trash-padded).
+      length:        int32 (B,) live context length per request.
+      page_budget:   int32 (B,) pages to select per request (the static
+                     ``baselines.quest.page_budget``; vector for launch
+                     symmetry with the token kernels).
+
+    Returns:
+      f32 (B, KVH, G, hd) attention output; with ``with_selection`` also
+      an int32 (B, KVH, nb, bs) selected-rows mask (test/debug only).
+    """
+    b, kvh, g, hd = q.shape
+    bs = k_pages.shape[2]
+    nb = block_table.shape[1]
+    if v_pages.shape[2] != bs:
+        raise ValueError("page pools disagree on block_size")
+    if bs % page_size:
+        raise ValueError(
+            f"page_size {page_size} must divide block_size {bs}")
+    ppb = bs // page_size
+    if kmin_pages.shape[2] != ppb or kmax_pages.shape[2] != ppb:
+        raise ValueError(
+            f"kmin/kmax pools must carry {ppb} stat rows per block")
+
+    kernel = functools.partial(
+        _quest_kernel, page_size=int(page_size), scale=float(scale),
+        sink=int(sink_tokens), window=int(window_tokens), block_size=bs,
+        num_seq_blocks=nb, with_selection=with_selection)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda b, h, ph, i, *s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, ppb, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * (1 - ph)],
+                                                      h, 0, 0)),
+        pl.BlockSpec((1, 1, ppb, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * (1 - ph)],
+                                                      h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
+    ]
+    out_shape = [jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32)]
+    out_specs = [pl.BlockSpec((1, 1, g, hd),
+                              lambda b, h, ph, i, *s: (b, h, 0, 0))]
+    if with_selection:
+        out_shape.append(jax.ShapeDtypeStruct((b, kvh, nb, bs), jnp.int32))
+        out_specs.append(pl.BlockSpec((1, 1, 1, bs),
+                                      lambda b, h, ph, i, *s: (b, h, i, 0)))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(b, kvh, 2, nb),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[
+            pltpu.VMEM((nb, ppb), jnp.float32),   # page-score ring
+            pltpu.VMEM((g,), jnp.float32),        # m
+            pltpu.VMEM((g,), jnp.float32),        # l
+            pltpu.VMEM((g, hd), jnp.float32),     # acc
+            pltpu.SMEM((1,), jnp.uint32),         # threshold key
+            pltpu.SMEM((1,), jnp.int32),          # ties still to take
+            pltpu.SMEM((1,), jnp.int32),          # ties consumed so far
+        ],
+    )
+    out = pl.pallas_call(
+        kernel, grid_spec=grid_spec, out_shape=out_shape,
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), length.astype(jnp.int32),
+      page_budget.astype(jnp.int32), q, kmin_pages, kmax_pages,
+      k_pages, v_pages)
+    return tuple(out) if with_selection else out[0]

@@ -1,0 +1,138 @@
+"""Pallas TPU kernel: sliding-window (ring) paged decode attention.
+
+Hybrid models' local layers keep only the last ``sliding_window`` tokens
+in a circular page list (``RingView``): slot ``s`` of the ring holds the
+most recent token with ``position % capacity == s``.  The XLA path
+materializes the ring K/V via a pool gather and applies the window mask
+in plain jnp; this kernel instead streams the ring blocks straight from
+the paged pool via the block table (scalar-prefetch index maps) and
+applies the mask in-register — zero gathered bytes per step.
+
+Per (request, KV head) the grid walks the ring blocks once; for each
+slot the kernel reconstructs the position of the token currently stored
+there,
+
+    ring_pos = pos - ((pos - slot) % capacity)
+
+(the newest absolute position congruent to the slot; ``%`` is jnp's
+non-negative modulo), masks slots that are empty (``ring_pos < 0``) or
+aged out of the window (``pos - ring_pos >= window``), and folds the
+live rows into a flash-style online softmax.  Gemma-style logit
+softcapping (``c * tanh(s / c)``) is applied **before** masking, exactly
+as the XLA reference; ``softcap == 0`` statically disables it.
+
+There is no selection phase — every in-window token attends — so the
+grid is single-phase: (B, KVH, ring_blocks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.paged_attention.paged_attention import NEG_INF
+
+__all__ = ["paged_ring_pallas"]
+
+
+def _ring_kernel(bt_ref, pos_ref,                           # scalar prefetch
+                 q_ref, k_ref, v_ref, out_ref,
+                 m_scr, l_scr, acc_scr, *, scale: float, window: int,
+                 softcap: float, block_size: int, ring_blocks: int):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+    pos = pos_ref[b]
+    cap = ring_blocks * block_size
+
+    @pl.when(i == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    slot = (jax.lax.broadcasted_iota(jnp.int32, (block_size, 1), 0)
+            .reshape(block_size) + i * block_size)
+    ring_pos = pos - ((pos - slot) % cap)
+    valid = (ring_pos >= 0) & (pos - ring_pos < window)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)           # (bs, hd)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+    if softcap:                                   # static no-op at 0.0
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[None, :], s, NEG_INF)     # (G, bs)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    p = jnp.where(valid[None, :], p, 0.0)
+    l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())))
+    m_scr[...] = m_new
+
+    @pl.when(i == ring_blocks - 1)
+    def _done():
+        out_ref[0, 0] = (acc_scr[...] /
+                         jnp.maximum(l_scr[...], 1e-30)[:, None]
+                         ).astype(out_ref.dtype)
+
+
+def paged_ring_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                      block_table: jax.Array, pos: jax.Array, *,
+                      window: int, softcap: float, scale: float,
+                      interpret: bool = True):
+    """Launch the ring decode kernel.
+
+    Args:
+      q:           (B, KVH, G, hd) query heads for this KV head group.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      block_table: int32 (B, ring_blocks) — the circular page list only
+                   (callers slice the full table to the ring geometry).
+      pos:         int32 (B,) absolute position of the decode token (the
+                   query's own position; it has already been written to
+                   its ring slot).
+      window:      sliding-window length in tokens.
+      softcap:     attention logit softcap (0.0 disables).
+
+    Returns f32 (B, KVH, G, hd) attention output.
+    """
+    b, kvh, g, hd = q.shape
+    bs = k_pages.shape[2]
+    rb = block_table.shape[1]
+    if v_pages.shape[2] != bs:
+        raise ValueError("page pools disagree on block_size")
+
+    kernel = functools.partial(
+        _ring_kernel, scale=float(scale), window=int(window),
+        softcap=float(softcap), block_size=bs, ring_blocks=rb)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b, kvh, rb),
+        in_specs=[
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, i, *s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, hd),
+                         lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, i, *s: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g,), jnp.float32),        # m
+            pltpu.VMEM((g,), jnp.float32),        # l
+            pltpu.VMEM((g, hd), jnp.float32),     # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
+        interpret=interpret,
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32),
+      q, k_pages, v_pages)

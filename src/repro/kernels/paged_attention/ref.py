@@ -81,3 +81,128 @@ def paged_socket_attend_ref(q: jax.Array, k_pages: jax.Array,
     hidx = jnp.arange(kvh)[None, :, None]
     selected = jnp.zeros((b, kvh, n), bool).at[bidx, hidx, idx].max(mask)
     return out.reshape(b, kvh, g, hd), selected
+
+
+def paged_hard_lsh_attend_ref(q: jax.Array, k_pages: jax.Array,
+                              v_pages: jax.Array, bits_pages: jax.Array,
+                              vnorm_pages: jax.Array, u_signs: jax.Array,
+                              block_table: jax.Array, *, length, budget,
+                              num_tables: int, num_planes: int, scale: float,
+                              sink_tokens: int, window_tokens: int,
+                              top_k: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for :func:`ops.paged_hard_lsh_attend`.
+
+    Identical composition to the socket oracle with the factorized soft
+    score replaced by the backend's hard collision counts
+    (``u_signs``: f32 ±1 query plane signs, ``(B, KVH, G, L, P)``).
+    """
+    from repro.models.backends.hard_lsh import _hard_collision_scores
+
+    if q.ndim == 5:
+        q = q[:, :, :, 0]
+    b, kvh, g, hd = q.shape
+    bits = _logical(bits_pages, block_table)          # (B,KVH,N,W)
+    vnorm = _logical(vnorm_pages, block_table).astype(jnp.float32)
+    kc = _logical(k_pages, block_table)
+    vc = _logical(v_pages, block_table)
+    n = bits.shape[2]
+
+    cfg = sk.SocketConfig(num_planes=num_planes, num_tables=num_tables,
+                          tau=1.0, sink_tokens=sink_tokens,
+                          window_tokens=window_tokens)
+    scores = _hard_collision_scores(cfg, bits, u_signs)   # (B,KVH,G,N)
+    scores = jnp.sum(scores, axis=2)
+
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
+    idx, mask = sk.value_aware_topk(cfg, scores, vnorm, k=top_k,
+                                    length=length, n_total=n, budget=budget)
+
+    k_sel = jnp.take_along_axis(kc, idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(vc, idx[..., None], axis=2)
+    out = flash_decode_ref(q.reshape(b * kvh, g, hd),
+                           k_sel.reshape(b * kvh, top_k, hd),
+                           v_sel.reshape(b * kvh, top_k, hd),
+                           mask.reshape(b * kvh, top_k), scale=scale)
+
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(kvh)[None, :, None]
+    selected = jnp.zeros((b, kvh, n), bool).at[bidx, hidx, idx].max(mask)
+    return out.reshape(b, kvh, g, hd), selected
+
+
+def paged_quest_attend_ref(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, kmin_pages: jax.Array,
+                           kmax_pages: jax.Array, block_table: jax.Array, *,
+                           length, page_size: int, sparsity: float,
+                           min_pages: int, scale: float, sink_tokens: int,
+                           window_tokens: int) -> Tuple[jax.Array, jax.Array]:
+    """Oracle for :func:`ops.paged_quest_attend`.
+
+    Materializes the logical per-request kmin/kmax stat views and runs
+    the exact baseline composition: ``baselines.quest.select_tokens``
+    (page-granular top-k with sink/window forcing and ragged lengths)
+    → masked softmax attention over the selected rows.
+    """
+    from repro.baselines import quest as quest_mod
+
+    if q.ndim == 4:
+        q = q[:, :, :, None]                          # (B,KVH,G,1,hd)
+    b, kvh, g, _, hd = q.shape
+    kc = _logical(k_pages, block_table)               # (B,KVH,N,hd)
+    vc = _logical(v_pages, block_table)
+    kmin = _logical(kmin_pages, block_table)          # (B,KVH,n_pages,hd)
+    kmax = _logical(kmax_pages, block_table)
+    n = kc.shape[2]
+
+    qcfg = quest_mod.QuestConfig(page_size=page_size, sparsity=sparsity,
+                                 sink_tokens=sink_tokens,
+                                 window_tokens=window_tokens,
+                                 min_pages=min_pages)
+    state = quest_mod.QuestState(kmin=kmin, kmax=kmax)
+    length = jnp.broadcast_to(jnp.asarray(length, jnp.int32), (b,))
+    idx, mask = quest_mod.select_tokens(qcfg, state, q, length=length, n=n)
+    kt = idx.shape[-1]                                # k_pages * page_size
+
+    k_sel = jnp.take_along_axis(kc, idx[..., None], axis=2)
+    v_sel = jnp.take_along_axis(vc, idx[..., None], axis=2)
+    out = flash_decode_ref(q[:, :, :, 0].reshape(b * kvh, g, hd),
+                           k_sel.reshape(b * kvh, kt, hd),
+                           v_sel.reshape(b * kvh, kt, hd),
+                           mask.reshape(b * kvh, kt), scale=scale)
+
+    bidx = jnp.arange(b)[:, None, None]
+    hidx = jnp.arange(kvh)[None, :, None]
+    selected = jnp.zeros((b, kvh, n), bool).at[bidx, hidx, idx].max(mask)
+    return out.reshape(b, kvh, g, hd), selected
+
+
+def paged_ring_attend_ref(q: jax.Array, k_pages: jax.Array,
+                          v_pages: jax.Array, block_table: jax.Array, *,
+                          pos, window: int, softcap: float,
+                          scale: float) -> jax.Array:
+    """Oracle for :func:`ops.paged_ring_attend`.
+
+    Gathers the circular page list (``block_table`` is the ring slice)
+    and applies the sliding-window mask in plain jnp — the exact math of
+    ``attention_decode``'s local-layer XLA path: logits·scale → softcap
+    → window mask → softmax.
+    """
+    if q.ndim == 5:
+        q = q[:, :, :, 0]
+    b, kvh, g, hd = q.shape
+    kc = _logical(k_pages, block_table).astype(jnp.float32)  # (B,KVH,cap,hd)
+    vc = _logical(v_pages, block_table).astype(jnp.float32)
+    cap = kc.shape[2]
+
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    sl = jnp.arange(cap, dtype=jnp.int32)
+    ring_pos = pos[:, None] - ((pos[:, None] - sl) % cap)    # (B, cap)
+    valid = (ring_pos >= 0) & (pos[:, None] - ring_pos < window)
+
+    s = jnp.einsum("bhgd,bhnd->bhgn", q.astype(jnp.float32), kc) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgn,bhnd->bhgd", p, vc)

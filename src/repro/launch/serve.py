@@ -35,20 +35,26 @@ from repro.runtime.steps import make_prefill_step, make_serve_step
 from repro.serving.obs.events import strict_dumps
 
 # serving-surface backend names: the real DecodeBackend registry plus the
-# socket_fused pseudo-backend (socket + cfg.socket.use_paged_kernel — the
-# fused Pallas paged-attention pass, PagedView/continuous-engine only)
-SERVING_BACKENDS = ("socket", "socket_fused", "dense", "quest", "hard_lsh")
+# *_fused pseudo-backends (backend + its cfg.*.use_paged_kernel gate — the
+# fused Pallas paged-attention passes, PagedView/continuous-engine only)
+SERVING_BACKENDS = ("socket", "socket_fused", "dense", "quest",
+                    "quest_fused", "hard_lsh", "hard_lsh_fused")
 
 
 def apply_backend_arg(cfg, backend: str):
     """Resolve a serving-surface backend name onto the config.  Shared by
     this CLI and ``benchmarks.bench_serving`` so the pseudo-backend
     mapping lives in exactly one place."""
-    if backend == "socket_fused":
-        import dataclasses
+    import dataclasses
+    if backend in ("socket_fused", "hard_lsh_fused"):
+        # hard_lsh shares SOCKET's cache layout and kernel gate
         return cfg.replace(
-            attention_backend="socket",
+            attention_backend=backend[: -len("_fused")],
             socket=dataclasses.replace(cfg.socket, use_paged_kernel=True))
+    if backend == "quest_fused":
+        return cfg.replace(
+            attention_backend="quest",
+            quest=dataclasses.replace(cfg.quest, use_paged_kernel=True))
     return cfg.replace(attention_backend=backend)
 
 
@@ -201,9 +207,13 @@ def main():
     ap.add_argument("--decode-steps", type=int, default=64)
     ap.add_argument("--backend", default="socket",
                     choices=list(SERVING_BACKENDS),
-                    help="decode backend; socket_fused routes the "
-                         "continuous engine through the fused Pallas "
-                         "paged-attention kernel")
+                    help="decode backend; the *_fused names route the "
+                         "continuous engine through the corresponding "
+                         "fused Pallas paged-attention kernel")
+    ap.add_argument("--ring-kernel", action="store_true",
+                    help="route sliding-window (local) layer decode "
+                         "through the Pallas ring kernel (continuous "
+                         "engine; no-op for all-global architectures)")
     # continuous-engine knobs
     ap.add_argument("--num-requests", type=int, default=8)
     ap.add_argument("--rate", type=float, default=20.0,
@@ -262,10 +272,14 @@ def main():
                          "(with --profile-dir)")
     args = ap.parse_args()
 
-    if args.backend == "socket_fused" and args.engine != "continuous":
-        ap.error("--backend socket_fused requires --engine continuous: "
-                 "the fused kernel serves the paged decode path only "
-                 "(the static engine would silently run plain socket)")
+    if args.backend.endswith("_fused") and args.engine != "continuous":
+        ap.error(f"--backend {args.backend} requires --engine continuous: "
+                 "the fused kernels serve the paged decode path only "
+                 "(the static engine would silently run the unfused "
+                 "backend)")
+    if args.ring_kernel and args.engine != "continuous":
+        ap.error("--ring-kernel requires --engine continuous: the ring "
+                 "kernel streams the paged pool's circular page lists")
     if args.temperature > 0 and args.engine != "continuous":
         ap.error("--temperature requires --engine continuous: sampling "
                  "lives in the continuous engine's jitted decode step "
@@ -298,6 +312,8 @@ def main():
     if args.smoke:
         cfg = cfg.smoke()
     cfg = apply_backend_arg(cfg, args.backend)
+    if args.ring_kernel:
+        cfg = cfg.replace(use_ring_kernel=True)
     if args.prefill_chunk is not None:
         cfg = cfg.replace(serving=cfg.serving.replace(
             prefill_chunk=args.prefill_chunk))

@@ -496,6 +496,7 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
     # qg: (B, KV, G, 1, hd)
 
     if attn_type == "local":
+        ring_fused = block_tables is not None and cfg.use_ring_kernel
         if block_tables is not None:
             # paged ring: the block table's first ring_blocks entries are
             # a circular page list (plan kind "ring"); the bounded ring
@@ -509,7 +510,18 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
             view.write_token("v", pos, v_new[:, 0])
             cache = dict(cache)
             cache.update(view.arrays)
-            ring_k, ring_v = view.leaf("k"), view.leaf("v")
+            if ring_fused:
+                # fused Pallas ring pass: stream the circular page list
+                # straight from the pool, window mask in-kernel — the
+                # leaf() gather below never materializes.
+                from repro.kernels.paged_attention import ops as pa_ops
+                ctx = pa_ops.paged_ring_attend(
+                    qg, cache["k"], cache["v"], block_tables[:, :rb],
+                    pos=pos, window=cfg.sliding_window,
+                    softcap=cfg.attn_logit_softcap, scale=scale)
+                backends.record_fused("paged_ring", ctx.shape)
+            else:
+                ring_k, ring_v = view.leaf("k"), view.leaf("v")
         else:
             cap = cache["k"].shape[2]
             slot = pos % cap
@@ -530,22 +542,26 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
                     jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
                     (0, 0, slot, 0))
             ring_k, ring_v = cache["k"], cache["v"]
-        # ring-slot absolute positions; invalid slots masked out.  The
-        # window bound is a no-op when cap <= window (static path) but
-        # trims page-aligned rings that hold slightly more than a window.
-        sl = jnp.arange(cap, dtype=jnp.int32)
-        pos_b = pos[:, None] if ragged else pos     # (B,1) | scalar
-        ring_pos = pos_b - ((pos_b - sl) % cap)      # (B,cap) | (cap,)
-        valid = (ring_pos >= 0) & (pos_b - ring_pos < cfg.sliding_window)
-        if not ragged:
-            valid = valid[None]
-        logits = jnp.einsum("bkgtd,bknd->bkgtn", qg.astype(jnp.float32),
-                            ring_k.astype(jnp.float32)) * scale
-        logits = softcap(logits, cfg.attn_logit_softcap)
-        logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
-        w = jax.nn.softmax(logits, axis=-1)
-        ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
-                         ring_v.astype(jnp.float32))
+        if not ring_fused:
+            # ring-slot absolute positions; invalid slots masked out.  The
+            # window bound is a no-op when cap <= window (static path) but
+            # trims page-aligned rings that hold slightly more than a
+            # window.
+            sl = jnp.arange(cap, dtype=jnp.int32)
+            pos_b = pos[:, None] if ragged else pos     # (B,1) | scalar
+            ring_pos = pos_b - ((pos_b - sl) % cap)      # (B,cap) | (cap,)
+            valid = (ring_pos >= 0) & \
+                (pos_b - ring_pos < cfg.sliding_window)
+            if not ragged:
+                valid = valid[None]
+            logits = jnp.einsum("bkgtd,bknd->bkgtn",
+                                qg.astype(jnp.float32),
+                                ring_k.astype(jnp.float32)) * scale
+            logits = softcap(logits, cfg.attn_logit_softcap)
+            logits = jnp.where(valid[:, None, None, None], logits, NEG_INF)
+            w = jax.nn.softmax(logits, axis=-1)
+            ctx = jnp.einsum("bkgtn,bknd->bkgtd", w,
+                             ring_v.astype(jnp.float32))
     else:
         backend = backends.get_backend(cfg.attention_backend)
         spec = backend.cache_spec(cfg)

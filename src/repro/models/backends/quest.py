@@ -94,7 +94,29 @@ class QuestBackend(base.DecodeBackend):
                 first, knew.astype(old.dtype),
                 jnp.maximum(old, knew.astype(old.dtype))))
 
+    def _attend_fused(self, cfg, params, q, view, *, length, scale):
+        """Fused paged path: one Pallas pass over the block table."""
+        del params
+        qcfg = self.quest_config(cfg)
+        if view.block_size % 8:
+            raise NotImplementedError(
+                f"fused paged kernel needs block_size % 8 == 0 (f32 "
+                f"sublane tiling), got {view.block_size}")
+        n = view.n_tokens
+        kp = quest_mod.page_budget(qcfg, n // qcfg.page_size, n)
+        from repro.kernels.paged_attention import ops as pa_ops
+        out = pa_ops.paged_quest_attend(
+            q, view.arrays["k"], view.arrays["v"], view.arrays["kmin"],
+            view.arrays["kmax"], view.block_table, length=length,
+            page_budget=kp, page_size=qcfg.page_size, scale=scale,
+            sink_tokens=qcfg.sink_tokens, window_tokens=qcfg.window_tokens)
+        base.record_fused("paged_quest", out.shape)
+        return out.astype(q.dtype)
+
     def attend(self, cfg, params, q, view: KVView, *, length, scale):
+        if cfg.quest.use_paged_kernel and isinstance(view, base.PagedView):
+            return self._attend_fused(cfg, params, q, view, length=length,
+                                      scale=scale)
         del params
         qcfg = self.quest_config(cfg)
         state = quest_mod.QuestState(kmin=view.leaf("kmin"),
@@ -111,3 +133,6 @@ class QuestBackend(base.DecodeBackend):
         qcfg = self.quest_config(cfg)
         n_pages = -(-n // qcfg.page_size)
         return quest_mod.page_budget(qcfg, n_pages, n) * qcfg.page_size
+
+    def fused_paged(self, cfg):
+        return bool(cfg.quest.use_paged_kernel)

@@ -190,9 +190,18 @@ class SocketBackend(base.DecodeBackend):
                 mesh = None
         if mesh is not None:
             if jnp.ndim(length) == 1:
-                raise NotImplementedError(
-                    "ragged decode + context-parallel SOCKET: use the "
-                    "pjit/XLA path (decode_cp_axes=())")
+                # the shard_map fast path merges per-shard top-k under a
+                # single scalar length; ragged batches take the pjit/XLA
+                # route instead of crashing mid-serve
+                from repro.serving.obs import warn_once
+                warn_once(
+                    "socket-ragged-cp-fallback",
+                    "ragged decode + context-parallel SOCKET has no "
+                    "shard_map path yet; falling back to the pjit/XLA "
+                    "path for this step (scalar-length decode keeps the "
+                    "context-parallel fast path)")
+                mesh = None
+        if mesh is not None:
             # §Perf: shard_map context-parallel path — local top-k per
             # sequence shard + psum online-softmax merge; avoids
             # materializing the (B,KVH,N) global score tensor

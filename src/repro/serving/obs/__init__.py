@@ -37,7 +37,21 @@ __all__ = ["Observability", "Tracer", "Registry", "Counter", "Gauge",
            "Histogram", "SelectionProbe", "Profiler", "chrome_trace",
            "write_chrome_trace", "validate_event", "validate_jsonl",
            "sanitize", "strict_dumps", "strict_loads", "EVENT_SCHEMA",
-           "SCHEMA_VERSION"]
+           "SCHEMA_VERSION", "warn_once"]
+
+_WARNED: set = set()
+
+
+def warn_once(key: str, message: str) -> None:
+    """Emit ``message`` as a :class:`UserWarning` the first time ``key``
+    is seen in this process — for hot-path fallbacks (a jitted serving
+    step that silently reroutes should say so exactly once, not per
+    step)."""
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    import warnings
+    warnings.warn(message, UserWarning, stacklevel=3)
 
 
 class Observability:

@@ -239,11 +239,15 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
             paged_l = full_l
         full += full_l * counts["paged"]
         paged += paged_l * counts["paged"]
+    ring_fused = False
     if counts["ring"]:
         ring_rows = cfg.ring_geometry()[1]
         ring_l = 2 * b * kvh * ring_rows * cfg.head_dim * cdt.itemsize
         full_l = 2 * b * kvh * n * cfg.head_dim * cdt.itemsize
-        window = ring_l * counts["ring"]
+        ring_fused = bool(cfg.use_ring_kernel)
+        # the fused ring pass streams the circular page list in-kernel:
+        # no XLA gather materializes the bounded window view
+        window = 0 if ring_fused else ring_l * counts["ring"]
         full += full_l * counts["ring"]
         paged += window
     state = 0
@@ -262,6 +266,7 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
         "state_bytes_per_step": int(state),
         "selected_rows": int(selected),
         "fused_paged_kernel": bool(fused),
+        "fused_ring_kernel": bool(ring_fused),
         "num_paged_layers": counts["paged"],
         "num_ring_layers": counts["ring"],
         "num_state_layers": counts["state"],

@@ -230,6 +230,18 @@ def test_cache_spec_drives_cache_and_axes():
         "cache_batch", "cache_heads", "cache_seq")
 
 
+FUSED_BACKENDS = ["socket", "hard_lsh", "quest"]
+
+
+def _fused_cfg(cfg, backend):
+    """Flip the backend's fused-paged gate (hard_lsh shares SOCKET's)."""
+    if backend == "quest":
+        return cfg.replace(quest=dataclasses.replace(
+            cfg.quest, use_paged_kernel=True))
+    return cfg.replace(socket=dataclasses.replace(
+        cfg.socket, use_paged_kernel=True))
+
+
 def _count_pool_gathers(fn, *args, num_blocks):
     """# of XLA gather eqns (recursively) whose operand is a pool leaf."""
     jaxpr = jax.make_jaxpr(fn)(*args)
@@ -247,11 +259,12 @@ def _count_pool_gathers(fn, *args, num_blocks):
     return walk(jaxpr.jaxpr)
 
 
-def test_fused_paged_attend_has_zero_pool_gathers():
-    """The fused kernel consumes the pool in place: the attend jaxpr must
+@pytest.mark.parametrize("backend", FUSED_BACKENDS)
+def test_fused_paged_attend_has_zero_pool_gathers(backend):
+    """The fused kernels consume the pool in place: the attend jaxpr must
     contain ZERO gather primitives on pool-shaped operands, where the
     unfused paged path needs them for every leaf view / top-k row fetch."""
-    cfg, be, params, _, pview, q = _setup("socket")
+    cfg, be, params, _, pview, q = _setup(backend)
     num_blocks = pview.arrays["k"].shape[0]
     lengths = jnp.asarray([13, 29], jnp.int32)
 
@@ -267,10 +280,9 @@ def test_fused_paged_attend_has_zero_pool_gathers():
                                   pview.block_table, num_blocks=num_blocks)
     assert unfused >= 2, "unfused paged path should gather K and V rows"
 
-    cfg_f = cfg.replace(socket=dataclasses.replace(cfg.socket,
-                                                   use_paged_kernel=True))
-    fused = _count_pool_gathers(attend(cfg_f), q, pview.arrays,
-                                pview.block_table, num_blocks=num_blocks)
+    fused = _count_pool_gathers(attend(_fused_cfg(cfg, backend)), q,
+                                pview.arrays, pview.block_table,
+                                num_blocks=num_blocks)
     assert fused == 0, f"fused path launched {fused} pool gathers"
 
 
@@ -323,17 +335,116 @@ def test_fused_paged_kernel_rejects_unsupported_combos():
         be.attend(cfg_bs, params, q, bad_view, length=lengths, scale=0.125)
 
 
-def test_hard_lsh_ignores_fused_flag_in_accounting():
-    """hard_lsh inherits SOCKET's cache layout but has no fused attend:
-    cfg.socket.use_paged_kernel must not make fused_paged()/the
-    gather-footprint accounting claim a zero-gather path that never runs."""
+@pytest.mark.parametrize("backend", ["hard_lsh", "quest"])
+def test_new_fused_backends_match_unfused_paged_path(backend):
+    """use_paged_kernel routes hard_lsh / quest PagedView attends through
+    their fused Pallas kernels with matching results (ragged and scalar
+    lengths); contiguous views keep the existing path bit-for-bit."""
+    cfg, be, params, cview, pview, q = _setup(backend)
+    cfg_f = _fused_cfg(cfg, backend)
+    for length in (jnp.asarray([13, 29], jnp.int32), jnp.int32(29)):
+        out_ref = be.attend(cfg, params, q, pview, length=length,
+                            scale=0.125)
+        out_f = be.attend(cfg_f, params, q, pview, length=length,
+                          scale=0.125)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_ref),
+                                   atol=2e-5)
+    out_c = be.attend(cfg, params, q, cview, length=jnp.int32(29),
+                      scale=0.125)
+    out_cf = be.attend(cfg_f, params, q, cview, length=jnp.int32(29),
+                       scale=0.125)
+    np.testing.assert_array_equal(np.asarray(out_c), np.asarray(out_cf))
+
+
+@pytest.mark.parametrize("backend", FUSED_BACKENDS)
+def test_fused_backends_report_zero_paged_bytes(backend):
+    """Every fused gate flips its backend's fused_paged() and zeroes the
+    per-step paged-pool gather accounting (hard_lsh used to ignore the
+    flag — it now fuses through SOCKET's gate)."""
     from repro.serving.paged import gather_footprint
 
-    cfg = _cfg("hard_lsh")
-    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
-                                                 use_paged_kernel=True))
-    assert not bk.get_backend("hard_lsh").fused_paged(cfg)
-    assert bk.get_backend("socket").fused_paged(cfg)
+    cfg = _cfg(backend)
     fp = gather_footprint(cfg)
     assert not fp["fused_paged_kernel"]
     assert fp["paged_bytes_per_step"] > 0
+
+    cfg_f = _fused_cfg(cfg, backend)
+    assert bk.get_backend(backend).fused_paged(cfg_f)
+    fp = gather_footprint(cfg_f)
+    assert fp["fused_paged_kernel"]
+    assert fp["paged_bytes_per_step"] == 0
+
+
+def test_config_time_kernel_gate_validation():
+    """Every fused-gate combination the Pallas kernels would reject at
+    trace time (deep inside a jitted serving step) is rejected by
+    ``cfg.validate()`` — and therefore by ``cache_plan()``, the serving
+    engine's first config touch — with the offending flag pair named."""
+    cfg = _cfg("socket")
+    fused_s = dataclasses.replace(cfg.socket, use_paged_kernel=True)
+
+    bad = cfg.replace(socket=dataclasses.replace(fused_s,
+                                                 bits_storage="int8"))
+    with pytest.raises(ValueError, match="bits_storage"):
+        bad.validate()
+    with pytest.raises(ValueError, match="use_paged_kernel"):
+        bad.cache_plan()
+    bad = cfg.replace(socket=dataclasses.replace(fused_s,
+                                                 selection="qhead"))
+    with pytest.raises(ValueError, match="selection"):
+        bad.validate()
+    bad = cfg.replace(socket=fused_s, serving=dataclasses.replace(
+        cfg.serving, block_size=12))
+    with pytest.raises(ValueError, match="block_size"):
+        bad.validate()
+
+    qcfg = _cfg("quest")
+    fused_q = dataclasses.replace(qcfg.quest, use_paged_kernel=True)
+    bad = qcfg.replace(quest=fused_q, serving=dataclasses.replace(
+        qcfg.serving, block_size=12))
+    with pytest.raises(ValueError, match="block_size"):
+        bad.validate()
+    bad = qcfg.replace(quest=dataclasses.replace(fused_q, page_size=3))
+    with pytest.raises(ValueError, match="page_size"):
+        bad.validate()
+
+    bad = cfg.replace(use_ring_kernel=True, serving=dataclasses.replace(
+        cfg.serving, block_size=12))
+    with pytest.raises(ValueError, match="use_ring_kernel"):
+        bad.validate()
+
+    # the eligible smoke gates stay constructible
+    cfg.replace(socket=fused_s).validate()
+    qcfg.replace(quest=fused_q).validate()
+    cfg.replace(use_ring_kernel=True).validate()
+
+
+def test_ragged_cp_decode_falls_back_to_xla_path():
+    """Ragged decode + ``decode_cp_axes`` used to raise a bare
+    NotImplementedError mid-serve; it must now warn once (via obs) and
+    produce the pjit/XLA result bit-for-bit.  Scalar-length decode keeps
+    the shard_map fast path (covered by test_distributed)."""
+    import repro.serving.obs as obs
+    from repro.distributed import sharding as shd
+
+    cfg, be, params, cview, _, q = _setup("socket")
+    lengths = jnp.asarray([13, 29], jnp.int32)
+    out_plain = be.attend(cfg, params, q, cview, length=lengths,
+                          scale=0.125)
+
+    cfg_cp = cfg.replace(decode_cp_axes=("data",))
+    mesh = jax.make_mesh((1,), ("data",))
+    obs._WARNED.discard("socket-ragged-cp-fallback")
+    with shd.activate_mesh(mesh):
+        with pytest.warns(UserWarning, match="ragged decode"):
+            out_cp = be.attend(cfg_cp, params, q, cview, length=lengths,
+                               scale=0.125)
+        # one-shot: the fallback must not spam every decode step
+        import warnings
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            out_again = be.attend(cfg_cp, params, q, cview, length=lengths,
+                                  scale=0.125)
+    np.testing.assert_array_equal(np.asarray(out_plain), np.asarray(out_cp))
+    np.testing.assert_array_equal(np.asarray(out_plain),
+                                  np.asarray(out_again))

@@ -25,7 +25,13 @@ from kernel_harness import (BITWISE, KernelCase, KernelOp, ParityPolicy,
 from repro.core import hashing, socket
 from repro.kernels.flash_decode import flash_decode, flash_decode_ref
 from repro.kernels.flash_prefill import flash_prefill, flash_prefill_ref
-from repro.kernels.paged_attention import (paged_socket_attend,
+from repro.kernels.paged_attention import (paged_hard_lsh_attend,
+                                           paged_hard_lsh_attend_ref,
+                                           paged_quest_attend,
+                                           paged_quest_attend_ref,
+                                           paged_ring_attend,
+                                           paged_ring_attend_ref,
+                                           paged_socket_attend,
                                            paged_socket_attend_ref)
 from repro.kernels.socket_score import socket_score, socket_score_ref
 
@@ -131,6 +137,99 @@ def _build_paged_attention(case):
     return [("attn", out, ref), ("selection", sel, sel_ref, BITWISE)]
 
 
+def _build_paged_hard_lsh(case):
+    """Hard-collision variant: same pool fixture, the query-side soft
+    hash replaced by its ±1 plane signs (``tau`` drops out)."""
+    args, kw, kq = _paged_fixture(**case.kwargs)
+    q, kp, vp, bits, vn, u, bt = args
+    u_signs = jnp.where(u >= 0, 1.0, -1.0).astype(jnp.float32)
+    kw = {k: v for k, v in kw.items() if k != "tau"}
+    out, sel = paged_hard_lsh_attend(q, kp, vp, bits, vn, u_signs, bt,
+                                     with_selection=True, **kw)
+    ref, sel_ref = paged_hard_lsh_attend_ref(q, kp, vp, bits, vn, u_signs,
+                                             bt, top_k=kq, **kw)
+    return [("attn", out, ref), ("selection", sel, sel_ref, BITWISE)]
+
+
+def _quest_fixture(seed, b, kvh, g, nb, bs, hd, ps, sink, window, lengths,
+                   sparsity=4.0, min_pages=2, dtype=jnp.float32, dup=False):
+    """Paged K/V pool plus per-page kmin/kmax stat pools (ppb = bs / ps
+    stat rows per physical block), shuffled block table, ragged lengths."""
+    from repro.baselines import quest as quest_mod
+
+    rng = np.random.default_rng(seed)
+    n = nb * bs
+    kc = rng.normal(size=(b, kvh, n, hd)).astype(np.float32)
+    if dup:
+        # identical page content -> exact page-score ties at selection
+        pages = kc.reshape(b, kvh, n // ps, ps, hd)
+        pages[:, :, 1::2] = pages[:, :, 0::2]
+        kc = pages.reshape(b, kvh, n, hd)
+    vc = rng.normal(size=(b, kvh, n, hd)).astype(np.float32)
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    # page stats stay f32 even for bf16 K/V (selection is compared
+    # bitwise; only the attention math runs in the case dtype)
+    kmin = kc.reshape(b, kvh, n // ps, ps, hd).min(axis=3)
+    kmax = kc.reshape(b, kvh, n // ps, ps, hd).max(axis=3)
+
+    bt = 1 + rng.permutation(b * nb).reshape(b, nb).astype(np.int32)
+
+    def pageify(arr, rows):
+        arr = np.asarray(arr)
+        pool = np.zeros((1 + b * nb, kvh, rows) + arr.shape[3:], arr.dtype)
+        for i in range(b):
+            for j in range(nb):
+                pool[bt[i, j]] = arr[i, :, j * rows:(j + 1) * rows]
+        return jnp.asarray(pool)
+
+    qcfg = quest_mod.QuestConfig(page_size=ps, sparsity=sparsity,
+                                 sink_tokens=sink, window_tokens=window,
+                                 min_pages=min_pages)
+    kp = quest_mod.page_budget(qcfg, n // ps, n)
+    length = jnp.asarray(lengths, jnp.int32)
+    scale = 1 / np.sqrt(hd)
+    args = (q, pageify(jnp.asarray(kc, dtype), bs),
+            pageify(jnp.asarray(vc, dtype), bs),
+            pageify(kmin, bs // ps), pageify(kmax, bs // ps),
+            jnp.asarray(bt))
+    op_kw = dict(length=length, page_budget=kp, page_size=ps, scale=scale,
+                 sink_tokens=sink, window_tokens=window)
+    ref_kw = dict(length=length, page_size=ps, sparsity=sparsity,
+                  min_pages=min_pages, scale=scale, sink_tokens=sink,
+                  window_tokens=window)
+    return args, op_kw, ref_kw
+
+
+def _build_paged_quest(case):
+    args, op_kw, ref_kw = _quest_fixture(**case.kwargs)
+    out, sel = paged_quest_attend(*args, with_selection=True, **op_kw)
+    ref, sel_ref = paged_quest_attend_ref(*args, **ref_kw)
+    return [("attn", out, ref), ("selection", sel, sel_ref, BITWISE)]
+
+
+def _ring_fixture(seed, b, kvh, g, rb, bs, hd, window, pos, softcap=0.0,
+                  dtype=jnp.float32):
+    """Circular sliding-window pool: ``rb`` ring blocks per request with
+    a shuffled ring slice of the block table and per-request positions
+    (both sides read the same pool, so slots outside the window may hold
+    arbitrary rows)."""
+    rng = np.random.default_rng(seed)
+    pool_k = jnp.asarray(rng.normal(size=(1 + b * rb, kvh, bs, hd)), dtype)
+    pool_v = jnp.asarray(rng.normal(size=(1 + b * rb, kvh, bs, hd)), dtype)
+    q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
+    bt = jnp.asarray(1 + rng.permutation(b * rb).reshape(b, rb), jnp.int32)
+    kw = dict(pos=jnp.asarray(pos, jnp.int32), window=window,
+              softcap=softcap, scale=1 / np.sqrt(hd))
+    return (q, pool_k, pool_v, bt), kw
+
+
+def _build_paged_ring(case):
+    args, kw = _ring_fixture(**case.kwargs)
+    out = paged_ring_attend(*args, **kw)
+    ref = paged_ring_attend_ref(*args, **kw)
+    return [("attn", out, ref)]
+
+
 # --------------------------------------------------- op registry + sweeps
 
 def _c(label, **kw):
@@ -153,6 +252,20 @@ def _fp_case(label, bh, s, hd, window, dtype=jnp.float32):
 def _pa_case(label, **kw):
     base = dict(seed=0, b=2, kvh=2, g=2, gs=2, nb=4, bs=8, hd=16, p=6,
                 l=12, sink=4, window=4, lengths=(13, 29))
+    base.update(kw)
+    return _c(label, **base)
+
+
+def _qu_case(label, **kw):
+    base = dict(seed=0, b=2, kvh=2, g=2, nb=4, bs=8, hd=16, ps=4,
+                sink=4, window=4, lengths=(13, 29))
+    base.update(kw)
+    return _c(label, **base)
+
+
+def _ring_case(label, **kw):
+    base = dict(seed=0, b=2, kvh=2, g=2, rb=3, bs=8, hd=16, window=10,
+                pos=(13, 29), softcap=0.0)
     base.update(kw)
     return _c(label, **base)
 
@@ -227,6 +340,60 @@ KERNEL_OPS = (
                      lengths=(32, 9)),
             _pa_case("budget-floor", seed=6, sink=8, window=8,
                      lengths=(7, 3)),
+        ),
+    ),
+    KernelOp(
+        name="paged_hard_lsh",
+        build=_build_paged_hard_lsh,
+        # same policy split as the socket kernel: float attention under
+        # tolerance, the hard-collision selected set BITWISE (collision
+        # counts are small integers, so zero-count ties are pervasive —
+        # every case exercises the stable tie-break)
+        policy=ParityPolicy(atol=2e-5, bf16_atol=2e-2),
+        cases=(
+            _pa_case("ragged"),
+            _pa_case("pooled-hash", seed=1, gs=1, nb=3, g=4,
+                     lengths=(24, 5)),
+            _pa_case("collision-ties", seed=3, b=3, lengths=(1, 17, 32),
+                     dup=True),
+            _pa_case("unaligned-tables", seed=4, p=10, l=37,
+                     lengths=(30, 31)),
+            _pa_case("bf16-kv", seed=5, dtype=jnp.bfloat16,
+                     lengths=(32, 9)),
+            _pa_case("budget-floor", seed=6, sink=8, window=8,
+                     lengths=(7, 3)),
+        ),
+    ),
+    KernelOp(
+        name="paged_quest",
+        build=_build_paged_quest,
+        policy=ParityPolicy(atol=2e-5, bf16_atol=2e-2),
+        cases=(
+            _qu_case("ragged-ppb2"),
+            _qu_case("page-per-block", seed=1, ps=8, lengths=(24, 5)),
+            _qu_case("page-score-ties", seed=3, b=3,
+                     lengths=(9, 17, 32), dup=True),
+            _qu_case("single-seq", seed=2, b=1, g=1, nb=2, bs=16, ps=4,
+                     hd=32, sink=2, window=2, lengths=(32,)),
+            _qu_case("bf16-kv", seed=5, dtype=jnp.bfloat16,
+                     lengths=(32, 9)),
+            _qu_case("budget-floor", seed=6, sink=8, window=8,
+                     lengths=(7, 3)),
+        ),
+    ),
+    KernelOp(
+        name="paged_ring",
+        build=_build_paged_ring,
+        policy=ParityPolicy(atol=2e-5, bf16_atol=2e-2),
+        cases=(
+            _ring_case("wrap-mix"),                    # filling + wrapped
+            _ring_case("unwrapped", seed=1, pos=(5, 20)),
+            _ring_case("softcap", seed=2, softcap=20.0, pos=(23, 24)),
+            _ring_case("window-lt-cap", seed=3, window=6, pos=(100, 7)),
+            _ring_case("bf16-kv", seed=4, dtype=jnp.bfloat16,
+                       pos=(31, 64)),
+            _ring_case("single-block-ring", seed=5, rb=1, window=8,
+                       pos=(3, 50)),
         ),
     ),
 )
@@ -310,6 +477,27 @@ def test_flash_decode_all_masked_rows_are_finite():
     mask = jnp.zeros((1, 64), bool)
     out = flash_decode(q, k, v, mask, scale=0.1, block_k=64)
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_flash_decode_raw_launcher_pads_tail():
+    """The raw Pallas launcher (not the padding ``ops.py`` wrapper) must
+    accept ``K % block_k != 0`` and ``K < block_k`` — it used to raise a
+    trace-time ValueError, so any caller bypassing the wrapper (or a
+    wrapper regression) broke on ragged selection widths."""
+    from repro.kernels.flash_decode.flash_decode import flash_decode_pallas
+    for seed, (bh, g, k, hd, blk) in enumerate(
+            ((2, 4, 70, 32, 32),      # tail block: 70 % 32 != 0
+             (1, 2, 13, 32, 64))):    # whole buffer shorter than block_k
+        k1, k2, k3, k4 = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(k1, (bh, g, hd))
+        kk = jax.random.normal(k2, (bh, k, hd))
+        vv = jax.random.normal(k3, (bh, k, hd))
+        mask = jax.random.bernoulli(k4, 0.7, (bh, k)).at[:, 0].set(True)
+        out = flash_decode_pallas(q, kk, vv, mask, scale=1 / np.sqrt(hd),
+                                  block_k=blk, interpret=True)
+        ref = flash_decode_ref(q, kk, vv, mask, scale=1 / np.sqrt(hd))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=1e-5)
 
 
 def test_paged_attention_rejects_bad_packing():

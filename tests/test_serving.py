@@ -384,21 +384,35 @@ def test_paged_engine_never_materializes_kv_views():
             assert name in ("k", "v") and shape[-2] == kq, (name, shape)
 
 
-def test_fused_paged_engine_launches_zero_kv_gathers():
-    """With ``cfg.socket.use_paged_kernel`` the decode step must not
+def _fused_smoke_cfg(backend):
+    """Smoke config with the backend's fused-paged gate flipped
+    (hard_lsh shares SOCKET's gate; quest has its own)."""
+    import dataclasses
+
+    cfg = _smoke_cfg(backend)
+    if backend == "quest":
+        return cfg.replace(quest=dataclasses.replace(
+            cfg.quest, use_paged_kernel=True))
+    return cfg.replace(socket=dataclasses.replace(
+        cfg.socket, use_paged_kernel=True))
+
+
+@pytest.mark.parametrize("backend,fused_name", [
+    ("socket", "paged_attention"),
+    ("hard_lsh", "paged_hard_lsh"),
+    ("quest", "paged_quest"),
+])
+def test_fused_paged_engine_launches_zero_kv_gathers(backend, fused_name):
+    """With the backend's fused-paged gate on, the decode step must not
     materialize *any* logical leaf view and must gather *zero* K/V rows
     — the O(top_k) XLA gathers of the unfused paged path drop to none;
     the fused kernel consumes the pool + block table in place (only the
     "fused" dispatch marker may appear in the trace)."""
-    import dataclasses
-
     import jax
     from repro.models import backends as bk
     from repro.serving.engine import ContinuousBatchingEngine
 
-    cfg = _smoke_cfg("socket")
-    cfg = cfg.replace(socket=dataclasses.replace(cfg.socket,
-                                                 use_paged_kernel=True))
+    cfg = _fused_smoke_cfg(backend)
     engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
     rng = np.random.default_rng(3)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab_size, size=12).tolist(),
@@ -409,14 +423,13 @@ def test_fused_paged_engine_launches_zero_kv_gathers():
     assert trace, "decode step never traced"
     kinds = {kind for kind, _, _ in trace}
     assert kinds == {"fused"}, trace
-    assert any(name == "paged_attention" for _, name, _ in trace)
+    assert any(name == fused_name for _, name, _ in trace), trace
 
 
-def test_fused_engine_tokens_match_unfused_paged_engine():
-    """The fused kernel is a drop-in routing change: the continuous
-    engine must produce the same greedy tokens with and without it."""
-    import dataclasses
-
+@pytest.mark.parametrize("backend", ["socket", "hard_lsh", "quest"])
+def test_fused_engine_tokens_match_unfused_paged_engine(backend):
+    """The fused kernels are a drop-in routing change: the continuous
+    engine must produce the same greedy tokens with and without them."""
     import jax
     from repro.serving.engine import ContinuousBatchingEngine
 
@@ -424,9 +437,7 @@ def test_fused_engine_tokens_match_unfused_paged_engine():
     prompts = [rng.integers(0, 250, size=n).tolist() for n in (9, 17, 23)]
 
     def run(fused):
-        cfg = _smoke_cfg("socket")
-        cfg = cfg.replace(socket=dataclasses.replace(
-            cfg.socket, use_paged_kernel=fused))
+        cfg = _fused_smoke_cfg(backend) if fused else _smoke_cfg(backend)
         engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
         reqs = [Request(prompt=list(p), max_new_tokens=5, arrival=0.0)
                 for p in prompts]
@@ -434,3 +445,35 @@ def test_fused_engine_tokens_match_unfused_paged_engine():
         return [r.generated for r in reqs]
 
     assert run(True) == run(False)
+
+
+def test_ring_fused_hybrid_gathers_no_ring_views_and_matches_tokens():
+    """gemma3's sliding-window layers through the fused Pallas ring pass
+    (``cfg.use_ring_kernel``): greedy tokens identical to the XLA ring
+    path, and the decode trace shows no bounded-window "ring" gathers —
+    only the fused dispatch markers (global socket layers keep their
+    unfused metadata gathers here)."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import backends as bk
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, 250, size=n).tolist() for n in (9, 21)]
+
+    def run(ring_fused):
+        cfg = get_config("gemma3-27b").smoke().replace(
+            use_ring_kernel=ring_fused)
+        engine = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+        reqs = [Request(prompt=list(p), max_new_tokens=5, arrival=0.0)
+                for p in prompts]
+        bk.gather_trace_reset()
+        engine.run(reqs, realtime=False)
+        return [r.generated for r in reqs], bk.gather_trace()
+
+    toks_off, trace_off = run(False)
+    toks_on, trace_on = run(True)
+    assert toks_on == toks_off
+    assert any(kind == "ring" for kind, _, _ in trace_off), trace_off
+    assert not any(kind == "ring" for kind, _, _ in trace_on), trace_on
+    assert any(name == "paged_ring" for _, name, _ in trace_on), trace_on
