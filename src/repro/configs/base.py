@@ -20,6 +20,10 @@ from typing import Optional, Tuple
 __all__ = ["LayerSpec", "LayerCachePlan", "ModelConfig", "SocketSettings",
            "QuestSettings", "ServingSettings"]
 
+# K/V pool-page storage modes (mirrors repro.models.backends.kvquant,
+# duplicated here so the config layer stays jax-free)
+_KV_DTYPES = ("auto", "bf16", "int8", "fp8")
+
 
 @dataclasses.dataclass(frozen=True)
 class LayerSpec:
@@ -46,6 +50,12 @@ class LayerCachePlan:
     * ``"state"`` — Mamba/SSD: conv tail + recurrent state held as fixed
       per-decode-slot leaves; consumes no pool blocks at all.
 
+    ``kv_dtype`` is the resolved K/V page storage mode for this layer
+    (``"auto"`` = compute dtype, ``"bf16"``, ``"int8"``, ``"fp8"`` —
+    see :mod:`repro.models.backends.kvquant`): paged and ring layers
+    follow ``ServingSettings.kv_dtype``, state layers always resolve to
+    ``"auto"`` (recurrent state is O(1) per slot and never quantized).
+
     The device-side handlers live in :mod:`repro.models.backends`
     (``layer_cache_handler``); the host-side block accounting in
     :class:`repro.serving.scheduler.Scheduler` derives from the same plan.
@@ -53,6 +63,7 @@ class LayerCachePlan:
 
     kind: str
     ring_blocks: int = 0
+    kv_dtype: str = "auto"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,6 +115,13 @@ class QuestSettings:
     # page-granular radix select + attend in one sweep over the block
     # table, zero XLA gathers on the K/V pool.
     use_paged_kernel: bool = False
+    # Under quantized K/V pages (serving.kv_dtype int8/fp8), compute the
+    # kmin/kmax page stats from the DEQUANTIZED quantized keys instead of
+    # the original full-precision keys, so the per-page bounds cover the
+    # keys the attend phase actually sees and Quest's upper-bound score
+    # stays sound.  Required (validate() enforces it) whenever the quest
+    # backend runs on quantized pages.
+    stats_from_quantized: bool = True
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,6 +161,14 @@ class ServingSettings:
     # engine simply builds no cache).  Generations are token-exact vs
     # cache-off (copy-on-write keeps shared pages immutable).
     prefix_cache: bool = False
+    # K/V pool-page storage mode: "auto" (compute dtype — today's
+    # behavior), "bf16" (plain cast, no scales), or "int8"/"fp8"
+    # (symmetric per-row absmax quantization with float32 scale leaves
+    # beside K/V; see repro.models.backends.kvquant).  Applies to paged
+    # AND ring attention layers; Mamba state rows are never quantized.
+    # Selection metadata (SOCKET bits/vnorms, Quest kmin/kmax) stays
+    # full precision — only the attend rescan reads quantized rows.
+    kv_dtype: str = "auto"
 
     def validate(self) -> None:
         assert self.num_blocks > 1, "need at least one non-trash block"
@@ -303,6 +329,59 @@ class ModelConfig:
                 f"use_ring_kernel=True needs serving.block_size % 8 == 0 "
                 f"(f32 sublane tiling), got "
                 f"block_size={self.serving.block_size}")
+        # --- quantized K/V page matrix (serving.kv_dtype) ----------------
+        kvd = self.serving.kv_dtype
+        if kvd not in _KV_DTYPES:
+            raise ValueError(
+                f"serving.kv_dtype={kvd!r} is not a known K/V page storage "
+                f"mode — expected one of {_KV_DTYPES}")
+        if kvd == "fp8":
+            # fp8 rows are only consumed in-register by the fused Pallas
+            # attend phases; the XLA fallback's gathered-subset math on
+            # float8 is not a supported path.  Demand the fused consumer
+            # for every layer kind this config actually has.
+            if self.uses_attention and any(
+                    s.kind == "attn" and s.attn_type == "global"
+                    for s in self.layer_specs):
+                if self.attention_backend in ("socket", "hard_lsh") \
+                        and not self.socket.use_paged_kernel:
+                    raise ValueError(
+                        f"serving.kv_dtype='fp8' with attention_backend="
+                        f"'{self.attention_backend}' requires "
+                        "socket.use_paged_kernel=True: fp8 rows are only "
+                        "dequantized in-register by the fused paged kernel "
+                        "— enable use_paged_kernel or use kv_dtype='int8'")
+                if self.attention_backend == "quest" \
+                        and not self.quest.use_paged_kernel:
+                    raise ValueError(
+                        "serving.kv_dtype='fp8' with attention_backend="
+                        "'quest' requires quest.use_paged_kernel=True: fp8 "
+                        "rows are only dequantized in-register by the fused "
+                        "paged kernel — enable use_paged_kernel or use "
+                        "kv_dtype='int8'")
+                if self.attention_backend == "dense":
+                    raise ValueError(
+                        "serving.kv_dtype='fp8' is incompatible with "
+                        "attention_backend='dense': dense decode has no "
+                        "fused paged path to dequantize fp8 in-register — "
+                        "use kv_dtype='int8' or 'bf16'")
+            if any(s.kind == "attn" and s.attn_type == "local"
+                   for s in self.layer_specs) and not self.use_ring_kernel:
+                raise ValueError(
+                    "serving.kv_dtype='fp8' with sliding-window (local) "
+                    "layers requires use_ring_kernel=True: fp8 ring pages "
+                    "are only dequantized in-register by the fused ring "
+                    "kernel — enable use_ring_kernel or use kv_dtype="
+                    "'int8'")
+        if kvd in ("int8", "fp8") and self.attention_backend == "quest" \
+                and not self.quest.stats_from_quantized:
+            raise ValueError(
+                f"serving.kv_dtype='{kvd}' with attention_backend='quest' "
+                "requires quest.stats_from_quantized=True: page kmin/kmax "
+                "bounds must be computed from the dequantized quantized "
+                "keys the attend phase reads, or Quest's upper bound is "
+                "unsound — set stats_from_quantized=True or kv_dtype="
+                "'auto'/'bf16'")
 
     # ------------------------------------------------------ cache planning
     def ring_geometry(self) -> Tuple[int, int]:
@@ -317,11 +396,12 @@ class ModelConfig:
     def plan_for(self, spec: LayerSpec) -> LayerCachePlan:
         """Resolve one layer's cache plan (see :class:`LayerCachePlan`)."""
         if spec.kind != "attn":
-            return LayerCachePlan(kind="state")
+            return LayerCachePlan(kind="state")   # state rows: never quantized
         if spec.attn_type == "local":
             return LayerCachePlan(kind="ring",
-                                  ring_blocks=self.ring_geometry()[0])
-        return LayerCachePlan(kind="paged")
+                                  ring_blocks=self.ring_geometry()[0],
+                                  kv_dtype=self.serving.kv_dtype)
+        return LayerCachePlan(kind="paged", kv_dtype=self.serving.kv_dtype)
 
     def cache_plan(self) -> Tuple[LayerCachePlan, ...]:
         """Per-layer heterogeneous cache plan (one entry per

@@ -30,13 +30,15 @@ def _auto_interpret() -> bool:
     "num_tables", "num_planes", "tau", "scale", "sink_tokens",
     "window_tokens", "interpret", "with_selection"))
 def _attend_flat(q, k_pages, v_pages, bits_pages, vnorm_pages, u, bt,
-                 length, budget, *, num_tables, num_planes, tau, scale,
-                 sink_tokens, window_tokens, interpret, with_selection):
+                 length, budget, k_scale, v_scale, *, num_tables,
+                 num_planes, tau, scale, sink_tokens, window_tokens,
+                 interpret, with_selection):
     return paged_attention_pallas(
         q, k_pages, v_pages, bits_pages, vnorm_pages, u, bt, length, budget,
         num_tables=num_tables, num_planes=num_planes, tau=tau, scale=scale,
         sink_tokens=sink_tokens, window_tokens=window_tokens,
-        interpret=interpret, with_selection=with_selection)
+        interpret=interpret, with_selection=with_selection,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
@@ -46,18 +48,22 @@ def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                         tau: float, scale: float, sink_tokens: int,
                         window_tokens: int,
                         interpret: Optional[bool] = None,
-                        with_selection: bool = False):
+                        with_selection: bool = False,
+                        k_scale: Optional[jax.Array] = None,
+                        v_scale: Optional[jax.Array] = None):
     """Fused score→select→attend over the paged pool for one decode step.
 
     Shapes:
       q            (B, KVH, G, 1, hd) or (B, KVH, G, hd)
-      k/v_pages    (NB, KVH, bs, hd)
+      k/v_pages    (NB, KVH, bs, hd)  (bf16/int8/fp8 storage)
       bits_pages   uint32 (NB, KVH, bs, W)
       vnorm_pages  (NB, KVH, bs)
       u            f32 (B, KVH, GS, L, P)  (GS=1 for pooled selection)
       block_table  int32 (B, nb)
       length       int32 scalar or (B,)
       budget       int32 scalar or (B,)  (dynamic top-k budget, <= cap)
+      k/v_scale    (NB, KVH, bs) per-row dequant scales (quantized pools
+                   only — both or neither; dequantized in-kernel)
 
     Returns attention output in q's layout (f32), plus the int32
     ``(B, KVH, nb, bs)`` selection mask when ``with_selection``.
@@ -73,7 +79,8 @@ def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
     out = _attend_flat(
         q, k_pages, v_pages, bits_pages, vnorm_pages, u, block_table,
-        length, budget, num_tables=num_tables, num_planes=num_planes,
+        length, budget, k_scale, v_scale,
+        num_tables=num_tables, num_planes=num_planes,
         tau=float(tau), scale=float(scale), sink_tokens=int(sink_tokens),
         window_tokens=int(window_tokens), interpret=interpret,
         with_selection=with_selection)
@@ -89,13 +96,15 @@ def paged_socket_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     "num_tables", "num_planes", "scale", "sink_tokens", "window_tokens",
     "interpret", "with_selection"))
 def _hard_lsh_flat(q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs,
-                   bt, length, budget, *, num_tables, num_planes, scale,
-                   sink_tokens, window_tokens, interpret, with_selection):
+                   bt, length, budget, k_scale, v_scale, *, num_tables,
+                   num_planes, scale, sink_tokens, window_tokens, interpret,
+                   with_selection):
     return paged_hard_lsh_pallas(
         q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs, bt, length,
         budget, num_tables=num_tables, num_planes=num_planes, scale=scale,
         sink_tokens=sink_tokens, window_tokens=window_tokens,
-        interpret=interpret, with_selection=with_selection)
+        interpret=interpret, with_selection=with_selection,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_hard_lsh_attend(q: jax.Array, k_pages: jax.Array,
@@ -105,7 +114,9 @@ def paged_hard_lsh_attend(q: jax.Array, k_pages: jax.Array,
                           num_tables: int, num_planes: int, scale: float,
                           sink_tokens: int, window_tokens: int,
                           interpret: Optional[bool] = None,
-                          with_selection: bool = False):
+                          with_selection: bool = False,
+                          k_scale: Optional[jax.Array] = None,
+                          v_scale: Optional[jax.Array] = None):
     """Fused hard-collision score→select→attend for one decode step.
 
     Same shapes as :func:`paged_socket_attend` except the query-side
@@ -123,7 +134,8 @@ def paged_hard_lsh_attend(q: jax.Array, k_pages: jax.Array,
     budget = jnp.broadcast_to(jnp.asarray(budget, jnp.int32), (b,))
     out = _hard_lsh_flat(
         q, k_pages, v_pages, bits_pages, vnorm_pages, u_signs, block_table,
-        length, budget, num_tables=num_tables, num_planes=num_planes,
+        length, budget, k_scale, v_scale,
+        num_tables=num_tables, num_planes=num_planes,
         scale=float(scale), sink_tokens=int(sink_tokens),
         window_tokens=int(window_tokens), interpret=interpret,
         with_selection=with_selection)
@@ -139,13 +151,14 @@ def paged_hard_lsh_attend(q: jax.Array, k_pages: jax.Array,
     "page_size", "scale", "sink_tokens", "window_tokens", "interpret",
     "with_selection"))
 def _quest_flat(q, k_pages, v_pages, kmin_pages, kmax_pages, bt, length,
-                page_budget, *, page_size, scale, sink_tokens,
-                window_tokens, interpret, with_selection):
+                page_budget, k_scale, v_scale, *, page_size, scale,
+                sink_tokens, window_tokens, interpret, with_selection):
     return paged_quest_pallas(
         q, k_pages, v_pages, kmin_pages, kmax_pages, bt, length,
         page_budget, page_size=page_size, scale=scale,
         sink_tokens=sink_tokens, window_tokens=window_tokens,
-        interpret=interpret, with_selection=with_selection)
+        interpret=interpret, with_selection=with_selection,
+        k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_quest_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
@@ -154,17 +167,22 @@ def paged_quest_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        page_size: int, scale: float, sink_tokens: int,
                        window_tokens: int,
                        interpret: Optional[bool] = None,
-                       with_selection: bool = False):
+                       with_selection: bool = False,
+                       k_scale: Optional[jax.Array] = None,
+                       v_scale: Optional[jax.Array] = None):
     """Fused page-granular Quest select→attend for one decode step.
 
     Shapes:
       q              (B, KVH, G, 1, hd) or (B, KVH, G, hd)
-      k/v_pages      (NB, KVH, bs, hd)
+      k/v_pages      (NB, KVH, bs, hd)  (bf16/int8/fp8 storage)
       kmin/kmax      (NB, KVH, bs / page_size, hd) per-page key bounds
+                     (over *dequantized* keys under quantized storage)
       block_table    int32 (B, nb)
       length         int32 scalar or (B,)
       page_budget    int scalar or (B,) — pages to attend (the static
                      ``baselines.quest.page_budget``)
+      k/v_scale      (NB, KVH, bs) per-row dequant scales (quantized
+                     pools only — both or neither)
     """
     interpret = _auto_interpret() if interpret is None else interpret
     orig5 = q.ndim == 5
@@ -177,7 +195,8 @@ def paged_quest_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     page_budget = jnp.broadcast_to(jnp.asarray(page_budget, jnp.int32), (b,))
     out = _quest_flat(
         q, k_pages, v_pages, kmin_pages, kmax_pages, block_table, length,
-        page_budget, page_size=int(page_size), scale=float(scale),
+        page_budget, k_scale, v_scale,
+        page_size=int(page_size), scale=float(scale),
         sink_tokens=int(sink_tokens), window_tokens=int(window_tokens),
         interpret=interpret, with_selection=with_selection)
     if with_selection:
@@ -190,25 +209,30 @@ def paged_quest_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
 
 @functools.partial(jax.jit, static_argnames=(
     "window", "softcap", "scale", "interpret"))
-def _ring_flat(q, k_pages, v_pages, bt, pos, *, window, softcap, scale,
-               interpret):
+def _ring_flat(q, k_pages, v_pages, bt, pos, k_scale, v_scale, *, window,
+               softcap, scale, interpret):
     return paged_ring_pallas(q, k_pages, v_pages, bt, pos, window=window,
                              softcap=softcap, scale=scale,
-                             interpret=interpret)
+                             interpret=interpret,
+                             k_scale=k_scale, v_scale=v_scale)
 
 
 def paged_ring_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       block_table: jax.Array, *, pos, window: int,
                       softcap: float, scale: float,
-                      interpret: Optional[bool] = None):
+                      interpret: Optional[bool] = None,
+                      k_scale: Optional[jax.Array] = None,
+                      v_scale: Optional[jax.Array] = None):
     """Fused sliding-window decode over the circular page list.
 
     Shapes:
       q            (B, KVH, G, 1, hd) or (B, KVH, G, hd)
-      k/v_pages    (NB, KVH, bs, hd)
+      k/v_pages    (NB, KVH, bs, hd)  (bf16/int8/fp8 storage)
       block_table  int32 (B, ring_blocks) — the ring slice of the table
       pos          int32 scalar or (B,) — the decode token's position
                    (already written to its ring slot)
+      k/v_scale    (NB, KVH, bs) per-row dequant scales (quantized pools
+                   only — both or neither; dequantized in-kernel)
     """
     interpret = _auto_interpret() if interpret is None else interpret
     orig5 = q.ndim == 5
@@ -218,7 +242,7 @@ def paged_ring_attend(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         q = q.reshape(b, kvh, g, hd)
     b = q.shape[0]
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
-    out = _ring_flat(q, k_pages, v_pages, block_table, pos,
+    out = _ring_flat(q, k_pages, v_pages, block_table, pos, k_scale, v_scale,
                      window=int(window), softcap=float(softcap),
                      scale=float(scale), interpret=interpret)
     if orig5:

@@ -71,7 +71,10 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
                   *rest, num_planes: int, l_pad: int, tau: float,
                   scale: float, sink: int, window: int, block_size: int,
                   num_seq_blocks: int, with_selection: bool,
-                  mode: str = "socket"):
+                  mode: str = "socket", quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
     if with_selection:
         out_ref, sel_ref = rest[0], rest[1]
         eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[2:]
@@ -170,6 +173,11 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
         q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
         k = k_ref[0, 0].astype(jnp.float32)       # (bs, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # int8/fp8 pool pages: per-row absmax scales ride along as
+            # (bs,) leaves — dequantize in-register, never in HBM.
+            k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         s = jnp.where(sel[None, :], s, NEG_INF)   # (G, bs)
 
@@ -192,10 +200,14 @@ def _fused_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
 
 def _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
                 k_pages, v_pages, block_table, length, budget, *,
-                with_selection: bool, interpret: bool):
+                with_selection: bool, interpret: bool,
+                k_scale=None, v_scale=None):
     """Shared launch plumbing for the socket/hard_lsh fused kernels: the
     two-phase (score, attend) grid with dual scalar-prefetch index maps
-    and the VMEM score ring + online-softmax scratch layout."""
+    and the VMEM score ring + online-softmax scratch layout.
+
+    ``k_scale``/``v_scale`` (NB, KVH, bs) ride along as extra attend-phase
+    page streams when the K/V pool is quantized (int8/fp8 storage)."""
     b, kvh, g, hd = q.shape
     bs, w = bits_pages.shape[2], bits_pages.shape[3]
     nb = block_table.shape[1]
@@ -221,6 +233,15 @@ def _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
         pl.BlockSpec((1, 1, bs, hd),
                      lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
     ]
+    operands = [q, bits_pages, vnorm_pages, u_pad, logz_pad,
+                k_pages, v_pages]
+    if k_scale is not None:
+        # per-row dequant scales stream with the K/V pages (attend phase)
+        for _ in range(2):
+            in_specs.append(pl.BlockSpec(
+                (1, 1, bs),
+                lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0)))
+        operands += [k_scale, v_scale]
     out_shape = [jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32)]
     out_specs = [pl.BlockSpec((1, 1, g, hd),
                               lambda b, h, ph, i, *s: (b, h, 0, 0))]
@@ -248,8 +269,7 @@ def _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
         kernel, grid_spec=grid_spec, out_shape=out_shape,
         interpret=interpret,
     )(block_table.astype(jnp.int32), length.astype(jnp.int32),
-      budget.astype(jnp.int32), q, bits_pages, vnorm_pages, u_pad, logz_pad,
-      k_pages, v_pages)
+      budget.astype(jnp.int32), *operands)
     return tuple(out) if with_selection else out[0]
 
 
@@ -261,12 +281,16 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
                            num_planes: int, tau: float, scale: float,
                            sink_tokens: int, window_tokens: int,
                            interpret: bool = True,
-                           with_selection: bool = False):
+                           with_selection: bool = False,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None):
     """Launch the fused kernel.
 
     Args:
       q:           (B, KVH, G, hd) query heads for this KV head group.
-      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves (bf16/int8/fp8).
+      k/v_scale:   (NB, KVH, bs) per-row dequant scales — both or neither;
+                   when given the attend pass dequantizes in-register.
       bits_pages:  uint32 (NB, KVH, bs, W) packed sign bits.
       vnorm_pages: (NB, KVH, bs) value norms (any float dtype).
       u:           f32 (B, KVH, GS, L, P) query soft-hash (GS=1 pooled).
@@ -291,6 +315,8 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
     if k_pages.shape[2] != bs or v_pages.shape[2] != bs \
             or vnorm_pages.shape[2] != bs:
         raise ValueError("page pools disagree on block_size")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale/v_scale must be given together")
     l_pad = (w * 32) // num_planes
 
     from repro.core import socket as sk
@@ -305,7 +331,8 @@ def paged_attention_pallas(q: jax.Array, k_pages: jax.Array,
         _fused_kernel, num_planes=num_planes, l_pad=l_pad, tau=float(tau),
         scale=float(scale), sink=int(sink_tokens), window=int(window_tokens),
         block_size=bs, num_seq_blocks=nb, with_selection=with_selection,
-        mode="socket")
+        mode="socket", quantized=k_scale is not None)
     return _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
                        k_pages, v_pages, block_table, length, budget,
-                       with_selection=with_selection, interpret=interpret)
+                       with_selection=with_selection, interpret=interpret,
+                       k_scale=k_scale, v_scale=v_scale)

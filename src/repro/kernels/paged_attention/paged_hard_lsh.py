@@ -50,12 +50,15 @@ def paged_hard_lsh_pallas(q: jax.Array, k_pages: jax.Array,
                           num_planes: int, scale: float,
                           sink_tokens: int, window_tokens: int,
                           interpret: bool = True,
-                          with_selection: bool = False):
+                          with_selection: bool = False,
+                          k_scale=None, v_scale=None):
     """Launch the fused hard-LSH kernel.
 
     Args:
       q:           (B, KVH, G, hd) query heads for this KV head group.
-      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves (bf16/int8/fp8).
+      k/v_scale:   (NB, KVH, bs) per-row dequant scales — both or neither;
+                   when given the attend pass dequantizes in-register.
       bits_pages:  uint32 (NB, KVH, bs, W) packed sign bits.
       vnorm_pages: (NB, KVH, bs) value norms (any float dtype).
       u_signs:     f32 ±1 (B, KVH, G, L, P) query hash plane signs.
@@ -78,6 +81,8 @@ def paged_hard_lsh_pallas(q: jax.Array, k_pages: jax.Array,
     if k_pages.shape[2] != bs or v_pages.shape[2] != bs \
             or vnorm_pages.shape[2] != bs:
         raise ValueError("page pools disagree on block_size")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale/v_scale must be given together")
     l_pad = (w * 32) // num_planes
 
     # zero-pad the query signs over the alignment tables: padded key bits
@@ -90,7 +95,9 @@ def paged_hard_lsh_pallas(q: jax.Array, k_pages: jax.Array,
         _fused_kernel, num_planes=num_planes, l_pad=l_pad, tau=1.0,
         scale=float(scale), sink=int(sink_tokens),
         window=int(window_tokens), block_size=bs, num_seq_blocks=nb,
-        with_selection=with_selection, mode="hard_lsh")
+        with_selection=with_selection, mode="hard_lsh",
+        quantized=k_scale is not None)
     return _fused_call(kernel, q, bits_pages, vnorm_pages, u_pad, logz_pad,
                        k_pages, v_pages, block_table, length, budget,
-                       with_selection=with_selection, interpret=interpret)
+                       with_selection=with_selection, interpret=interpret,
+                       k_scale=k_scale, v_scale=v_scale)

@@ -47,7 +47,10 @@ def _quest_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
                   q_ref, kmin_ref, kmax_ref, k_ref, v_ref,
                   *rest, page_size: int, scale: float, sink: int,
                   window: int, block_size: int, num_seq_blocks: int,
-                  with_selection: bool):
+                  with_selection: bool, quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
     if with_selection:
         out_ref, sel_ref = rest[0], rest[1]
         eff_scr, m_scr, l_scr, acc_scr, thr_scr, ties_scr, cnt_scr = rest[2:]
@@ -136,6 +139,13 @@ def _quest_kernel(bt_ref, len_ref, bud_ref,                 # scalar prefetch
         q = q_ref[0, 0].astype(jnp.float32)       # (G, hd)
         k = k_ref[0, 0].astype(jnp.float32)       # (bs, hd)
         v = v_ref[0, 0].astype(jnp.float32)
+        if quantized:
+            # int8/fp8 pool pages: per-row absmax scales ride along as
+            # (bs,) leaves — dequantize in-register, never in HBM.  The
+            # kmin/kmax stats already bound the *dequantized* keys
+            # (cfg.quest.stats_from_quantized), so scoring is untouched.
+            k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+            v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
         s = jnp.where(sel[None, :], s, NEG_INF)   # (G, bs)
 
@@ -162,12 +172,16 @@ def paged_quest_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                        page_budget: jax.Array, *, page_size: int,
                        scale: float, sink_tokens: int, window_tokens: int,
                        interpret: bool = True,
-                       with_selection: bool = False):
+                       with_selection: bool = False,
+                       k_scale=None, v_scale=None):
     """Launch the fused Quest kernel.
 
     Args:
       q:             (B, KVH, G, hd) query heads for this KV head group.
-      k/v_pages:     (NB, KVH, bs, hd) paged pool leaves.
+      k/v_pages:     (NB, KVH, bs, hd) paged pool leaves (bf16/int8/fp8).
+      k/v_scale:     (NB, KVH, bs) per-row dequant scales — both or
+                     neither; when given the attend pass dequantizes
+                     in-register.
       kmin/kmax_pages: (NB, KVH, bs / page_size, hd) per-page key bounds.
       block_table:   int32 (B, nb) physical block ids (trash-padded).
       length:        int32 (B,) live context length per request.
@@ -191,11 +205,14 @@ def paged_quest_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     if kmin_pages.shape[2] != ppb or kmax_pages.shape[2] != ppb:
         raise ValueError(
             f"kmin/kmax pools must carry {ppb} stat rows per block")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale/v_scale must be given together")
 
     kernel = functools.partial(
         _quest_kernel, page_size=int(page_size), scale=float(scale),
         sink=int(sink_tokens), window=int(window_tokens), block_size=bs,
-        num_seq_blocks=nb, with_selection=with_selection)
+        num_seq_blocks=nb, with_selection=with_selection,
+        quantized=k_scale is not None)
 
     in_specs = [
         pl.BlockSpec((1, 1, g, hd), lambda b, h, ph, i, *s: (b, h, 0, 0)),
@@ -210,6 +227,14 @@ def paged_quest_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         pl.BlockSpec((1, 1, bs, hd),
                      lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0, 0)),
     ]
+    operands = [q, kmin_pages, kmax_pages, k_pages, v_pages]
+    if k_scale is not None:
+        # per-row dequant scales stream with the K/V pages (attend phase)
+        for _ in range(2):
+            in_specs.append(pl.BlockSpec(
+                (1, 1, bs),
+                lambda b, h, ph, i, bt, ln, bd: (bt[b, i * ph], h, 0)))
+        operands += [k_scale, v_scale]
     out_shape = [jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32)]
     out_specs = [pl.BlockSpec((1, 1, g, hd),
                               lambda b, h, ph, i, *s: (b, h, 0, 0))]
@@ -237,6 +262,5 @@ def paged_quest_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         kernel, grid_spec=grid_spec, out_shape=out_shape,
         interpret=interpret,
     )(block_table.astype(jnp.int32), length.astype(jnp.int32),
-      page_budget.astype(jnp.int32), q, kmin_pages, kmax_pages,
-      k_pages, v_pages)
+      page_budget.astype(jnp.int32), *operands)
     return tuple(out) if with_selection else out[0]

@@ -40,9 +40,13 @@ __all__ = ["paged_ring_pallas"]
 
 
 def _ring_kernel(bt_ref, pos_ref,                           # scalar prefetch
-                 q_ref, k_ref, v_ref, out_ref,
-                 m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                 softcap: float, block_size: int, ring_blocks: int):
+                 q_ref, k_ref, v_ref, *rest, scale: float, window: int,
+                 softcap: float, block_size: int, ring_blocks: int,
+                 quantized: bool = False):
+    if quantized:
+        ks_ref, vs_ref = rest[0], rest[1]
+        rest = rest[2:]
+    out_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     i = pl.program_id(2)
     pos = pos_ref[b]
@@ -62,6 +66,11 @@ def _ring_kernel(bt_ref, pos_ref,                           # scalar prefetch
     q = q_ref[0, 0].astype(jnp.float32)           # (G, hd)
     k = k_ref[0, 0].astype(jnp.float32)           # (bs, hd)
     v = v_ref[0, 0].astype(jnp.float32)
+    if quantized:
+        # int8/fp8 ring pages: per-row absmax scales ride along as (bs,)
+        # leaves — dequantize in-register, never in HBM.
+        k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        v = v * vs_ref[0, 0].astype(jnp.float32)[:, None]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
     if softcap:                                   # static no-op at 0.0
         s = softcap * jnp.tanh(s / softcap)
@@ -87,12 +96,14 @@ def _ring_kernel(bt_ref, pos_ref,                           # scalar prefetch
 def paged_ring_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
                       block_table: jax.Array, pos: jax.Array, *,
                       window: int, softcap: float, scale: float,
-                      interpret: bool = True):
+                      interpret: bool = True, k_scale=None, v_scale=None):
     """Launch the ring decode kernel.
 
     Args:
       q:           (B, KVH, G, hd) query heads for this KV head group.
-      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves.
+      k/v_pages:   (NB, KVH, bs, hd) paged pool leaves (bf16/int8/fp8).
+      k/v_scale:   (NB, KVH, bs) per-row dequant scales — both or neither;
+                   when given each streamed page dequantizes in-register.
       block_table: int32 (B, ring_blocks) — the circular page list only
                    (callers slice the full table to the ring geometry).
       pos:         int32 (B,) absolute position of the decode token (the
@@ -108,21 +119,33 @@ def paged_ring_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
     rb = block_table.shape[1]
     if v_pages.shape[2] != bs:
         raise ValueError("page pools disagree on block_size")
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale/v_scale must be given together")
 
     kernel = functools.partial(
         _ring_kernel, scale=float(scale), window=int(window),
-        softcap=float(softcap), block_size=bs, ring_blocks=rb)
+        softcap=float(softcap), block_size=bs, ring_blocks=rb,
+        quantized=k_scale is not None)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, g, hd), lambda b, h, i, *s: (b, h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
+        pl.BlockSpec((1, 1, bs, hd),
+                     lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
+    ]
+    operands = [q, k_pages, v_pages]
+    if k_scale is not None:
+        # per-row dequant scales stream with the K/V pages
+        for _ in range(2):
+            in_specs.append(pl.BlockSpec(
+                (1, 1, bs), lambda b, h, i, bt, ps: (bt[b, i], h, 0)))
+        operands += [k_scale, v_scale]
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(b, kvh, rb),
-        in_specs=[
-            pl.BlockSpec((1, 1, g, hd), lambda b, h, i, *s: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hd),
-                         lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
-            pl.BlockSpec((1, 1, bs, hd),
-                         lambda b, h, i, bt, ps: (bt[b, i], h, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, i, *s: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((g,), jnp.float32),        # m
@@ -134,5 +157,4 @@ def paged_ring_pallas(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
         kernel, grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, kvh, g, hd), jnp.float32),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), pos.astype(jnp.int32),
-      q, k_pages, v_pages)
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), *operands)

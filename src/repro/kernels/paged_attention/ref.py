@@ -31,14 +31,24 @@ def _logical(pages: jax.Array, bt: jax.Array) -> jax.Array:
     return gather_block_leaf(pages, bt)
 
 
+def _logical_kv(pages: jax.Array, scale_pages, bt: jax.Array) -> jax.Array:
+    """Logical K/V view, dequantized when per-row scales are given."""
+    x = _logical(pages, bt)
+    if scale_pages is None:
+        return x
+    s = _logical(scale_pages, bt).astype(jnp.float32)
+    return x.astype(jnp.float32) * s[..., None]
+
+
 def paged_socket_attend_ref(q: jax.Array, k_pages: jax.Array,
                             v_pages: jax.Array, bits_pages: jax.Array,
                             vnorm_pages: jax.Array, u: jax.Array,
                             block_table: jax.Array, *, length, budget,
                             num_tables: int, num_planes: int, tau: float,
                             scale: float, sink_tokens: int,
-                            window_tokens: int,
-                            top_k: int) -> Tuple[jax.Array, jax.Array]:
+                            window_tokens: int, top_k: int,
+                            k_scale=None,
+                            v_scale=None) -> Tuple[jax.Array, jax.Array]:
     """Oracle for :func:`ops.paged_socket_attend`.
 
     Same shapes as the kernel wrapper plus ``top_k`` — the static
@@ -52,8 +62,8 @@ def paged_socket_attend_ref(q: jax.Array, k_pages: jax.Array,
     b, kvh, g, hd = q.shape
     bits = _logical(bits_pages, block_table)          # (B,KVH,N,W)
     vnorm = _logical(vnorm_pages, block_table).astype(jnp.float32)
-    kc = _logical(k_pages, block_table)
-    vc = _logical(v_pages, block_table)
+    kc = _logical_kv(k_pages, k_scale, block_table)
+    vc = _logical_kv(v_pages, v_scale, block_table)
     n = bits.shape[2]
 
     gs = u.shape[2]
@@ -89,7 +99,8 @@ def paged_hard_lsh_attend_ref(q: jax.Array, k_pages: jax.Array,
                               block_table: jax.Array, *, length, budget,
                               num_tables: int, num_planes: int, scale: float,
                               sink_tokens: int, window_tokens: int,
-                              top_k: int) -> Tuple[jax.Array, jax.Array]:
+                              top_k: int, k_scale=None,
+                              v_scale=None) -> Tuple[jax.Array, jax.Array]:
     """Oracle for :func:`ops.paged_hard_lsh_attend`.
 
     Identical composition to the socket oracle with the factorized soft
@@ -103,8 +114,8 @@ def paged_hard_lsh_attend_ref(q: jax.Array, k_pages: jax.Array,
     b, kvh, g, hd = q.shape
     bits = _logical(bits_pages, block_table)          # (B,KVH,N,W)
     vnorm = _logical(vnorm_pages, block_table).astype(jnp.float32)
-    kc = _logical(k_pages, block_table)
-    vc = _logical(v_pages, block_table)
+    kc = _logical_kv(k_pages, k_scale, block_table)
+    vc = _logical_kv(v_pages, v_scale, block_table)
     n = bits.shape[2]
 
     cfg = sk.SocketConfig(num_planes=num_planes, num_tables=num_tables,
@@ -136,7 +147,8 @@ def paged_quest_attend_ref(q: jax.Array, k_pages: jax.Array,
                            kmax_pages: jax.Array, block_table: jax.Array, *,
                            length, page_size: int, sparsity: float,
                            min_pages: int, scale: float, sink_tokens: int,
-                           window_tokens: int) -> Tuple[jax.Array, jax.Array]:
+                           window_tokens: int, k_scale=None,
+                           v_scale=None) -> Tuple[jax.Array, jax.Array]:
     """Oracle for :func:`ops.paged_quest_attend`.
 
     Materializes the logical per-request kmin/kmax stat views and runs
@@ -149,8 +161,8 @@ def paged_quest_attend_ref(q: jax.Array, k_pages: jax.Array,
     if q.ndim == 4:
         q = q[:, :, :, None]                          # (B,KVH,G,1,hd)
     b, kvh, g, _, hd = q.shape
-    kc = _logical(k_pages, block_table)               # (B,KVH,N,hd)
-    vc = _logical(v_pages, block_table)
+    kc = _logical_kv(k_pages, k_scale, block_table)   # (B,KVH,N,hd)
+    vc = _logical_kv(v_pages, v_scale, block_table)
     kmin = _logical(kmin_pages, block_table)          # (B,KVH,n_pages,hd)
     kmax = _logical(kmax_pages, block_table)
     n = kc.shape[2]
@@ -180,7 +192,8 @@ def paged_quest_attend_ref(q: jax.Array, k_pages: jax.Array,
 def paged_ring_attend_ref(q: jax.Array, k_pages: jax.Array,
                           v_pages: jax.Array, block_table: jax.Array, *,
                           pos, window: int, softcap: float,
-                          scale: float) -> jax.Array:
+                          scale: float, k_scale=None,
+                          v_scale=None) -> jax.Array:
     """Oracle for :func:`ops.paged_ring_attend`.
 
     Gathers the circular page list (``block_table`` is the ring slice)
@@ -191,8 +204,9 @@ def paged_ring_attend_ref(q: jax.Array, k_pages: jax.Array,
     if q.ndim == 5:
         q = q[:, :, :, 0]
     b, kvh, g, hd = q.shape
-    kc = _logical(k_pages, block_table).astype(jnp.float32)  # (B,KVH,cap,hd)
-    vc = _logical(v_pages, block_table).astype(jnp.float32)
+    kc = _logical_kv(k_pages, k_scale,
+                     block_table).astype(jnp.float32)        # (B,KVH,cap,hd)
+    vc = _logical_kv(v_pages, v_scale, block_table).astype(jnp.float32)
     cap = kc.shape[2]
 
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))

@@ -6,7 +6,8 @@ collision score, DESIGN.md §2), shape-for-shape:
     scores[bh, n] = vnorm[bh, n] * sum_g sum_l exp( (S . u)/tau - logZ )
 
 Inputs:
-  bits  : uint32 (BH, N, W)     packed ±1 sign bits (hashing.pack_signs)
+  bits  : uint32 (BH, N, W)     packed ±1 sign bits (hashing.pack_signs),
+                                or int8 (BH, N, L*P) ±1 plane bytes
   u     : f32    (BH, G, L, P)  query soft-hash (socket.soft_hash_query)
   vnorm : f32    (BH, N)        value norms (or None for unweighted scores)
 """
@@ -25,7 +26,12 @@ def socket_score_ref(bits: jax.Array, u: jax.Array,
                      vnorm: Optional[jax.Array], *, num_tables: int,
                      num_planes: int, tau: float) -> jax.Array:
     """Returns f32 (BH, N) group-summed, value-weighted scores."""
-    signs = hashing.unpack_signs(bits, num_tables, num_planes)  # (BH,N,L,P)
+    if bits.dtype == jnp.int8:                    # ±1 plane bytes (BH,N,L*P)
+        signs = bits.astype(jnp.float32).reshape(
+            *bits.shape[:-1], num_tables, num_planes)
+    else:
+        signs = hashing.unpack_signs(bits, num_tables,
+                                     num_planes)   # (BH,N,L,P)
     logits = jnp.einsum("bnlp,bglp->bgnl", signs, u.astype(jnp.float32))
     logits = logits / tau
     logz = socket.log_normalizer(u.astype(jnp.float32), tau)    # (BH,G,L)

@@ -43,18 +43,25 @@ DEFAULT_BLOCK_N = 512
 
 
 def _score_kernel(bits_ref, u_ref, logz_ref, vnorm_ref, out_ref, *,
-                  num_planes: int, l_pad: int, tau: float):
+                  num_planes: int, l_pad: int, tau: float,
+                  bits_format: str = "packed"):
     """One (bh, n-block) tile."""
-    words = bits_ref[0]                          # (block_n, W) uint32
-    block_n, w = words.shape
+    if bits_format == "packed":
+        words = bits_ref[0]                      # (block_n, W) uint32
+        block_n, w = words.shape
 
-    # ---- unpack W uint32 words -> (block_n, W*32) ±1 float32 ------------
-    shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
-    bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
-    signs = bits.reshape(block_n, w * 32).astype(jnp.float32) * 2.0 - 1.0
-    # padded-table view: (block_n, L_pad, P); pad tables contribute 0 via
-    # logz = +inf supplied by the wrapper.
-    signs = signs.reshape(block_n, l_pad, num_planes)
+        # ---- unpack W uint32 words -> (block_n, W*32) ±1 float32 --------
+        shifts = jax.lax.broadcasted_iota(jnp.uint32, (1, 1, 32), 2)
+        bits = (words[:, :, None] >> shifts) & jnp.uint32(1)
+        signs = bits.reshape(block_n, w * 32).astype(jnp.float32) * 2.0 - 1.0
+        # padded-table view: (block_n, L_pad, P); pad tables contribute 0
+        # via logz = +inf supplied by the wrapper.
+        signs = signs.reshape(block_n, l_pad, num_planes)
+    else:                                        # "int8": ±1 plane bytes
+        planes = bits_ref[0]                     # (block_n, L*P) int8
+        block_n = planes.shape[0]
+        signs = planes.astype(jnp.float32).reshape(block_n, l_pad,
+                                                   num_planes)
 
     u = u_ref[0]                                 # (G, L_pad, P) f32
     logz = logz_ref[0]                           # (G, L_pad)
@@ -78,7 +85,9 @@ def socket_score_pallas(bits: jax.Array, u: jax.Array,
     """Launch the scoring kernel.
 
     Args:
-      bits:  uint32 (BH, N, W) packed sign bits.
+      bits:  uint32 (BH, N, W) packed sign bits, or int8 (BH, N, L*P)
+             ±1 plane bytes (``bits_storage="int8"`` — format inferred
+             from the dtype; no unpack, no table padding).
       u:     f32 (BH, G, L, P) query soft-hash.
       vnorm: f32 (BH, N) value norms, or None.
 
@@ -89,11 +98,18 @@ def socket_score_pallas(bits: jax.Array, u: jax.Array,
     _, g, l, p = u.shape
     if l != num_tables or p != num_planes:
         raise ValueError("u shape mismatch")
-    if (w * 32) % num_planes:
-        raise ValueError(
-            f"packed width {w*32} bits not a multiple of P={num_planes}; "
-            f"choose P dividing 32*W")
-    l_pad = (w * 32) // num_planes
+    bits_format = "int8" if bits.dtype == jnp.int8 else "packed"
+    if bits_format == "packed":
+        if (w * 32) % num_planes:
+            raise ValueError(
+                f"packed width {w*32} bits not a multiple of P="
+                f"{num_planes}; choose P dividing 32*W")
+        l_pad = (w * 32) // num_planes
+    else:
+        if w != l * p:
+            raise ValueError(
+                f"int8 bits width {w} != L*P = {l * p}")
+        l_pad = l                                 # no padding tables
 
     # logZ (+inf on padding tables kills their contribution exactly)
     from repro.core import socket as sk
@@ -112,7 +128,8 @@ def socket_score_pallas(bits: jax.Array, u: jax.Array,
         raise ValueError(f"N={n} not a multiple of block_n={block_n}")
 
     kernel = functools.partial(_score_kernel, num_planes=num_planes,
-                               l_pad=l_pad, tau=float(tau))
+                               l_pad=l_pad, tau=float(tau),
+                               bits_format=bits_format)
     return pl.pallas_call(
         kernel,
         grid=(bh, n // block_n),

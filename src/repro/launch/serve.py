@@ -58,6 +58,26 @@ def apply_backend_arg(cfg, backend: str):
     return cfg.replace(attention_backend=backend)
 
 
+# K/V pool page storage modes (ServingSettings.kv_dtype): "auto" stores
+# pages at the compute dtype, int8/fp8 quantize on write with per-row
+# absmax scales and dequantize in-kernel on the fused paths
+KV_DTYPES = ("auto", "bf16", "int8", "fp8")
+
+
+def apply_kv_dtype(cfg, kv_dtype):
+    """Resolve a ``--kv-dtype`` value onto the config's serving plan.
+    Shared by this CLI and ``benchmarks.bench_serving`` so the
+    quantized-pool knob lives in exactly one place.  ``None`` keeps the
+    config's own ``serving.kv_dtype``; the dtype matrix itself (fp8
+    needs the fused kernels, quest needs quantized-round-trip stats,
+    ...) is enforced by ``cfg.validate()``."""
+    if kv_dtype is None:
+        return cfg
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(f"kv_dtype={kv_dtype!r} not in {KV_DTYPES}")
+    return cfg.replace(serving=cfg.serving.replace(kv_dtype=kv_dtype))
+
+
 def run_serve(cfg, batch: int, prompt_len: int, decode_steps: int,
               seed: int = 0, prompt=None):
     """Prefill + greedy decode; returns (tokens, prefill_s, decode_s).
@@ -210,6 +230,11 @@ def main():
                     help="decode backend; the *_fused names route the "
                          "continuous engine through the corresponding "
                          "fused Pallas paged-attention kernel")
+    ap.add_argument("--kv-dtype", default=None, choices=list(KV_DTYPES),
+                    help="K/V pool page storage: 'auto' (compute dtype), "
+                         "'bf16', or quantized 'int8'/'fp8' pages with "
+                         "per-row scales dequantized in-kernel (default: "
+                         "the config's serving.kv_dtype)")
     ap.add_argument("--ring-kernel", action="store_true",
                     help="route sliding-window (local) layer decode "
                          "through the Pallas ring kernel (continuous "
@@ -312,6 +337,7 @@ def main():
     if args.smoke:
         cfg = cfg.smoke()
     cfg = apply_backend_arg(cfg, args.backend)
+    cfg = apply_kv_dtype(cfg, args.kv_dtype)
     if args.ring_kernel:
         cfg = cfg.replace(use_ring_kernel=True)
     if args.prefill_chunk is not None:
@@ -363,6 +389,7 @@ def main():
         report = {
             "arch": cfg.name, "backend": args.backend,
             "engine": "continuous",
+            "kv_dtype": sv.kv_dtype,
             "prefill_chunk": sv.prefill_chunk,
             "workload": args.workload,
             "prompt_lens": lens if prompts is None else sorted(

@@ -73,7 +73,7 @@ from repro.distributed import sharding as shd
 from repro.distributed.sharding import lsc
 from repro.models import backends
 from repro.models import param as pm
-from repro.models.backends import socket_config_of
+from repro.models.backends import kvquant, socket_config_of
 from repro.models.layers import apply_rope, init_rmsnorm, rmsnorm, softcap
 
 __all__ = ["init_attention", "attention_train", "attention_prefill",
@@ -266,14 +266,15 @@ def init_attention_cache(cfg: ModelConfig, batch: int, capacity: int,
     """
     dtype = dtype or jnp.dtype(cfg.compute_dtype)
     _, kv = _eff_heads(cfg)
-    hd = cfg.head_dim
     if attn_type == "local":
         cap = ring_capacity if ring_capacity is not None else \
             min(capacity, cfg.sliding_window)
-        return {
-            "k": jnp.zeros((batch, kv, cap, hd), dtype),
-            "v": jnp.zeros((batch, kv, cap, hd), dtype),
-        }
+        # same leaf layout as the ring pool pages: quantized storage adds
+        # the k_scale/v_scale leaves here too (kv_leaf_specs resolves
+        # serving.kv_dtype)
+        return {name: jnp.full((batch, kv, cap, *s.suffix), s.fill,
+                               s.leaf_dtype(dtype))
+                for name, s in backends.kv_leaf_specs(cfg).items()}
     backend = backends.get_backend(cfg.attention_backend)
     return backend.init_cache(cfg, batch, kv, capacity, dtype)
 
@@ -282,8 +283,9 @@ def cache_logical_axes(cfg: ModelConfig, attn_type: str,
                        long_context: bool = False) -> Dict:
     """Logical axis names mirroring :func:`init_attention_cache`."""
     if attn_type == "local":
-        return {"k": ("cache_batch", "cache_heads", "cache_seq", None),
-                "v": ("cache_batch", "cache_heads", "cache_seq", None)}
+        return {name: ("cache_batch", "cache_heads", "cache_seq") +
+                (None,) * len(s.suffix)
+                for name, s in backends.kv_leaf_specs(cfg).items()}
     seq = "cache_seq_cp" if long_context else "cache_seq"
     return backends.get_backend(cfg.attention_backend).cache_axes(cfg, seq)
 
@@ -320,10 +322,17 @@ def attention_prefill(cfg: ModelConfig, params: Dict, x: jax.Array,
         ring_pos = li[:, None] - ((li[:, None] - sl[None]) % cap)  # (B,cap)
         valid = (ring_pos >= 0)[:, None, :, None]
         idx = jnp.clip(ring_pos, 0, t - 1)[:, None, :, None]
-        cache = {
-            "k": jnp.where(valid, jnp.take_along_axis(kc, idx, axis=2), 0),
-            "v": jnp.where(valid, jnp.take_along_axis(vc, idx, axis=2), 0),
-        }
+        ring_k = jnp.where(valid, jnp.take_along_axis(kc, idx, axis=2), 0)
+        ring_v = jnp.where(valid, jnp.take_along_axis(vc, idx, axis=2), 0)
+        kvd = backends.kv_quant_mode(cfg)
+        if kvquant.is_quantized(kvd):
+            kq, ks = kvquant.quantize(ring_k, kvd)
+            vq, vs = kvquant.quantize(ring_v, kvd)
+            return y, {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+        if kvd == "bf16":
+            ring_k = ring_k.astype(jnp.bfloat16)
+            ring_v = ring_v.astype(jnp.bfloat16)
+        cache = {"k": ring_k, "v": ring_v}
         return y, cache
     cache = init_attention_cache(cfg, b, capacity, attn_type,
                                  dtype=kc.dtype)
@@ -384,6 +393,12 @@ def attention_prefill_chunk(cfg: ModelConfig, params: Dict, x: jax.Array,
         # in-chunk token will recycle.
         ring_k = backends.gather_block_leaf(cache["k"], bt_row[None, :rb])
         ring_v = backends.gather_block_leaf(cache["v"], bt_row[None, :rb])
+        kvd = backends.kv_quant_mode(cfg)
+        if kvquant.is_quantized(kvd):
+            ring_k = kvquant.dequantize(ring_k, backends.gather_block_leaf(
+                cache["k_scale"], bt_row[None, :rb]))
+            ring_v = kvquant.dequantize(ring_v, backends.gather_block_leaf(
+                cache["v_scale"], bt_row[None, :rb]))
         sl = jnp.arange(cap, dtype=jnp.int32)
         lp = jnp.asarray(history, jnp.int32) - 1
         rp = lp - ((lp - sl) % cap)                          # (cap,)
@@ -404,22 +419,24 @@ def attention_prefill_chunk(cfg: ModelConfig, params: Dict, x: jax.Array,
                          v_all.astype(jnp.float32))
         ctx = ctx.reshape(b, t, h_eff, hd)
 
-        def body(j, kvp):
-            kp, vp = kvp
+        def body(j, cc):
             pos = jnp.full((b,), history + j, jnp.int32)
             blk = bt_row[(pos // bs) % rb]
             # padded rows (j > last_index) go to the trash page (block 0)
             blk = jnp.where(j <= li, blk, jnp.zeros_like(blk))
-            kp = backends.ring_write_page(kp, blk, pos, kc[:, :, j],
-                                          block_size=bs, ring_blocks=rb,
-                                          window=w)
-            vp = backends.ring_write_page(vp, blk, pos, vc[:, :, j],
-                                          block_size=bs, ring_blocks=rb,
-                                          window=w)
-            return kp, vp
+            vals = {"k": kc[:, :, j], "v": vc[:, :, j]}
+            if kvquant.is_quantized(kvd):
+                vals["k"], vals["k_scale"] = kvquant.quantize(vals["k"], kvd)
+                vals["v"], vals["v_scale"] = kvquant.quantize(vals["v"], kvd)
+            return {name: backends.ring_write_page(
+                cc[name], blk, pos, vals[name], block_size=bs,
+                ring_blocks=rb, window=w) for name in cc}
 
-        cache["k"], cache["v"] = jax.lax.fori_loop(
-            0, t, body, (cache["k"], cache["v"]))
+        ring_names = [n for n in ("k", "v", "k_scale", "v_scale")
+                      if n in cache]
+        ring_leaves = jax.lax.fori_loop(
+            0, t, body, {n: cache[n] for n in ring_names})
+        cache.update(ring_leaves)
     else:
         backend = backends.get_backend(cfg.attention_backend)
         # chunk-sized mini cache through the backend's own prefill_build:
@@ -451,6 +468,11 @@ def attention_prefill_chunk(cfg: ModelConfig, params: Dict, x: jax.Array,
         # rows sit past every real query's position.
         k_full = backends.gather_block_leaf(cache["k"], bt_row[None])
         v_full = backends.gather_block_leaf(cache["v"], bt_row[None])
+        if kvquant.is_quantized(backends.kv_quant_mode(cfg)):
+            k_full = kvquant.dequantize(k_full, backends.gather_block_leaf(
+                cache["k_scale"], bt_row[None]))
+            v_full = kvquant.dequantize(v_full, backends.gather_block_leaf(
+                cache["v_scale"], bt_row[None]))
         ctx = _attn_chunk(cfg, qg, jnp.swapaxes(k_full, 1, 2),
                           jnp.swapaxes(v_full, 1, 2), history, "global",
                           scale, repeat_kv=False)
@@ -497,51 +519,61 @@ def attention_decode(cfg: ModelConfig, params: Dict, x: jax.Array,
 
     if attn_type == "local":
         ring_fused = block_tables is not None and cfg.use_ring_kernel
+        kvd = backends.kv_quant_mode(cfg)
+        quantized = kvquant.is_quantized(kvd)
         if block_tables is not None:
             # paged ring: the block table's first ring_blocks entries are
             # a circular page list (plan kind "ring"); the bounded ring
             # view (window-sized) then runs the same attention math.
             rb, cap = cfg.ring_geometry()
+            spec = backends.kv_leaf_specs(cfg)
             view = backends.RingView(
-                {"k": cache["k"], "v": cache["v"]},
-                backends.kv_leaf_specs(cfg), block_tables,
+                {name: cache[name] for name in spec},
+                spec, block_tables,
                 cfg.serving.block_size, rb, cfg.sliding_window)
-            view.write_token("k", pos, k_new[:, 0])
-            view.write_token("v", pos, v_new[:, 0])
+            backends.write_token_kv(cfg, view, pos, k_new[:, 0],
+                                    v_new[:, 0])
             cache = dict(cache)
             cache.update(view.arrays)
             if ring_fused:
                 # fused Pallas ring pass: stream the circular page list
-                # straight from the pool, window mask in-kernel — the
-                # leaf() gather below never materializes.
+                # straight from the pool, window mask (and dequant, for
+                # quantized pages) in-kernel — the leaf() gather below
+                # never materializes.
                 from repro.kernels.paged_attention import ops as pa_ops
                 ctx = pa_ops.paged_ring_attend(
                     qg, cache["k"], cache["v"], block_tables[:, :rb],
                     pos=pos, window=cfg.sliding_window,
-                    softcap=cfg.attn_logit_softcap, scale=scale)
+                    softcap=cfg.attn_logit_softcap, scale=scale,
+                    k_scale=cache.get("k_scale"),
+                    v_scale=cache.get("v_scale"))
                 backends.record_fused("paged_ring", ctx.shape)
             else:
-                ring_k, ring_v = view.leaf("k"), view.leaf("v")
+                ring_k = backends.dequant_leaf(cfg, view, "k")
+                ring_v = backends.dequant_leaf(cfg, view, "v")
         else:
             cap = cache["k"].shape[2]
             slot = pos % cap
             cache = dict(cache)
-            if ragged:
-                bidx = jnp.arange(b)
-                cache["k"] = cache["k"].at[bidx, :, slot].set(
-                    k_new[:, 0].astype(cache["k"].dtype))
-                cache["v"] = cache["v"].at[bidx, :, slot].set(
-                    v_new[:, 0].astype(cache["v"].dtype))
-            else:
-                cache["k"] = jax.lax.dynamic_update_slice(
-                    cache["k"],
-                    jnp.swapaxes(k_new, 1, 2).astype(cache["k"].dtype),
-                    (0, 0, slot, 0))
-                cache["v"] = jax.lax.dynamic_update_slice(
-                    cache["v"],
-                    jnp.swapaxes(v_new, 1, 2).astype(cache["v"].dtype),
-                    (0, 0, slot, 0))
+            vals = {"k": jnp.swapaxes(k_new, 1, 2),
+                    "v": jnp.swapaxes(v_new, 1, 2)}       # (B,KV,1,hd)
+            if quantized:
+                vals["k"], vals["k_scale"] = kvquant.quantize(vals["k"], kvd)
+                vals["v"], vals["v_scale"] = kvquant.quantize(vals["v"], kvd)
+            for name, val in vals.items():
+                a = cache[name]
+                if ragged:
+                    bidx = jnp.arange(b)
+                    cache[name] = a.at[bidx, :, slot].set(
+                        val[:, :, 0].astype(a.dtype))
+                else:
+                    cache[name] = jax.lax.dynamic_update_slice(
+                        a, val.astype(a.dtype),
+                        (0, 0, slot) + (0,) * (a.ndim - 3))
             ring_k, ring_v = cache["k"], cache["v"]
+            if quantized:
+                ring_k = kvquant.dequantize(ring_k, cache["k_scale"])
+                ring_v = kvquant.dequantize(ring_v, cache["v_scale"])
         if not ring_fused:
             # ring-slot absolute positions; invalid slots masked out.  The
             # window bound is a no-op when cap <= window (static path) but

@@ -15,15 +15,19 @@ from __future__ import annotations
 
 from typing import Dict, Tuple
 
+from repro.models.backends import kvquant
 from repro.models.backends.base import (ContiguousView, DecodeBackend,
                                         KVView, LayerCacheHandler,
                                         LayerCacheSpec, LeafSpec,
                                         PagedKVCacheHandler, PagedView,
-                                        RingView, gather_block_leaf,
-                                        gather_trace, gather_trace_reset,
-                                        kv_leaf_specs, record_fused,
-                                        ring_write_page, write_chunk_blocks,
-                                        write_chunk_rows)
+                                        RingView, dequant_leaf,
+                                        gather_block_leaf,
+                                        gather_kv_rows, gather_trace,
+                                        gather_trace_reset, kv_leaf_specs,
+                                        kv_quant_mode, kv_scales_of,
+                                        record_fused, ring_write_page,
+                                        write_chunk_blocks,
+                                        write_chunk_rows, write_token_kv)
 
 __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "RingView", "LeafSpec", "LayerCacheSpec", "LayerCacheHandler",
@@ -32,7 +36,9 @@ __all__ = ["DecodeBackend", "KVView", "ContiguousView", "PagedView",
            "register", "get_backend", "registered_backends",
            "gather_block_leaf", "gather_trace", "gather_trace_reset",
            "record_fused", "ring_write_page", "write_chunk_blocks",
-           "write_chunk_rows", "socket_config_of"]
+           "write_chunk_rows", "socket_config_of", "kvquant",
+           "kv_quant_mode", "kv_scales_of", "write_token_kv",
+           "gather_kv_rows", "dequant_leaf"]
 
 _REGISTRY: Dict[str, DecodeBackend] = {}
 

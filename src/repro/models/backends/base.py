@@ -39,12 +39,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models.backends import kvquant
+
 __all__ = ["LeafSpec", "LayerCacheSpec", "KVView", "ContiguousView",
            "PagedView", "RingView", "DecodeBackend", "LayerCacheHandler",
            "PagedKVCacheHandler", "kv_leaf_specs", "write_prefill_kv",
            "subset_attention", "gather_trace", "gather_trace_reset",
            "record_fused", "gather_block_leaf", "write_block_prefill",
-           "write_chunk_blocks", "write_chunk_rows", "ring_write_page"]
+           "write_chunk_blocks", "write_chunk_rows", "ring_write_page",
+           "kv_quant_mode", "write_token_kv", "gather_kv_rows",
+           "dequant_leaf", "effective_keys", "kv_scales_of"]
 
 
 def gather_block_leaf(pages: jax.Array, bt: jax.Array) -> jax.Array:
@@ -85,10 +89,40 @@ class LeafSpec:
         return cache_dtype if self.dtype is None else jnp.dtype(self.dtype)
 
 
+def kv_quant_mode(cfg) -> str:
+    """The resolved K/V storage mode for attention layers (paged and
+    ring alike — ``cfg.cache_plan()`` resolves the same knob; Mamba state
+    never quantizes)."""
+    return getattr(cfg.serving, "kv_dtype", "auto")
+
+
 def kv_leaf_specs(cfg) -> Dict[str, LeafSpec]:
-    """The K/V leaves every backend stores."""
+    """The K/V leaves every backend stores.
+
+    Under ``serving.kv_dtype`` ``"int8"``/``"fp8"`` the k/v leaves store
+    quantized rows and a float32 per-row scale leaf rides along
+    (``k_scale``/``v_scale``, empty suffix, granularity 1 — exactly how
+    the SOCKET bits/vnorm side-cache rides along), produced/consumed via
+    :mod:`repro.models.backends.kvquant`.  ``"bf16"`` is a plain storage
+    cast (no scales); ``"auto"`` keeps the compute dtype.
+    """
     hd = cfg.head_dim
-    return {"k": LeafSpec(suffix=(hd,)), "v": LeafSpec(suffix=(hd,))}
+    kvd = kv_quant_mode(cfg)
+    if kvd == "auto":
+        return {"k": LeafSpec(suffix=(hd,)), "v": LeafSpec(suffix=(hd,))}
+    sdt = kvquant.storage_dtype(kvd, None)
+    spec = {"k": LeafSpec(suffix=(hd,), dtype=sdt),
+            "v": LeafSpec(suffix=(hd,), dtype=sdt)}
+    if kvquant.is_quantized(kvd):
+        spec["k_scale"] = LeafSpec(suffix=(), dtype=kvquant.scale_dtype())
+        spec["v_scale"] = LeafSpec(suffix=(), dtype=kvquant.scale_dtype())
+    return spec
+
+
+def kv_scales_of(arrays: Dict[str, jax.Array], name: str):
+    """The scale leaf paired with K/V leaf ``name`` (None when the cache
+    is unquantized)."""
+    return arrays.get(name + "_scale")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -395,14 +429,77 @@ class RingView(PagedView):
 
 # ------------------------------------------------------------------ backend
 
-def write_prefill_kv(cache: Dict[str, jax.Array], kc: jax.Array,
+def write_prefill_kv(cfg, cache: Dict[str, jax.Array], kc: jax.Array,
                      vc: jax.Array) -> Dict[str, jax.Array]:
-    """Write the prompt K/V ``(B, KVH, T, hd)`` into rows [0, T)."""
+    """Write the prompt K/V ``(B, KVH, T, hd)`` into rows [0, T),
+    quantizing on write (absmax per row, inside the caller's jit — no
+    extra HBM round-trip) when the cache carries scale leaves."""
     t = kc.shape[2]
+    kvd = kv_quant_mode(cfg)
     cache = dict(cache)
+    if kvquant.is_quantized(kvd):
+        kq, ks = kvquant.quantize(kc, kvd)
+        vq, vs = kvquant.quantize(vc, kvd)
+        cache["k"] = cache["k"].at[:, :, :t].set(kq)
+        cache["v"] = cache["v"].at[:, :, :t].set(vq)
+        cache["k_scale"] = cache["k_scale"].at[:, :, :t].set(ks)
+        cache["v_scale"] = cache["v_scale"].at[:, :, :t].set(vs)
+        return cache
     cache["k"] = cache["k"].at[:, :, :t].set(kc.astype(cache["k"].dtype))
     cache["v"] = cache["v"].at[:, :, :t].set(vc.astype(cache["v"].dtype))
     return cache
+
+
+def write_token_kv(cfg, view: "KVView", pos: jax.Array, kc: jax.Array,
+                   vc: jax.Array) -> None:
+    """Append-side K/V write of one token ``(B, KVH, hd)`` through a
+    view, quantizing on write when the cache carries scale leaves."""
+    kvd = kv_quant_mode(cfg)
+    if kvquant.is_quantized(kvd):
+        kq, ks = kvquant.quantize(kc, kvd)
+        vq, vs = kvquant.quantize(vc, kvd)
+        view.write_token("k", pos, kq)
+        view.write_token("v", pos, vq)
+        view.write_token("k_scale", pos, ks)
+        view.write_token("v_scale", pos, vs)
+        return
+    view.write_token("k", pos, kc)
+    view.write_token("v", pos, vc)
+
+
+def gather_kv_rows(cfg, view: "KVView", idx: jax.Array):
+    """The unfused paths' K/V read: gather the O(top_k) selected rows and
+    dequantize ONLY those (the quantized pool rows never round-trip
+    through HBM at full precision).  Returns ``(k_sel, v_sel)`` in
+    float32 under quantization, storage dtype otherwise."""
+    k_sel = view.gather_rows("k", idx)
+    v_sel = view.gather_rows("v", idx)
+    if kvquant.is_quantized(kv_quant_mode(cfg)):
+        k_sel = kvquant.dequantize(k_sel, view.gather_rows("k_scale", idx))
+        v_sel = kvquant.dequantize(v_sel, view.gather_rows("v_scale", idx))
+    return k_sel, v_sel
+
+
+def dequant_leaf(cfg, view: "KVView", name: str) -> jax.Array:
+    """Full logical K/V leaf, dequantized when the cache carries scale
+    leaves (dense fallback / probe shadow path — the fused kernels never
+    take this route)."""
+    a = view.leaf(name)
+    if name in ("k", "v") and kvquant.is_quantized(kv_quant_mode(cfg)):
+        return kvquant.dequantize(a, view.leaf(name + "_scale"))
+    return a
+
+
+def effective_keys(cfg, kc: jax.Array) -> jax.Array:
+    """The key values the attend phase will actually read back: the
+    quantization round trip of ``kc`` under int8/fp8 storage, ``kc``
+    itself otherwise.  Quest's kmin/kmax page stats are computed from
+    this (``quest.stats_from_quantized``) so the per-page bounds cover
+    the dequantized keys and the upper-bound score stays sound."""
+    kvd = kv_quant_mode(cfg)
+    if kvquant.is_quantized(kvd) and cfg.quest.stats_from_quantized:
+        return kvquant.dequantize(*kvquant.quantize(kc, kvd))
+    return kc
 
 
 def subset_attention(cfg, q: jax.Array, k_sel: jax.Array, v_sel: jax.Array,

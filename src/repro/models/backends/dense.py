@@ -22,15 +22,15 @@ class DenseBackend(base.DecodeBackend):
         return base.kv_leaf_specs(cfg)
 
     def prefill_build(self, cfg, params, cache, kc, vc):
-        del cfg, params
-        return base.write_prefill_kv(cache, kc, vc)
+        del params
+        return base.write_prefill_kv(cfg, cache, kc, vc)
 
     def append(self, cfg, params, view: KVView, kc, vc, pos):
-        del cfg, params
-        view.write_token("k", pos, kc[:, :, 0])
-        view.write_token("v", pos, vc[:, :, 0])
+        del params
+        base.write_token_kv(cfg, view, pos, kc[:, :, 0], vc[:, :, 0])
 
     def attend(self, cfg, params, q, view: KVView, *, length, scale):
-        del cfg, params
-        return oracle.dense_attention(q, view.leaf("k"), view.leaf("v"),
+        del params
+        return oracle.dense_attention(q, base.dequant_leaf(cfg, view, "k"),
+                                      base.dequant_leaf(cfg, view, "v"),
                                       scale=scale, length=length)

@@ -65,7 +65,9 @@ class HardLSHBackend(SocketBackend):
             view.arrays["vnorm"], u_signs, view.block_table, length=length,
             budget=budget, num_tables=scfg.num_tables,
             num_planes=scfg.num_planes, scale=scale,
-            sink_tokens=scfg.sink_tokens, window_tokens=scfg.window_tokens)
+            sink_tokens=scfg.sink_tokens, window_tokens=scfg.window_tokens,
+            k_scale=base.kv_scales_of(view.arrays, "k"),
+            v_scale=base.kv_scales_of(view.arrays, "v"))
         base.record_fused("paged_hard_lsh", out.shape)
         return out.astype(q.dtype)
 
@@ -87,11 +89,16 @@ class HardLSHBackend(SocketBackend):
         scores = _hard_collision_scores(scfg, view.leaf("bits"), u_signs)
         scores = jnp.sum(scores, axis=2)                 # sum over group
         kq = sk.topk_budget(scfg, n)
+        vnorm = view.leaf("vnorm").astype(jnp.float32)
         idx, sel_mask = sk.value_aware_topk(
-            scfg, scores, view.leaf("vnorm").astype(jnp.float32), k=kq,
+            scfg, scores, vnorm, k=kq,
             length=length, n_total=n, budget=budget)
-        k_sel = view.gather_rows("k", idx)
-        v_sel = view.gather_rows("v", idx)
+        if bprobe.capturing():
+            bprobe.emit(bprobe.selection_stats(
+                scfg, q, base.dequant_leaf(cfg, view, "k"), vnorm,
+                idx, sel_mask, length=length, budget=budget,
+                static_k=kq, scale=scale))
+        k_sel, v_sel = base.gather_kv_rows(cfg, view, idx)
         return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
                                      scale=scale)
 

@@ -1,0 +1,120 @@
+"""K/V pool-page quantization helpers (int8 / fp8 storage).
+
+SOCKET's selection never reads the full-precision K/V rows — scoring
+runs on packed hash bits + value norms — so the pool's K/V leaves can be
+stored quantized and dequantized only at the attend rescan.  This module
+is the single home of the quantization scheme every producer/consumer
+shares:
+
+* **Resolution** — ``cfg.serving.kv_dtype`` names the storage mode
+  (``"auto"`` = the compute dtype, today's behavior; ``"bf16"`` = plain
+  bfloat16 cast, no scales; ``"int8"`` / ``"fp8"`` = quantized rows with
+  per-row scales).  ``cfg.cache_plan()`` resolves it per layer kind:
+  paged and ring K/V quantize, per-slot Mamba state never does.
+* **Scheme** — symmetric per-row absmax: one float32 scale per (token
+  row, KV head), ``scale = absmax / QMAX`` (127 for int8, 448 for
+  fp8 e4m3fn), stored in a ``k_scale``/``v_scale`` leaf alongside K/V
+  exactly the way the SOCKET bit/vnorm side-cache rides along.  Per-row
+  (not per-page) scales keep every write path local: a mid-page chunk
+  commit, a single-token append and a CoW clone all touch only their own
+  rows — no cross-row state, no extra HBM round-trip.
+* **Round trip** — ``quantize`` is the one producer transform (jitted
+  into whatever step calls it); ``dequantize`` the one consumer
+  transform.  The fused Pallas kernels inline the same multiply
+  in-register (see ``kernels/paged_attention``); the jnp form here
+  serves the unfused O(top_k) gather path and the ref oracles, so both
+  regimes see bit-identical dequantized values.
+
+Zero rows are exact: ``absmax == 0`` stores ``scale = 0`` and quantized
+zeros, so the dequantized row is exactly zero (the pool's init fill
+round-trips bit-exactly — the CoW scrub and trash-page invariants don't
+care about the storage dtype).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["KV_DTYPES", "QUANTIZED_KV_DTYPES", "is_quantized",
+           "storage_dtype", "scale_dtype", "quantize", "dequantize",
+           "resolve_kv_dtype"]
+
+# serving.kv_dtype vocabulary (validated config-time in ModelConfig)
+KV_DTYPES = ("auto", "bf16", "int8", "fp8")
+QUANTIZED_KV_DTYPES = ("int8", "fp8")
+
+# symmetric quantization grid ceilings
+_QMAX = {"int8": 127.0, "fp8": 448.0}     # fp8 = float8_e4m3fn max normal
+
+SCALE_DTYPE = jnp.float32
+
+
+def is_quantized(kv_dtype: str) -> bool:
+    """True when ``kv_dtype`` stores scaled integer/fp8 rows (and the
+    cache therefore carries ``k_scale``/``v_scale`` leaves)."""
+    return kv_dtype in QUANTIZED_KV_DTYPES
+
+
+def storage_dtype(kv_dtype: str, compute_dtype):
+    """The K/V leaf storage dtype for one resolved ``kv_dtype``."""
+    if kv_dtype == "auto":
+        return jnp.dtype(compute_dtype)
+    if kv_dtype == "bf16":
+        return jnp.dtype(jnp.bfloat16)
+    if kv_dtype == "int8":
+        return jnp.dtype(jnp.int8)
+    if kv_dtype == "fp8":
+        return jnp.dtype(jnp.float8_e4m3fn)
+    raise ValueError(
+        f"unknown kv_dtype {kv_dtype!r}; expected one of {KV_DTYPES}")
+
+
+def scale_dtype():
+    """Per-row scale leaf dtype (full precision: scales are metadata,
+    like the SOCKET vnorm side-cache, never quantized)."""
+    return jnp.dtype(SCALE_DTYPE)
+
+
+def resolve_kv_dtype(kv_dtype: str, kind: str) -> str:
+    """Resolve the serving-level knob for one cache-plan layer kind:
+    paged and ring K/V follow the knob, per-slot state rows never
+    quantize (they are O(1) per request and hold recurrent state whose
+    error would compound)."""
+    if kv_dtype not in KV_DTYPES:
+        raise ValueError(
+            f"unknown serving.kv_dtype {kv_dtype!r}; expected one of "
+            f"{KV_DTYPES}")
+    if kind == "state":
+        return "auto"
+    return kv_dtype
+
+
+def quantize(x: jax.Array, kv_dtype: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``(..., hd)`` rows symmetrically per row.
+
+    Returns ``(q, scale)`` with ``q`` shaped like ``x`` in the storage
+    dtype and ``scale`` ``(...,)`` float32 such that
+    ``dequantize(q, scale) ~= x``.  Zero rows round-trip exactly.
+    """
+    qmax = _QMAX[kv_dtype]
+    xf = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = absmax / qmax
+    safe = jnp.where(scale > 0, scale, 1.0)[..., None]
+    scaled = xf / safe
+    if kv_dtype == "int8":
+        q = jnp.clip(jnp.round(scaled), -qmax, qmax).astype(jnp.int8)
+    else:
+        q = scaled.astype(jnp.float8_e4m3fn)
+    return q, scale.astype(SCALE_DTYPE)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Inverse of :func:`quantize`: ``(..., hd) x (...,) -> (..., hd)``
+    float32 rows.  The one dequant expression both the XLA gather path
+    and the ref oracles use (the Pallas kernels inline the identical
+    multiply in-register)."""
+    return q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)

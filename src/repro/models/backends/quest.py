@@ -18,6 +18,7 @@ import numpy as np
 
 from repro.baselines import quest as quest_mod
 from repro.models.backends import base
+from repro.models.backends import probe as bprobe
 from repro.models.backends.base import KVView, LeafSpec
 
 __all__ = ["QuestBackend"]
@@ -53,14 +54,19 @@ class QuestBackend(base.DecodeBackend):
     # ---- ops ------------------------------------------------------------
     def prefill_build(self, cfg, params, cache, kc, vc):
         del params
-        cache = base.write_prefill_kv(cache, kc, vc)
+        cache = base.write_prefill_kv(cfg, cache, kc, vc)
+        # page stats from the keys the attend phase will actually read
+        # back (the quantization round trip under int8/fp8 storage), so
+        # the min/max bounds stay sound — cfg.quest.stats_from_quantized,
+        # enforced by ModelConfig.validate()
+        keff = base.effective_keys(cfg, kc)
         b, kvh, t, hd = kc.shape
         ps = cfg.quest.page_size
         n_pages_t = -(-t // ps)
         pad = n_pages_t * ps - t
-        kpad_min = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+        kpad_min = jnp.pad(keff, ((0, 0), (0, 0), (0, pad), (0, 0)),
                            constant_values=np.inf)
-        kpad_max = jnp.pad(kc, ((0, 0), (0, 0), (0, pad), (0, 0)),
+        kpad_max = jnp.pad(keff, ((0, 0), (0, 0), (0, pad), (0, 0)),
                            constant_values=-np.inf)
         kmin = kpad_min.reshape(b, kvh, n_pages_t, ps, hd).min(axis=3)
         kmax = kpad_max.reshape(b, kvh, n_pages_t, ps, hd).max(axis=3)
@@ -72,9 +78,10 @@ class QuestBackend(base.DecodeBackend):
 
     def append(self, cfg, params, view: KVView, kc, vc, pos):
         del params
-        view.write_token("k", pos, kc[:, :, 0])
-        view.write_token("v", pos, vc[:, :, 0])
-        knew = kc[:, :, 0]                               # (B, KVH, hd)
+        base.write_token_kv(cfg, view, pos, kc[:, :, 0], vc[:, :, 0])
+        # stats merge the key the attend phase will read back (the
+        # quantization round trip under int8/fp8 storage)
+        knew = base.effective_keys(cfg, kc)[:, :, 0]     # (B, KVH, hd)
         # A token opening a fresh page must *reset* the stats, not merge:
         # in the serving pool a decode-growth block may be a reused page
         # still carrying the previous owner's min/max (BlockPool never
@@ -109,12 +116,17 @@ class QuestBackend(base.DecodeBackend):
             q, view.arrays["k"], view.arrays["v"], view.arrays["kmin"],
             view.arrays["kmax"], view.block_table, length=length,
             page_budget=kp, page_size=qcfg.page_size, scale=scale,
-            sink_tokens=qcfg.sink_tokens, window_tokens=qcfg.window_tokens)
+            sink_tokens=qcfg.sink_tokens, window_tokens=qcfg.window_tokens,
+            k_scale=base.kv_scales_of(view.arrays, "k"),
+            v_scale=base.kv_scales_of(view.arrays, "v"))
         base.record_fused("paged_quest", out.shape)
         return out.astype(q.dtype)
 
     def attend(self, cfg, params, q, view: KVView, *, length, scale):
-        if cfg.quest.use_paged_kernel and isinstance(view, base.PagedView):
+        # probe shadow steps keep the unfused route (the fused page
+        # selection is pinned bitwise to select_tokens by the harness)
+        if cfg.quest.use_paged_kernel and isinstance(view, base.PagedView) \
+                and not bprobe.capturing():
             return self._attend_fused(cfg, params, q, view, length=length,
                                       scale=scale)
         del params
@@ -123,8 +135,15 @@ class QuestBackend(base.DecodeBackend):
                                      kmax=view.leaf("kmax"))
         idx, sel_mask = quest_mod.select_tokens(
             qcfg, state, q, length=length, n=view.n_tokens)
-        k_sel = view.gather_rows("k", idx)
-        v_sel = view.gather_rows("v", idx)
+        if bprobe.capturing():
+            # QuestConfig carries the sink/window fields selection_stats
+            # reads; budget is page-granular and folded into sel_mask, so
+            # the reported budget is the static selection width
+            bprobe.emit(bprobe.selection_stats(
+                qcfg, q, base.dequant_leaf(cfg, view, "k"), None,
+                idx, sel_mask, length=length, budget=None,
+                static_k=idx.shape[-1], scale=scale))
+        k_sel, v_sel = base.gather_kv_rows(cfg, view, idx)
         return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
                                      scale=scale)
 

@@ -67,7 +67,7 @@ class SocketBackend(base.DecodeBackend):
     # ---- ops ------------------------------------------------------------
     def prefill_build(self, cfg, params, cache, kc, vc):
         t = kc.shape[2]
-        cache = base.write_prefill_kv(cache, kc, vc)
+        cache = base.write_prefill_kv(cfg, cache, kc, vc)
         scfg = socket_config_of(cfg)
         side = sk.precompute_key_hashes(
             scfg, jax.lax.stop_gradient(params["hash_w"]), kc, vc)
@@ -77,8 +77,9 @@ class SocketBackend(base.DecodeBackend):
         return cache
 
     def append(self, cfg, params, view: KVView, kc, vc, pos):
-        view.write_token("k", pos, kc[:, :, 0])
-        view.write_token("v", pos, vc[:, :, 0])
+        base.write_token_kv(cfg, view, pos, kc[:, :, 0], vc[:, :, 0])
+        # side-cache from the ORIGINAL full-precision K/V: selection is
+        # untouched by K/V quantization by construction
         scfg = socket_config_of(cfg)
         side = sk.precompute_key_hashes(scfg, params["hash_w"], kc, vc)
         view.write_token("bits", pos, side.bits[:, :, 0])
@@ -113,10 +114,8 @@ class SocketBackend(base.DecodeBackend):
                 raise NotImplementedError(
                     "the Pallas scoring kernel group-sums scores (kvhead "
                     "selection); use the XLA path for per-q-head selection")
-            if scfg.bits_storage != "packed":
-                raise NotImplementedError(
-                    "the Pallas scoring kernel unpacks uint32 words; "
-                    "bits_storage='int8' must use the XLA path")
+            # bits_storage='int8' streams the ±1 plane bytes directly (the
+            # kernel skips the unpack; format inferred from the dtype)
             from repro.kernels.socket_score import ops as score_ops
             # kernel wants (B,KVH,G,L,P); pooled hashes once per KV head
             u_k = u[:, :, None] if scfg.selection == "pooled" else u
@@ -160,7 +159,9 @@ class SocketBackend(base.DecodeBackend):
             view.arrays["vnorm"], u, view.block_table, length=length,
             budget=budget, num_tables=scfg.num_tables,
             num_planes=scfg.num_planes, tau=scfg.tau, scale=scale,
-            sink_tokens=scfg.sink_tokens, window_tokens=scfg.window_tokens)
+            sink_tokens=scfg.sink_tokens, window_tokens=scfg.window_tokens,
+            k_scale=base.kv_scales_of(view.arrays, "k"),
+            v_scale=base.kv_scales_of(view.arrays, "v"))
         base.record_fused("paged_attention", out.shape)
         return out.astype(q.dtype)
 
@@ -210,7 +211,8 @@ class SocketBackend(base.DecodeBackend):
             cache = view.arrays
             return context_parallel_socket_attend(
                 scfg, mesh, cfg.decode_cp_axes, params["hash_w"], q,
-                cache["k"], cache["v"], cache["bits"],
+                base.dequant_leaf(cfg, view, "k"),
+                base.dequant_leaf(cfg, view, "v"), cache["bits"],
                 cache["vnorm"].astype(jnp.float32),
                 length=length, scale=scale,
                 batch_axes=cfg.decode_cp_batch_axes)
@@ -223,12 +225,14 @@ class SocketBackend(base.DecodeBackend):
                 scfg, scores, vnorm, k=kq, length=length, n_total=n,
                 budget=budget)
             if bprobe.capturing():
+                # probe reference reads the DEQUANTIZED cached keys — the
+                # same values the attend phase sees, so recall measures
+                # selection quality at the serving precision
                 bprobe.emit(bprobe.selection_stats(
-                    scfg, q, view.leaf("k"), vnorm, idx, sel_mask,
-                    length=length, budget=budget, static_k=kq,
-                    scale=scale))
-            k_sel = view.gather_rows("k", idx)
-            v_sel = view.gather_rows("v", idx)
+                    scfg, q, base.dequant_leaf(cfg, view, "k"), vnorm,
+                    idx, sel_mask, length=length, budget=budget,
+                    static_k=kq, scale=scale))
+            k_sel, v_sel = base.gather_kv_rows(cfg, view, idx)
             return base.subset_attention(cfg, q, k_sel, v_sel, sel_mask,
                                          scale=scale)
         # per-q-head selection: fold G into the selection axis, gather per
@@ -237,8 +241,7 @@ class SocketBackend(base.DecodeBackend):
         idx, sel_mask = sk.value_aware_topk(
             scfg, scores, vnorm[:, :, None], k=kq, length=length,
             n_total=n, budget=budget)
-        k_sel = view.gather_rows("k", idx)          # (B,KVH,G,K,hd)
-        v_sel = view.gather_rows("v", idx)
+        k_sel, v_sel = base.gather_kv_rows(cfg, view, idx)  # (B,KVH,G,K,hd)
         logits = jnp.einsum("bhgtd,bhgkd->bhgtk", q.astype(jnp.float32),
                             k_sel.astype(jnp.float32)) * scale
         logits = jnp.where(sel_mask[:, :, :, None, :], logits, sk.NEG_INF)

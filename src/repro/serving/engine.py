@@ -203,10 +203,11 @@ class ContinuousBatchingEngine:
         self._bind_instruments(self.registry)
         self._probe_fn = None
         self._compile_seen: set = set()
-        self._probe_capable = (cfg.attention_backend == "socket"
-                               and cfg.socket.selection in ("kvhead",
-                                                            "pooled")
-                               and has_paged)
+        self._probe_capable = (
+            (cfg.attention_backend in ("hard_lsh", "quest")
+             or (cfg.attention_backend == "socket"
+                 and cfg.socket.selection in ("kvhead", "pooled")))
+            and has_paged)
         if obs is not None:
             counts = paged.cache_kind_counts(cfg)
             obs.tracer.ensure_start(
@@ -778,9 +779,9 @@ class ContinuousBatchingEngine:
                    runnable: List[Request]) -> None:
         """Sampled selection-quality probe: re-run the current decode
         batch through a shadow step traced with the capture flag up
-        (:mod:`repro.models.backends.probe`), so every socket layer
-        ships per-request recall / budget-utilization / forced-share
-        stats to the host — then reduce over the active slots and emit
+        (:mod:`repro.models.backends.probe`), so every sparse layer
+        (socket / hard_lsh / quest) ships per-request recall /
+        budget-utilization / forced-share stats to the host — then reduce over the active slots and emit
         one ``probe`` event per layer.  The shadow step is jitted
         WITHOUT donation (the production step still needs these pages)
         and its outputs are discarded; the production decode fn contains

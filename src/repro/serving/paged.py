@@ -52,7 +52,8 @@ from repro.models import transformer as tfm
 
 __all__ = ["init_paged_caches", "gather_views", "scatter_token",
            "write_prefill", "keep_state_rows", "clone_block",
-           "gather_footprint", "cache_kind_counts"]
+           "gather_footprint", "cache_kind_counts", "kv_row_bytes",
+           "pool_block_bytes"]
 
 
 def init_paged_caches(cfg: ModelConfig, serving: ServingSettings):
@@ -183,6 +184,48 @@ def clone_block(cfg: ModelConfig, pages, src, dst, keep_tokens):
 
 # -------------------------------------------------------------- accounting
 
+def _leaf_row_bytes(s, cdt) -> float:
+    """Bytes one *token* of leaf ``s`` occupies (suffix width x storage
+    itemsize, amortized over the leaf's sequence granularity)."""
+    width = int(np.prod(s.suffix, dtype=np.int64)) if s.suffix else 1
+    return width * jnp.dtype(s.leaf_dtype(cdt)).itemsize / s.granularity
+
+
+def kv_row_bytes(cfg: ModelConfig, names=("k", "v", "k_scale",
+                                          "v_scale")) -> int:
+    """Per-token K/V storage bytes across one KV head set — dtype-sized
+    quantized payload plus the full-precision per-row scale leaves when
+    the plan stores int8/fp8 pages."""
+    spec = bk.kv_leaf_specs(cfg)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    return int(cfg.num_kv_heads * sum(
+        _leaf_row_bytes(spec[nm], cdt) for nm in names if nm in spec))
+
+
+def pool_block_bytes(cfg: ModelConfig) -> Dict[str, int]:
+    """Bytes one physical pool block occupies, per layer **kind** and in
+    total per block id (a block id addresses the same page in every
+    paged/ring layer).  Sums every leaf of the resolved cache spec at its
+    own storage dtype — int8/fp8 K/V pages, f32 scale rows, uint32 hash
+    words, page-granular stats — so pool capacity math (bench residency,
+    bytes/token reporting) tracks ``cfg.serving.kv_dtype``."""
+    sv = cfg.serving
+    cdt = jnp.dtype(cfg.compute_dtype)
+    counts = cache_kind_counts(cfg)
+    out = {"paged": 0, "ring": 0}
+    for spec_l in cfg.layer_specs:
+        plan = cfg.plan_for(spec_l)
+        if plan.kind == "state":
+            continue
+        leaves = bk.layer_cache_spec(cfg, spec_l).leaves
+        out[plan.kind] += int(cfg.num_kv_heads * sv.block_size * sum(
+            _leaf_row_bytes(s, cdt) for s in leaves.values()))
+    out["per_block_id"] = out["paged"] + out["ring"]
+    out["num_paged_layers"] = counts["paged"]
+    out["num_ring_layers"] = counts["ring"]
+    return out
+
+
 def cache_kind_counts(cfg: ModelConfig) -> Dict[str, int]:
     """Layer count per cache kind (``paged``/``ring``/``state``) under
     the per-layer plan — shared by the footprint model below and the
@@ -228,10 +271,15 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
                 s.leaf_dtype(cdt)).itemsize
 
         full_l = sum(leaf_bytes(s) for s in spec.values())
-        kv_bytes = leaf_bytes(spec["k"]) + leaf_bytes(spec["v"])
+        # K/V storage leaves (quantized payload + its scale rows) are the
+        # gather-on-demand set; metadata leaves stream in full
+        kv_names = [nm for nm in ("k", "v", "k_scale", "v_scale")
+                    if nm in spec]
+        kv_bytes = sum(leaf_bytes(spec[nm]) for nm in kv_names)
         selected = backend.selected_rows(cfg, n)
-        paged_l = (full_l - kv_bytes) + 2 * b * kvh * selected * \
-            cfg.head_dim * cdt.itemsize
+        row_b = kvh * sum(_leaf_row_bytes(spec[nm], cdt)
+                          for nm in kv_names)
+        paged_l = (full_l - kv_bytes) + int(b * selected * row_b)
         fused = backend.supports_paged and backend.fused_paged(cfg)
         if fused:
             paged_l = 0
@@ -242,8 +290,9 @@ def gather_footprint(cfg: ModelConfig) -> Dict[str, int]:
     ring_fused = False
     if counts["ring"]:
         ring_rows = cfg.ring_geometry()[1]
-        ring_l = 2 * b * kvh * ring_rows * cfg.head_dim * cdt.itemsize
-        full_l = 2 * b * kvh * n * cfg.head_dim * cdt.itemsize
+        row_b = kv_row_bytes(cfg)       # dtype-sized K/V + scale rows
+        ring_l = b * ring_rows * row_b
+        full_l = b * n * row_b
         ring_fused = bool(cfg.use_ring_kernel)
         # the fused ring pass streams the circular page list in-kernel:
         # no XLA gather materializes the bounded window view

@@ -137,17 +137,29 @@ def test_socket_kernel_plumbing_matches_xla_path(selection):
                                    atol=2e-5)
 
 
-def test_socket_kernel_rejects_int8_bits():
-    """The scoring kernel unpacks uint32 words — int8 sign storage must
-    fail fast rather than score garbage."""
+def test_socket_kernel_scores_int8_bits():
+    """The scoring kernel now handles int8 ±1 sign storage (the
+    uint32-word assumption was the only blocker): kernel-scored attend
+    must match the plain-XLA scoring path on the same int8 cache."""
     cfg, be, params, _, _, q = _setup("socket")
     cfg8 = cfg.replace(socket=dataclasses.replace(
-        cfg.socket, bits_storage="int8", use_score_kernel=True))
+        cfg.socket, bits_storage="int8"))
     be8 = bk.get_backend("socket")
-    cache = be8.init_cache(cfg8, 2, params["wk"].shape[1], 32, jnp.float32)
+    rng = np.random.default_rng(3)
+    kv, hd = params["wk"].shape[1], cfg.head_dim
+    keys = jnp.asarray(rng.normal(size=(2, kv, 32, hd)), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=(2, kv, 32, hd)), jnp.float32)
+    cache = be8.init_cache(cfg8, 2, kv, 32, jnp.float32)
+    cache = be8.prefill_build(cfg8, params, cache, keys, vals)
     view = bk.ContiguousView(cache, be8.cache_spec(cfg8))
-    with pytest.raises(NotImplementedError, match="int8"):
-        be8.attend(cfg8, params, q, view, length=jnp.int32(16), scale=0.125)
+    outs = {}
+    for use_kernel in (False, True):
+        ck = cfg8.replace(socket=dataclasses.replace(
+            cfg8.socket, use_score_kernel=use_kernel))
+        outs[use_kernel] = be8.attend(ck, params, q, view,
+                                      length=jnp.int32(16), scale=0.125)
+    np.testing.assert_allclose(np.asarray(outs[True]),
+                               np.asarray(outs[False]), atol=2e-5)
 
 
 def test_quest_append_resets_stats_on_reused_page():

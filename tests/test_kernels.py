@@ -44,12 +44,19 @@ def _build_socket_score(case):
     p, l, n, g, bh, d, block_n, weighted = (
         case.kwargs[k] for k in
         ("p", "l", "n", "g", "bh", "d", "block_n", "weighted"))
+    bits_fmt = case.kwargs.get("bits_fmt", "packed")
     rng = jax.random.PRNGKey(p * l + n + block_n)
     kk, kq, kw, kv = jax.random.split(rng, 4)
     w = hashing.make_hash_params(kw, d, p, l)
     keys = jax.random.normal(kk, (bh, n, d))
     q = jax.random.normal(kq, (bh, g, d))
-    bits = hashing.pack_signs(hashing.hash_keys_signs(w, keys))
+    signs = hashing.hash_keys_signs(w, keys)
+    if bits_fmt == "int8":
+        # bits_storage="int8": ±1 plane bytes (BH, N, L*P) — the kernel
+        # skips the unpack and the padding tables entirely
+        bits = (signs.astype(jnp.int8) * 2 - 1).reshape(bh, n, l * p)
+    else:
+        bits = hashing.pack_signs(signs)
     u = socket.soft_hash_query(w, q)
     vnorm = (jax.random.uniform(kv, (bh, n)) + 0.5) if weighted else None
     out = socket_score(bits, u, vnorm, num_tables=l, num_planes=p, tau=0.4,
@@ -89,8 +96,16 @@ def _build_flash_prefill(case):
 
 
 def _paged_fixture(seed, b, kvh, g, gs, nb, bs, hd, p, l, sink, window,
-                   lengths, dtype=jnp.float32, dup=False, tau=0.4):
-    """Paged-pool inputs with shuffled physical blocks (block 0 = trash)."""
+                   lengths, dtype=jnp.float32, dup=False, tau=0.4,
+                   kv_dtype=None):
+    """Paged-pool inputs with shuffled physical blocks (block 0 = trash).
+
+    ``kv_dtype`` "int8"/"fp8" stores the K/V pages quantized with
+    per-row absmax scale pools riding along (passed to kernel and
+    oracle as ``k_scale``/``v_scale`` — both dequantize the same
+    values, so selection stays bitwise)."""
+    from repro.models.backends import kvquant
+
     rng = np.random.default_rng(seed)
     n, d = nb * bs, 32
     w = hashing.make_hash_params(jax.random.PRNGKey(seed), d, p, l)
@@ -126,6 +141,10 @@ def _paged_fixture(seed, b, kvh, g, gs, nb, bs, hd, p, l, sink, window,
     kw = dict(length=length, budget=budget, num_tables=l, num_planes=p,
               tau=tau, scale=1 / np.sqrt(hd), sink_tokens=sink,
               window_tokens=window)
+    if kv_dtype is not None:
+        kc, ks = kvquant.quantize(kc, kv_dtype)
+        vc, vs = kvquant.quantize(vc, kv_dtype)
+        kw.update(k_scale=pageify(ks), v_scale=pageify(vs))
     return (q, pageify(kc), pageify(vc), pageify(bits), pageify(vnorm), u,
             jnp.asarray(bt)), kw, kq
 
@@ -152,10 +171,17 @@ def _build_paged_hard_lsh(case):
 
 
 def _quest_fixture(seed, b, kvh, g, nb, bs, hd, ps, sink, window, lengths,
-                   sparsity=4.0, min_pages=2, dtype=jnp.float32, dup=False):
+                   sparsity=4.0, min_pages=2, dtype=jnp.float32, dup=False,
+                   kv_dtype=None):
     """Paged K/V pool plus per-page kmin/kmax stat pools (ppb = bs / ps
-    stat rows per physical block), shuffled block table, ragged lengths."""
+    stat rows per physical block), shuffled block table, ragged lengths.
+
+    ``kv_dtype`` "int8"/"fp8" quantizes the K/V pages (per-row scales
+    ride along) and — matching ``quest.stats_from_quantized`` — computes
+    the kmin/kmax stats from the quantized *round trip*, so the page
+    bounds stay sound for the keys the attend phase dequantizes."""
     from repro.baselines import quest as quest_mod
+    from repro.models.backends import kvquant
 
     rng = np.random.default_rng(seed)
     n = nb * bs
@@ -167,10 +193,19 @@ def _quest_fixture(seed, b, kvh, g, nb, bs, hd, ps, sink, window, lengths,
         kc = pages.reshape(b, kvh, n, hd)
     vc = rng.normal(size=(b, kvh, n, hd)).astype(np.float32)
     q = jnp.asarray(rng.normal(size=(b, kvh, g, hd)), jnp.float32)
-    # page stats stay f32 even for bf16 K/V (selection is compared
-    # bitwise; only the attention math runs in the case dtype)
-    kmin = kc.reshape(b, kvh, n // ps, ps, hd).min(axis=3)
-    kmax = kc.reshape(b, kvh, n // ps, ps, hd).max(axis=3)
+    if kv_dtype is not None:
+        kq_pages, ks = kvquant.quantize(jnp.asarray(kc), kv_dtype)
+        vq_pages, vs = kvquant.quantize(jnp.asarray(vc), kv_dtype)
+        stats_src = np.asarray(kvquant.dequantize(kq_pages, ks))
+        k_store, v_store = kq_pages, vq_pages
+    else:
+        stats_src = kc
+        k_store = jnp.asarray(kc, dtype)
+        v_store = jnp.asarray(vc, dtype)
+    # page stats stay f32 even for bf16/quantized K/V (selection is
+    # compared bitwise; only the attention math runs in the case dtype)
+    kmin = stats_src.reshape(b, kvh, n // ps, ps, hd).min(axis=3)
+    kmax = stats_src.reshape(b, kvh, n // ps, ps, hd).max(axis=3)
 
     bt = 1 + rng.permutation(b * nb).reshape(b, nb).astype(np.int32)
 
@@ -188,8 +223,7 @@ def _quest_fixture(seed, b, kvh, g, nb, bs, hd, ps, sink, window, lengths,
     kp = quest_mod.page_budget(qcfg, n // ps, n)
     length = jnp.asarray(lengths, jnp.int32)
     scale = 1 / np.sqrt(hd)
-    args = (q, pageify(jnp.asarray(kc, dtype), bs),
-            pageify(jnp.asarray(vc, dtype), bs),
+    args = (q, pageify(k_store, bs), pageify(v_store, bs),
             pageify(kmin, bs // ps), pageify(kmax, bs // ps),
             jnp.asarray(bt))
     op_kw = dict(length=length, page_budget=kp, page_size=ps, scale=scale,
@@ -197,6 +231,10 @@ def _quest_fixture(seed, b, kvh, g, nb, bs, hd, ps, sink, window, lengths,
     ref_kw = dict(length=length, page_size=ps, sparsity=sparsity,
                   min_pages=min_pages, scale=scale, sink_tokens=sink,
                   window_tokens=window)
+    if kv_dtype is not None:
+        scales = dict(k_scale=pageify(ks, bs), v_scale=pageify(vs, bs))
+        op_kw.update(scales)
+        ref_kw.update(scales)
     return args, op_kw, ref_kw
 
 
@@ -208,11 +246,14 @@ def _build_paged_quest(case):
 
 
 def _ring_fixture(seed, b, kvh, g, rb, bs, hd, window, pos, softcap=0.0,
-                  dtype=jnp.float32):
+                  dtype=jnp.float32, kv_dtype=None):
     """Circular sliding-window pool: ``rb`` ring blocks per request with
     a shuffled ring slice of the block table and per-request positions
     (both sides read the same pool, so slots outside the window may hold
-    arbitrary rows)."""
+    arbitrary rows).  ``kv_dtype`` "int8"/"fp8" quantizes the ring pages
+    with per-row scale pools alongside."""
+    from repro.models.backends import kvquant
+
     rng = np.random.default_rng(seed)
     pool_k = jnp.asarray(rng.normal(size=(1 + b * rb, kvh, bs, hd)), dtype)
     pool_v = jnp.asarray(rng.normal(size=(1 + b * rb, kvh, bs, hd)), dtype)
@@ -220,6 +261,10 @@ def _ring_fixture(seed, b, kvh, g, rb, bs, hd, window, pos, softcap=0.0,
     bt = jnp.asarray(1 + rng.permutation(b * rb).reshape(b, rb), jnp.int32)
     kw = dict(pos=jnp.asarray(pos, jnp.int32), window=window,
               softcap=softcap, scale=1 / np.sqrt(hd))
+    if kv_dtype is not None:
+        pool_k, ks = kvquant.quantize(pool_k, kv_dtype)
+        pool_v, vs = kvquant.quantize(pool_v, kv_dtype)
+        kw.update(k_scale=ks, v_scale=vs)
     return (q, pool_k, pool_v, bt), kw
 
 
@@ -286,6 +331,14 @@ KERNEL_OPS = (
             _score_case("block-256", 10, 60, 1024, 2, 1, d=32,
                         block_n=256, weighted=False),
             _score_case("ragged-n", 10, 60, 384, 2, 1, block_n=512),
+            # bits_storage="int8": the kernel streams ±1 plane bytes
+            # (no unpack, no padding tables) — same scores as packed
+            _c("int8-bits-paper-point", p=10, l=60, n=1024, g=4, bh=2,
+               d=64, block_n=512, weighted=True, bits_fmt="int8"),
+            _c("int8-bits-unaligned-tables", p=10, l=37, n=512, g=2,
+               bh=2, d=64, block_n=512, weighted=True, bits_fmt="int8"),
+            _c("int8-bits-block-128", p=6, l=12, n=256, g=2, bh=3,
+               d=64, block_n=128, weighted=False, bits_fmt="int8"),
         ),
     ),
     KernelOp(
@@ -340,6 +393,14 @@ KERNEL_OPS = (
                      lengths=(32, 9)),
             _pa_case("budget-floor", seed=6, sink=8, window=8,
                      lengths=(7, 3)),
+            # quantized pool pages: per-row scales dequantized in-kernel;
+            # selection stays bitwise (scoring never reads K/V)
+            _pa_case("int8-ragged", seed=7, kv_dtype="int8"),
+            _pa_case("fp8-ragged", seed=7, kv_dtype="fp8"),
+            _pa_case("int8-ties-unaligned-tail", seed=8, b=3,
+                     lengths=(1, 17, 30), dup=True, kv_dtype="int8"),
+            _pa_case("fp8-unaligned-tables", seed=9, p=10, l=37,
+                     lengths=(30, 31), kv_dtype="fp8"),
         ),
     ),
     KernelOp(
@@ -362,6 +423,9 @@ KERNEL_OPS = (
                      lengths=(32, 9)),
             _pa_case("budget-floor", seed=6, sink=8, window=8,
                      lengths=(7, 3)),
+            _pa_case("int8-collision-ties", seed=7, b=3,
+                     lengths=(1, 17, 30), dup=True, kv_dtype="int8"),
+            _pa_case("fp8-ragged", seed=8, kv_dtype="fp8"),
         ),
     ),
     KernelOp(
@@ -379,6 +443,12 @@ KERNEL_OPS = (
                      lengths=(32, 9)),
             _qu_case("budget-floor", seed=6, sink=8, window=8,
                      lengths=(7, 3)),
+            # quantized pages + stats from the quantized round trip
+            # (quest.stats_from_quantized): selection stays bitwise
+            # because kernel and oracle rank the same sound bounds
+            _qu_case("int8-ragged", seed=7, kv_dtype="int8"),
+            _qu_case("fp8-page-ties-tail", seed=8, b=3,
+                     lengths=(9, 17, 30), dup=True, kv_dtype="fp8"),
         ),
     ),
     KernelOp(
@@ -394,6 +464,9 @@ KERNEL_OPS = (
                        pos=(31, 64)),
             _ring_case("single-block-ring", seed=5, rb=1, window=8,
                        pos=(3, 50)),
+            _ring_case("int8-wrap-mix", seed=6, kv_dtype="int8"),
+            _ring_case("fp8-softcap-tail", seed=7, softcap=20.0,
+                       pos=(23, 11), kv_dtype="fp8"),
         ),
     ),
 )

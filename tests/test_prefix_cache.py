@@ -365,6 +365,70 @@ def test_poisoned_pool_shared_prefix_parity():
     assert warm[0].generated == cold[0].generated
 
 
+@pytest.mark.parametrize("kv_dtype", ["int8", "fp8"])
+def test_poisoned_pool_cow_scrub_parity_quantized(kv_dtype):
+    """Same scrub-on-clone contract under quantized pool pages: the CoW
+    clone must copy/scrub the K/V leaves *and* their per-row scale
+    leaves (a stale scale re-scales poisoned quantized rows into the
+    logits just as surely as a stale key row would).  Warm-vs-cold
+    parity is quantized-vs-itself — exact within the storage mode."""
+    from repro.serving.engine import ContinuousBatchingEngine
+
+    cfg = _with_cache(_smoke("socket"), kv_dtype=kv_dtype)
+    if kv_dtype == "fp8":
+        # the fp8 dtype matrix requires the fused attend path
+        import dataclasses
+        cfg = cfg.replace(socket=dataclasses.replace(
+            cfg.socket, use_paged_kernel=True))
+    rng = np.random.default_rng(13)
+    first = rng.integers(0, cfg.vocab_size, size=21).tolist()
+    ext = first + rng.integers(0, cfg.vocab_size, size=11).tolist()
+    _, cold, _ = _run(_with_cache(cfg, False), [ext], steps=5)
+
+    eng = ContinuousBatchingEngine(cfg, rng=jax.random.PRNGKey(0))
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(eng.pages)[0]]
+    assert any("k_scale" in s for s in paths) and \
+        any("v_scale" in s for s in paths), \
+        "quantized plan must carry scale leaves"
+    # poison with a value finite in every leaf dtype: 1e4 saturates to
+    # NaN in float8_e4m3fn (no inf encoding), which would defeat the
+    # attention mask on never-written tail rows rather than exercise
+    # the scrub-on-clone contract
+    eng.pages = jax.tree_util.tree_map(
+        lambda lf: lf.at[1:].set(jnp.asarray(100.0).astype(lf.dtype)),
+        eng.pages)
+    eng, _, _ = _run(cfg, [first], steps=5, engine=eng)
+    eng, warm, _ = _run(cfg, [ext], steps=5, engine=eng)
+    assert eng.registry.value("prefix_cache_cow_total") >= 1
+    assert warm[0].generated == cold[0].generated
+
+
+@pytest.mark.parametrize("backend,kv_dtype", [
+    ("socket", "int8"), ("dense", "int8"), ("hard_lsh", "int8"),
+    ("quest", "int8"), ("socket", "fp8")])
+def test_hit_vs_cold_token_parity_quantized(backend, kv_dtype):
+    """Prefix warm hits under quantized pages: a cache-on serve must
+    reproduce the cache-off tokens of the *same* storage mode exactly —
+    sharing a quantized page shares its scale rows with it.  int8 runs
+    the unfused XLA dequant-gather paths; fp8 requires (and so covers)
+    the fused socket kernel."""
+    cfg = _smoke(backend)
+    if kv_dtype == "fp8":
+        import dataclasses
+        cfg = cfg.replace(socket=dataclasses.replace(
+            cfg.socket, use_paged_kernel=True))
+    cfg = cfg.replace(serving=cfg.serving.replace(kv_dtype=kv_dtype))
+    rng = np.random.default_rng(10)
+    prompts = _shared_prefix_prompts(rng, vocab=cfg.vocab_size)
+    _, cold, _ = _run(_with_cache(cfg, False), prompts, steps=6)
+    eng, warm, _ = _run(_with_cache(cfg, True), prompts, steps=6)
+    assert eng.prefix_cache is not None
+    assert eng.registry.value("prefix_cache_hits_total") >= 2
+    for w, c in zip(warm, cold):
+        assert w.state == FINISHED and w.generated == c.generated, backend
+
+
 # ------------------------------------------- engine: pressure + fallback
 
 
@@ -384,6 +448,25 @@ def test_preemption_with_shared_pages_token_exact():
     for h, c in zip(hot, calm):
         assert h.state == FINISHED and len(h.generated) == 20
         assert h.generated == c.generated
+
+
+def test_preemption_quantized_token_parity():
+    """Quantized-vs-itself parity under pool pressure: preempting and
+    re-prefilling a request re-quantizes the same prompt rows, so an
+    int8 pressured run must reproduce the calm int8 tokens exactly (a
+    preempt/resume that round-tripped rows through a second quantize
+    would drift here)."""
+    cfg = _with_cache(_smoke("socket"), kv_dtype="int8")
+    rng = np.random.default_rng(14)
+    prompts = _shared_prefix_prompts(rng, share=17, uniques=(7, 7),
+                                     vocab=cfg.vocab_size)
+    _, calm, mc = _run(_with_cache(cfg, False, num_blocks=48), prompts,
+                       steps=20)
+    eng, hot, mh = _run(_with_cache(cfg, True, num_blocks=10, max_batch=2),
+                        prompts, steps=20)
+    assert mh.preemptions > 0 and mc.preemptions == 0
+    for h, c in zip(hot, calm):
+        assert h.state == FINISHED and h.generated == c.generated
 
 
 def test_eviction_under_pressure_never_frees_live_sharers():
